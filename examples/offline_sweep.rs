@@ -1,0 +1,40 @@
+//! Offline sweep: a compact Fig.-5 slice from the public API — energy per
+//! user vs number of users for every policy, both DNNs.
+//!
+//! ```sh
+//! cargo run --release --example offline_sweep -- [draws]
+//! ```
+
+use batchedge::config::SystemConfig;
+use batchedge::experiments::offline::sweep_users;
+use batchedge::util::table::Table;
+
+fn main() {
+    batchedge::util::logging::init();
+    let draws: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20);
+    let m_list = [1usize, 3, 5, 8, 10, 12, 15];
+
+    for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+        let sweep = sweep_users(&cfg, &m_list, draws, 505);
+        let mut header: Vec<String> = vec!["policy".into()];
+        header.extend(m_list.iter().map(|m| format!("M={m}")));
+        let mut t = Table::new(&format!(
+            "{} — energy/user (J), W=1 MHz, {} draws (±95% CI in CSV)",
+            cfg.net.name, draws
+        ))
+        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+        for (si, name) in sweep.solver_names.iter().enumerate() {
+            t.row_f64(name, &sweep.energy[si], 4);
+        }
+        print!("{}", t.render());
+
+        let ip = sweep.solver_names.iter().position(|&n| n == "IP-SSA").unwrap();
+        let lc = sweep.solver_names.iter().position(|&n| n == "LC").unwrap();
+        let last = m_list.len() - 1;
+        println!(
+            "IP-SSA saves {:.1}% vs LC at M={}\n",
+            (1.0 - sweep.energy[ip][last] / sweep.energy[lc][last]) * 100.0,
+            m_list[last]
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart: draw an offline co-inference scenario, solve it with every
+//! policy, validate the IP-SSA plan against the paper's constraints, and
+//! print the batch schedule.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use batchedge::algo::{baselines, feasibility, ipssa};
+use batchedge::config::SystemConfig;
+use batchedge::scenario::Scenario;
+use batchedge::util::rng::Rng;
+use batchedge::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    batchedge::util::logging::init();
+
+    // 10 mobilenet-v2 users, paper Table-II defaults (W = 1 MHz, l = 50 ms,
+    // mobile-CPU energy efficiency).
+    let cfg = SystemConfig::mobilenet_default();
+    let mut rng = Rng::seed_from(2022);
+    let scenario = Scenario::draw(&cfg, 10, &mut rng);
+
+    println!("== all policies on one draw ==");
+    for solver in baselines::offline_suite() {
+        let r = solver.solve(&scenario);
+        feasibility::check(&r.scenario, &r.plan)
+            .map_err(|v| anyhow::anyhow!("{}: {v}", solver.name()))?;
+        println!(
+            "  {:<10} {:.4} J/user   ({} offloaders, {} batches)",
+            solver.name(),
+            r.plan.mean_energy(),
+            r.plan.offloader_count(),
+            r.plan.batches.len()
+        );
+    }
+
+    // Inspect the IP-SSA schedule: one aggregated batch per sub-task,
+    // chained back from the deadline (Theorem 1 / eq. 17).
+    let plan = ipssa::solve(&scenario);
+    let mut t = Table::new("IP-SSA batch schedule (Theorem 1.2)")
+        .header(&["sub-task", "start (ms)", "duration (ms)", "batch size"]);
+    for b in &plan.batches {
+        t.row(vec![
+            cfg.net.subtasks[b.sub - 1].name.clone(),
+            format!("{:.2}", b.start * 1e3),
+            format!("{:.2}", b.duration * 1e3),
+            format!("{}", b.size()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "total energy {:.3} J; worst-case batch assumption b = {}",
+        plan.total_energy(),
+        plan.assumed_batch
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Loads the real AOT artifacts (JAX/Pallas-lowered HLO) through PJRT,
+//! trains a DDPG-OG agent for the online MDP, then serves Bernoulli task
+//! arrivals for a stretch of slotted time with **real batched sub-task
+//! execution** for every scheduled plan — proving L3 (Rust coordinator),
+//! L2 (JAX sub-task models) and L1 (Pallas kernels) compose. Reports
+//! energy, latency percentiles, throughput, batch sizes and the real PJRT
+//! compute consumed. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_online
+//! ```
+
+use std::sync::Arc;
+
+use batchedge::config::SystemConfig;
+use batchedge::coordinator::Coordinator;
+use batchedge::rl::env::SchedulerAlg;
+use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, OnlinePolicy};
+use batchedge::rl::train::{train, TrainConfig};
+use batchedge::runtime::{default_artifacts_root, Runtime};
+use batchedge::scenario::{ArrivalKind, ArrivalProcess};
+use batchedge::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    batchedge::util::logging::init();
+    let m = 8;
+    let slots = 600; // 15 s of model time at T = 25 ms
+    let cfg = SystemConfig::mobilenet_default();
+    let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
+    let runtime = Arc::new(Runtime::open(&default_artifacts_root())?);
+
+    // --- Train the DDPG-OG agent (CPU-scaled schedule; see EXPERIMENTS.md).
+    let tc = TrainConfig { episodes: 15, slots_per_episode: 300, log_every: 5, ..Default::default() };
+    let mut rng = Rng::seed_from(42);
+    println!("training DDPG-OG ({} episodes x {} slots)...", tc.episodes, tc.slots_per_episode);
+    let (agent, curve) = train(&cfg, m, &arrivals, SchedulerAlg::Og, &tc, &mut rng);
+    println!(
+        "learning curve: first {:.4} -> last {:.4} J/user/slot",
+        curve.first().unwrap().energy_per_user_slot,
+        curve.last().unwrap().energy_per_user_slot
+    );
+
+    // --- Serve with real PJRT execution, DDPG-OG vs the TW=0 baseline.
+    for (name, policy) in [
+        ("DDPG-OG", Box::new(DdpgPolicy::new(agent, "DDPG-OG")) as Box<dyn OnlinePolicy>),
+        ("OG TW=0", Box::new(FixedTwPolicy::new(0)) as Box<dyn OnlinePolicy>),
+    ] {
+        let mut coord = Coordinator::new(
+            &cfg,
+            m,
+            arrivals.clone(),
+            SchedulerAlg::Og,
+            0.025,
+            policy,
+            Some(Arc::clone(&runtime)),
+            7,
+        )?;
+        let report = coord.run(slots)?;
+        println!("\n== {name} (real PJRT execution) ==");
+        println!("  {}", report.render());
+        println!(
+            "  throughput {:.2} tasks/s (model time) | scheduler calls {} | mean batch size {:.2} | offline alg {:.2} ms/call",
+            report.throughput(slots as f64 * 0.025),
+            coord.env.stats.calls,
+            coord.metrics.mean_batch_size(),
+            coord.env.stats.mean_latency_ms(),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Train the §IV-C DDPG agent and compare it against the online baselines
+//! on held-out episodes — a minimal Fig.-8 slice.
+//!
+//! ```sh
+//! cargo run --release --example train_ddpg
+//! ```
+
+use batchedge::config::SystemConfig;
+use batchedge::rl::env::{OnlineEnv, SchedulerAlg};
+use batchedge::rl::policy::{run_episode, DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
+use batchedge::rl::train::{train, TrainConfig};
+use batchedge::scenario::{ArrivalKind, ArrivalProcess};
+use batchedge::util::rng::Rng;
+
+fn main() {
+    batchedge::util::logging::init();
+    let m = 6;
+    let cfg = SystemConfig::dssd3_default();
+    let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
+
+    let tc = TrainConfig { episodes: 20, slots_per_episode: 300, log_every: 2, ..Default::default() };
+
+    let eval = |name: &str, alg: SchedulerAlg, policy: &mut dyn OnlinePolicy| {
+        let mut acc = 0.0;
+        let episodes = 4;
+        for ep in 0..episodes {
+            let mut rng = Rng::seed_from(900 + ep);
+            let mut env = OnlineEnv::new(&cfg, m, arrivals.clone(), alg, tc.slot_s, &mut rng);
+            acc += run_episode(&mut env, policy, 400, &mut rng);
+        }
+        println!("  {name:<14} {:.4} J/user/slot", acc / episodes as f64);
+    };
+
+    println!("== training DDPG-OG and DDPG-IP-SSA (M = {m}, 3dssd) ==");
+    let mut rng = Rng::seed_from(1);
+    let (agent_og, _) = train(&cfg, m, &arrivals, SchedulerAlg::Og, &tc, &mut rng);
+    let (agent_ip, _) = train(&cfg, m, &arrivals, SchedulerAlg::IpSsa, &tc, &mut rng);
+
+    println!("== evaluation over held-out episodes ==");
+    eval("LC", SchedulerAlg::Og, &mut LcPolicy);
+    eval("OG TW=0", SchedulerAlg::Og, &mut FixedTwPolicy::new(0));
+    eval("OG TW=2", SchedulerAlg::Og, &mut FixedTwPolicy::new(2));
+    let mut p_ip = DdpgPolicy::new(agent_ip, "DDPG-IP-SSA");
+    eval("DDPG-IP-SSA", SchedulerAlg::IpSsa, &mut p_ip);
+    let mut p_og = DdpgPolicy::new(agent_og, "DDPG-OG");
+    eval("DDPG-OG", SchedulerAlg::Og, &mut p_og);
+    println!(
+        "DDPG actor decision latency: {:.3} ms (Table V row 1)",
+        p_og.mean_decision_ms()
+    );
+}

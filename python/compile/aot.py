@@ -1,0 +1,138 @@
+"""AOT compiler: lower every (net, sub-task, batch-size) to HLO text.
+
+This is the only place Python touches the system: run once by
+``make artifacts``, it emits
+
+* ``artifacts/<net>/<subtask>_b<batch>.hlo.txt`` -- one XLA program per
+  batch bucket (batch is a compile-time shape; the Rust runtime picks
+  the bucket at request time exactly like bucketed-batch GPU serving),
+* ``artifacts/manifest.json`` -- the net/sub-task/shape/batch index the
+  Rust runtime loads,
+* ``artifacts/goldens/*.json`` -- deterministic input/output vectors the
+  Rust integration tests replay through PJRT to pin numerics.
+
+HLO **text** (not serialized proto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch buckets compiled for every sub-task.  Powers of two, like real
+#: bucketed-batch servers; the runtime rounds a batch up to the next bucket.
+BATCH_SIZES = (1, 2, 4, 8, 16)
+
+GOLDEN_SEED = 7041776
+GOLDEN_BATCHES = (1, 2)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``constant({...})`` and the consumer-side
+    text parser silently zero-fills them -- which would wipe the model
+    weights (they are baked into the HLO as constants).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def lower_subtask(st: model.SubTaskSpec, batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, *st.in_shape), jnp.float32)
+    return to_hlo_text(jax.jit(st.fn).lower(spec))
+
+
+def golden_input(net: model.NetSpec, batch: int) -> np.ndarray:
+    rng = np.random.RandomState(GOLDEN_SEED + batch)
+    return rng.randn(batch, *net.subtasks[0].in_shape).astype(np.float32)
+
+
+def emit_goldens(net: model.NetSpec, out_dir: str) -> list:
+    """Replay the chain per golden batch; record every boundary tensor."""
+    entries = []
+    for batch in GOLDEN_BATCHES:
+        x = golden_input(net, batch)
+        record = {"net": net.name, "batch": batch, "input": x.ravel().tolist(),
+                  "subtasks": []}
+        act = jnp.asarray(x)
+        for st in net.subtasks:
+            act = st.fn(act)
+            arr = np.asarray(act)
+            record["subtasks"].append({
+                "name": st.name,
+                "shape": list(arr.shape),
+                # Full tensor for exact replay; shapes are small by design.
+                "values": arr.ravel().tolist(),
+            })
+        path = os.path.join(out_dir, "goldens", f"{net.name}_b{batch}.json")
+        with open(path, "w") as f:
+            json.dump(record, f)
+        entries.append({"net": net.name, "batch": batch,
+                        "path": f"goldens/{net.name}_b{batch}.json"})
+        print(f"  golden {net.name} b={batch}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--nets", nargs="*", default=None,
+                    help="subset of nets to compile (default: all)")
+    args = ap.parse_args()
+    out = args.out
+
+    nets = model.build_all()
+    if args.nets:
+        nets = {k: v for k, v in nets.items() if k in args.nets}
+        if not nets:
+            sys.exit(f"no nets matched {args.nets}")
+
+    os.makedirs(os.path.join(out, "goldens"), exist_ok=True)
+    manifest = {"format": 1, "weight_seed": model.WEIGHT_SEED,
+                "batch_sizes": list(BATCH_SIZES), "nets": [], "goldens": []}
+
+    for net in nets.values():
+        os.makedirs(os.path.join(out, net.name), exist_ok=True)
+        net_entry = {"name": net.name, "subtasks": []}
+        for st in net.subtasks:
+            files = {}
+            for b in BATCH_SIZES:
+                rel = f"{net.name}/{st.name}_b{b}.hlo.txt"
+                text = lower_subtask(st, b)
+                with open(os.path.join(out, rel), "w") as f:
+                    f.write(text)
+                files[str(b)] = rel
+                print(f"  lowered {net.name}/{st.name} b={b} ({len(text)} chars)")
+            net_entry["subtasks"].append({
+                "name": st.name,
+                "in_shape": list(st.in_shape),
+                "out_shape": list(st.out_shape),
+                "dtype": "f32",
+                "files": files,
+            })
+        manifest["nets"].append(net_entry)
+        manifest["goldens"].extend(emit_goldens(net, out))
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for batchedge.
+
+Every kernel here is the batched hot-spot of a sub-task in the Layer-2
+models (``python/compile/model.py``) and is validated against the pure-jnp
+oracle in :mod:`compile.kernels.ref` by ``python/tests/test_kernels.py``.
+
+Hardware adaptation (paper: RTX3090 CUDA -> here: TPU-idiom Pallas):
+the paper's insight is that batch processing amortizes fixed per-launch
+cost, making the per-task latency ``F_n(b)/b`` fall with the batch size.
+On TPU the same effect appears as MXU utilization: batching grows the
+GEMM's row dimension so the 128-lane systolic array is filled.  The
+kernels therefore tile ``(batch x spatial) x channels`` onto MXU-shaped
+blocks via ``BlockSpec`` instead of porting threadblock structure.
+
+All kernels run with ``interpret=True``: the CPU PJRT client used by the
+Rust runtime cannot execute Mosaic custom-calls, and interpret-mode
+lowers ``pallas_call`` to plain HLO that round-trips through the AOT
+pipeline (see ``/opt/xla-example/README.md``).
+"""
+
+from .matmul import matmul_bias_act, pick_block  # noqa: F401
+from .dwconv import depthwise_conv3x3  # noqa: F401
+from .pointnet import set_abstraction  # noqa: F401

@@ -1,0 +1,88 @@
+"""Depthwise 3x3 convolution Pallas kernel (mobilenet-v2 bottleneck core).
+
+The depthwise stage is the only non-GEMM compute in mobilenet-v2; on GPU
+the paper batches it like everything else.  On TPU it is VPU (vector
+unit) work: we tile ``(batch, channel)`` on the grid, keep the full
+(small) spatial extent of one sample resident in VMEM, and express the
+3x3 stencil as nine shifted multiply-accumulates over the padded block
+-- the Pallas idiom for halo-free small-spatial stencils.  The batch
+grid axis is the streaming axis: consecutive grid steps double-buffer
+the next sample's block from HBM while the current one computes, which
+is the BlockSpec rendition of the paper's batched launch.
+
+VMEM estimate per grid step (largest model config: 18x18 spatial, 96
+channel tile, f32): in 18*18*96*4 = 124 KiB, out + taps < 300 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int):
+    """One (sample, channel-tile) block of depthwise conv.
+
+    x_ref: ``(1, H+2, W+2, ct)`` pre-padded input block.
+    w_ref: ``(3, 3, ct)`` taps; b_ref: ``(ct,)``.
+    o_ref: ``(1, Ho, Wo, ct)``.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    ho = o_ref.shape[1]
+    wo = o_ref.shape[2]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # Nine shifted MACs; strided slicing selects the output lattice.
+    for dy in range(3):
+        for dx in range(3):
+            window = jax.lax.slice(
+                x,
+                (0, dy, dx, 0),
+                (1, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, x.shape[3]),
+                (1, stride, stride, 1),
+            )
+            acc = acc + window * w[dy, dx][None, None, None, :]
+    acc = acc + b_ref[...][None, None, None, :]
+    o_ref[...] = jnp.clip(acc, 0.0, 6.0).astype(o_ref.dtype)  # fused relu6
+
+
+def depthwise_conv3x3(x, w, b, stride: int = 1):
+    """Depthwise 3x3 conv, padding 1 (PyTorch convention), fused relu6.
+
+    Args:
+      x: ``(B, H, W, C)`` NHWC activations.
+      w: ``(3, 3, C)`` depthwise taps.
+      b: ``(C,)`` bias.
+      stride: 1 or 2.
+
+    Returns:
+      ``(B, ceil(H/stride), ceil(W/stride), C)``.
+    """
+    if stride not in (1, 2):
+        raise ValueError(f"stride must be 1 or 2, got {stride}")
+    bsz, h, wdim, c = x.shape
+    if w.shape != (3, 3, c) or b.shape != (c,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    ho = (h + stride - 1) // stride
+    wo = (wdim + stride - 1) // stride
+    ct = pick_block(c, 96)
+    # Padding (1,1) is applied once outside the kernel so every grid block
+    # sees a halo-complete view; on real TPU this would be an index_map
+    # with halo overlap, which interpret-mode handles identically.
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    grid = (bsz, c // ct)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, stride=stride),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h + 2, wdim + 2, ct), lambda i, j: (i, 0, 0, j)),
+            pl.BlockSpec((3, 3, ct), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((ct,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, ct), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, c), x.dtype),
+        interpret=True,
+    )(xp, w, b)

@@ -1,0 +1,59 @@
+"""Fused set-abstraction Pallas kernel (3dssd backbone hot-spot).
+
+A 3dssd set-abstraction (SA) level applies a shared MLP to every point
+of every local group and max-pools over the group -- per sample this is
+``max_k relu(x[g, k, :] @ W + b)``.  The GEMM rows are
+``groups x group_size``, so batching multiplies the MXU row occupancy by
+the batch size: for the paper's heavy point-cloud net this is exactly
+where ``F_n(b)`` grows (Fig. 3a), and where batch processing pays.
+
+Grid: one step per sample (batch is the streaming axis).  The whole
+sample's groups stay resident: the largest SA level here is
+256 groups x 8 x 64 features f32 = 512 KiB in, 256 x 128 out -- well
+inside VMEM; the shared weights (<= 64x128) are broadcast to all steps.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sa_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One sample: shared MLP over (groups*k, cin) then max over k."""
+    x = x_ref[...]  # (1, G, K, Cin)
+    w = w_ref[...]  # (Cin, Cout)
+    _, g, k, cin = x.shape
+    cout = w.shape[1]
+    rows = x.reshape(g * k, cin)
+    y = jnp.dot(rows, w, preferred_element_type=jnp.float32)
+    y = jnp.maximum(y + b_ref[...][None, :], 0.0)
+    o_ref[...] = jnp.max(y.reshape(1, g, k, cout), axis=2).astype(o_ref.dtype)
+
+
+def set_abstraction(x, w, b):
+    """Shared-MLP + group max-pool, fused.
+
+    Args:
+      x: ``(B, G, K, Cin)`` grouped point features (G groups of K points).
+      w: ``(Cin, Cout)`` shared MLP weights.
+      b: ``(Cout,)`` bias.
+
+    Returns:
+      ``(B, G, Cout)`` pooled group features.
+    """
+    bsz, g, k, cin = x.shape
+    cin2, cout = w.shape
+    if cin != cin2 or b.shape != (cout,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    return pl.pallas_call(
+        _sa_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, g, k, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, g, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, g, cout), x.dtype),
+        interpret=True,
+    )(x, w, b)

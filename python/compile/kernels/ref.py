@@ -1,0 +1,50 @@
+"""Pure-jnp oracle implementations of every Layer-1 kernel.
+
+These are the ground truth the Pallas kernels are tested against
+(``python/tests/test_kernels.py``), written with standard jax/XLA ops
+only -- no Pallas -- so a bug cannot be shared between kernel and
+reference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """Reference for :func:`compile.kernels.matmul.matmul_bias_act`."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "relu6":
+        y = jnp.clip(y, 0.0, 6.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y.astype(x.dtype)
+
+
+def depthwise_conv3x3(x, w, b, stride: int = 1):
+    """Reference for :func:`compile.kernels.dwconv.depthwise_conv3x3`.
+
+    Uses ``lax.conv_general_dilated`` with feature_group_count=C and
+    explicit (1, 1) padding -- the PyTorch ``padding=1`` convention used
+    by mobilenet-v2, which differs from XLA "SAME" alignment at stride 2.
+    """
+    c = x.shape[3]
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        # (3,3,C) -> HWIO with I=1 for depthwise.
+        w.astype(jnp.float32)[:, :, :, None].transpose(0, 1, 3, 2),
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    y = y + b.astype(jnp.float32)[None, None, None, :]
+    return jnp.clip(y, 0.0, 6.0).astype(x.dtype)
+
+
+def set_abstraction(x, w, b):
+    """Reference for :func:`compile.kernels.pointnet.set_abstraction`."""
+    y = jnp.einsum("bgkc,cd->bgkd", x.astype(jnp.float32), w.astype(jnp.float32))
+    y = jnp.maximum(y + b.astype(jnp.float32), 0.0)
+    return jnp.max(y, axis=2).astype(x.dtype)

@@ -1,0 +1,99 @@
+"""AOT pipeline tests: HLO text emission, manifest integrity, goldens.
+
+These run the same lowering path as ``make artifacts`` on a single
+sub-task (cheap) and validate the emitted interchange artifacts the
+Rust runtime consumes.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def mobilenet():
+    return model.build_mobilenet()
+
+
+def test_lower_emits_hlo_text(mobilenet):
+    text = aot.lower_subtask(mobilenet.subtasks[-1], batch=2)
+    assert text.startswith("HloModule"), text[:40]
+    assert "ROOT" in text
+    # return_tuple=True: the rust loader unwraps a 1-tuple.
+    assert "tuple" in text
+
+
+def test_lowered_text_never_elides_constants(mobilenet):
+    """Regression: the default printer elides big constants as
+    ``constant({...})`` and the Rust-side parser zero-fills them, wiping
+    the baked weights. aot.py must print large constants in full."""
+    text = aot.lower_subtask(mobilenet.subtasks[-1], batch=1)
+    assert "{...}" not in text
+    # The classifier weights (320x100 f32) must appear as a real literal.
+    assert text.count("constant(") >= 2
+
+
+def test_lowered_batch_shape_appears(mobilenet):
+    st = mobilenet.subtasks[-1]  # cls: in (2,2,160)
+    text = aot.lower_subtask(st, batch=4)
+    assert "f32[4,2,2,160]" in text.replace(" ", "")
+
+
+def test_golden_input_deterministic(mobilenet):
+    a = aot.golden_input(mobilenet, 2)
+    b = aot.golden_input(mobilenet, 2)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 32, 32, 3)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestEmittedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_covers_all_nets_and_batches(self, manifest):
+        names = {n["name"] for n in manifest["nets"]}
+        assert names == {"mobilenet_v2", "dssd3"}
+        assert manifest["batch_sizes"] == list(aot.BATCH_SIZES)
+
+    def test_every_listed_file_exists_and_is_hlo(self, manifest):
+        for net in manifest["nets"]:
+            for st in net["subtasks"]:
+                for rel in st["files"].values():
+                    path = os.path.join(ART, rel)
+                    assert os.path.exists(path), rel
+                    with open(path) as f:
+                        assert f.read(9) == "HloModule"
+
+    def test_manifest_shapes_match_model(self, manifest):
+        nets = model.build_all()
+        for net in manifest["nets"]:
+            spec = nets[net["name"]]
+            assert len(net["subtasks"]) == len(spec.subtasks)
+            for entry, st in zip(net["subtasks"], spec.subtasks):
+                assert entry["name"] == st.name
+                assert tuple(entry["in_shape"]) == st.in_shape
+                assert tuple(entry["out_shape"]) == st.out_shape
+
+    def test_goldens_replay(self, manifest):
+        """Goldens re-verified against a fresh model build."""
+        for g in manifest["goldens"]:
+            with open(os.path.join(ART, g["path"])) as f:
+                rec = json.load(f)
+            net = model.build_all()[rec["net"]]
+            x = jnp.asarray(np.asarray(rec["input"], np.float32).reshape(
+                rec["batch"], *net.subtasks[0].in_shape))
+            for st, entry in zip(net.subtasks, rec["subtasks"]):
+                x = st.fn(x)
+                want = np.asarray(entry["values"], np.float32).reshape(entry["shape"])
+                np.testing.assert_allclose(np.asarray(x), want, rtol=1e-5, atol=1e-6)

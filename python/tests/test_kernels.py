@@ -1,0 +1,127 @@
+"""Layer-1 kernel tests: Pallas vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and strides / activations) so the BlockSpec
+tiling is exercised across uneven-but-divisible dimensions, multiple
+grid extents and both strides.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, dwconv, pointnet, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16, 64, 160, 256]),
+    k=st.sampled_from([3, 8, 48, 72, 160]),
+    n=st.sampled_from([8, 12, 48, 100, 192, 320]),
+    act=st.sampled_from(list(matmul.ACTIVATIONS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    rng = np.random.RandomState(seed)
+    x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = matmul.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_activation():
+    x = jnp.zeros((4, 4))
+    with pytest.raises(ValueError, match="activation"):
+        matmul.matmul_bias_act(x, x, jnp.zeros(4), "gelu")
+
+
+def test_matmul_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="shape"):
+        matmul.matmul_bias_act(jnp.zeros((4, 3)), jnp.zeros((5, 2)), jnp.zeros(2))
+
+
+@pytest.mark.parametrize("dim,target,expect", [(256, 128, 128), (192, 128, 96),
+                                               (7, 128, 7), (100, 128, 100),
+                                               (130, 128, 65)])
+def test_pick_block_divides(dim, target, expect):
+    got = matmul.pick_block(dim, target)
+    assert got == expect and dim % got == 0
+
+
+# ---------------------------------------------------------------- dwconv
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    hw=st.sampled_from([4, 8, 9, 16]),
+    c=st.sampled_from([8, 12, 48, 96, 192]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_matches_ref(b, hw, c, stride, seed):
+    rng = np.random.RandomState(seed)
+    x, w, bias = _rand(rng, b, hw, hw, c), _rand(rng, 3, 3, c), _rand(rng, c)
+    got = dwconv.depthwise_conv3x3(x, w, bias, stride)
+    want = ref.depthwise_conv3x3(x, w, bias, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv_rejects_bad_stride():
+    z = jnp.zeros((1, 4, 4, 8))
+    with pytest.raises(ValueError, match="stride"):
+        dwconv.depthwise_conv3x3(z, jnp.zeros((3, 3, 8)), jnp.zeros(8), 3)
+
+
+def test_dwconv_output_is_relu6_clipped():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1, 8, 8, 8).astype(np.float32)) * 100.0
+    y = dwconv.depthwise_conv3x3(x, _rand(rng, 3, 3, 8), _rand(rng, 8), 1)
+    assert float(jnp.min(y)) >= 0.0 and float(jnp.max(y)) <= 6.0
+
+
+# ------------------------------------------------------------- pointnet
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([8, 16, 64, 128]),
+    k=st.sampled_from([2, 4, 8]),
+    cin=st.sampled_from([4, 32, 64]),
+    cout=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_set_abstraction_matches_ref(b, g, k, cin, cout, seed):
+    rng = np.random.RandomState(seed)
+    x, w, bias = _rand(rng, b, g, k, cin), _rand(rng, cin, cout), _rand(rng, cout)
+    got = pointnet.set_abstraction(x, w, bias)
+    want = ref.set_abstraction(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_set_abstraction_pool_is_max():
+    # A group where one point dominates: pooled output must equal that
+    # point's MLP output exactly.
+    x = np.zeros((1, 1, 4, 2), np.float32)
+    x[0, 0, 2] = [3.0, 1.0]
+    w = np.eye(2, dtype=np.float32)
+    b = np.zeros(2, np.float32)
+    got = pointnet.set_abstraction(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got)[0, 0], [3.0, 1.0])
+
+
+def test_set_abstraction_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="shape"):
+        pointnet.set_abstraction(jnp.zeros((1, 2, 2, 3)), jnp.zeros((4, 8)),
+                                 jnp.zeros(8))

@@ -1,0 +1,87 @@
+"""Layer-2 model tests: shapes, chaining, determinism, batch invariance."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def nets():
+    return model.build_all()
+
+
+def _chain(net, x):
+    for st in net.subtasks:
+        x = st.fn(x)
+    return x
+
+
+@pytest.mark.parametrize("name", ["mobilenet_v2", "dssd3"])
+def test_subtask_shapes_chain(nets, name):
+    """Every sub-task's declared out_shape is the next one's in_shape."""
+    net = nets[name]
+    for prev, nxt in zip(net.subtasks, net.subtasks[1:]):
+        assert prev.out_shape == nxt.in_shape, (prev.name, nxt.name)
+
+
+@pytest.mark.parametrize("name,batch", [("mobilenet_v2", 1), ("mobilenet_v2", 3),
+                                        ("dssd3", 1), ("dssd3", 2)])
+def test_forward_shapes(nets, name, batch):
+    net = nets[name]
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(batch, *net.subtasks[0].in_shape), jnp.float32)
+    for st in net.subtasks:
+        x = st.fn(x)
+        assert x.shape == (batch, *st.out_shape), st.name
+
+
+def test_subtask_counts_match_paper(nets):
+    """Fig. 2 partitioning: 9 sub-tasks for mobilenet-v2, 5 for 3dssd."""
+    assert [st.name for st in nets["mobilenet_v2"].subtasks] == [
+        "c_b1", "b2", "b3", "b4", "b5", "b6", "b7", "cls"]
+    assert [st.name for st in nets["dssd3"].subtasks] == [
+        "sa1", "sa2", "sa3", "cg", "ph"]
+
+
+def test_weights_are_deterministic():
+    """Two independent builds produce bit-identical outputs (AOT goldens
+    and the Rust runtime depend on this)."""
+    a, b = model.build_mobilenet(), model.build_mobilenet()
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(1, 32, 32, 3), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(_chain(a, x)), np.asarray(_chain(b, x)))
+
+
+@pytest.mark.parametrize("name", ["mobilenet_v2", "dssd3"])
+def test_batch_rows_independent(nets, name):
+    """Batched inference must equal per-sample inference (the whole premise
+    of the paper's batch aggregation: users' tasks do not interact)."""
+    net = nets[name]
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(4, *net.subtasks[0].in_shape), jnp.float32)
+    batched = np.asarray(_chain(net, x))
+    for i in range(4):
+        single = np.asarray(_chain(net, x[i:i + 1]))
+        np.testing.assert_allclose(batched[i:i + 1], single, rtol=2e-5, atol=2e-5)
+
+
+def test_mobilenet_intermediates_shrink_toward_rear(nets):
+    """The structural property behind Table III / Fig. 5b: mobilenet's
+    boundary tensors shrink toward the classifier, so rear partition
+    points are cheap to offload."""
+    net = nets["mobilenet_v2"]
+    sizes = [int(np.prod(st.out_shape)) for st in net.subtasks]
+    assert sizes[-1] < sizes[0]
+    assert min(sizes[-3:]) < min(sizes[:3])
+
+
+def test_dssd3_intermediates_not_smaller_than_input(nets):
+    """The property behind 'IP-SSA-NP == IP-SSA for 3dssd' (Fig. 5a):
+    no intermediate boundary is cheaper to ship than the raw input,
+    except the final prediction output."""
+    net = nets["dssd3"]
+    b0 = int(np.prod(net.subtasks[0].in_shape))
+    for st in net.subtasks[:-1]:
+        assert int(np.prod(st.out_shape)) >= b0, st.name

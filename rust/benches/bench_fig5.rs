@@ -1,0 +1,17 @@
+//! Regenerates Fig. 5 (offline energy-vs-users sweeps, both DNNs, all
+//! bandwidths and policies).
+
+mod common;
+
+use batchedge::experiments::fig5;
+
+fn main() {
+    let mut p = fig5::Params::default();
+    if common::quick() {
+        p.m_list = vec![1, 5, 10, 15];
+        p.draws = 8;
+    }
+    let t0 = std::time::Instant::now();
+    fig5::run(&p).unwrap();
+    println!("bench fig5 total {:.2} s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Regenerates Fig. 6 (α and deadline sensitivity).
+
+mod common;
+
+use batchedge::experiments::fig6;
+
+fn main() {
+    let mut p = fig6::Params::default();
+    if common::quick() {
+        p.m_list = vec![1, 5, 10, 15];
+        p.draws = 8;
+    }
+    let t0 = std::time::Instant::now();
+    fig6::run(&p).unwrap();
+    println!("bench fig6 total {:.2} s", t0.elapsed().as_secs_f64());
+}

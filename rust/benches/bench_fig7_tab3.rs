@@ -1,0 +1,15 @@
+//! Regenerates Fig. 7 (energy distributions) and Table III (batch sizes).
+
+mod common;
+
+use batchedge::experiments::fig7_tab3;
+
+fn main() {
+    let mut p = fig7_tab3::Params::default();
+    if common::quick() {
+        p.draws = 12;
+    }
+    let t0 = std::time::Instant::now();
+    fig7_tab3::run(&p).unwrap();
+    println!("bench fig7_tab3 total {:.2} s", t0.elapsed().as_secs_f64());
+}

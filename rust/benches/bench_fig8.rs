@@ -1,0 +1,34 @@
+//! Regenerates Fig. 8 (online policies incl. DDPG training) and Table V.
+//! The heaviest bench: trains 2 agents per (panel, M).
+
+mod common;
+
+use batchedge::experiments::{fig8, table5};
+
+fn main() {
+    // Bench scale: small enough that `cargo bench` finishes in minutes on
+    // one core. The full-scale run is `batchedge experiment fig8` (its
+    // outputs are what EXPERIMENTS.md quotes).
+    let quick = common::quick();
+    let mut p = fig8::Params::default();
+    let mut t5 = table5::Params::default();
+    p.m_list = vec![2, 8];
+    p.train.episodes = 6;
+    p.train.slots_per_episode = 200;
+    p.eval_episodes = 2;
+    p.eval_slots = 250;
+    t5.train.episodes = 6;
+    t5.train.slots_per_episode = 200;
+    t5.eval_slots = 400;
+    if quick {
+        p.m_list = vec![2];
+        p.train.episodes = 3;
+        t5.train.episodes = 3;
+    }
+    let t0 = std::time::Instant::now();
+    fig8::run(&p).unwrap();
+    println!("bench fig8 total {:.2} s", t0.elapsed().as_secs_f64());
+    let t0 = std::time::Instant::now();
+    table5::run(&t5).unwrap();
+    println!("bench table5 total {:.2} s", t0.elapsed().as_secs_f64());
+}

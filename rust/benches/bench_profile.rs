@@ -1,0 +1,10 @@
+//! Regenerates Fig. 3 (profiles + throughput curves, calibrated and
+//! measured). `cargo bench --bench bench_profile`.
+
+mod common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    batchedge::experiments::fig3::run(!common::quick()).unwrap();
+    println!("bench fig3 total {:.2} s", t0.elapsed().as_secs_f64());
+}

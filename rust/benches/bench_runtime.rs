@@ -1,0 +1,46 @@
+//! PJRT runtime benchmarks: per-sub-task latency vs batch bucket — the
+//! *measured* Fig.-3 data — plus end-to-end chain throughput. Requires
+//! `make artifacts`.
+
+mod common;
+
+use batchedge::runtime::executor::BatchRequest;
+use batchedge::runtime::{default_artifacts_root, Runtime};
+use batchedge::util::rng::Rng;
+
+fn main() {
+    let root = default_artifacts_root();
+    if !root.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let rt = Runtime::open(&root).unwrap();
+    let reps = if common::quick() { 3 } else { 10 };
+    let mut rng = Rng::seed_from(7);
+
+    for net in ["mobilenet_v2", "dssd3"] {
+        let subtasks = rt.manifest().net(net).unwrap().subtasks.clone();
+        for st in &subtasks {
+            for &b in &[1usize, 4, 16] {
+                let samples: Vec<Vec<f32>> = (0..b)
+                    .map(|_| (0..st.in_elems()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+                    .collect();
+                let req =
+                    BatchRequest { net: net.into(), sub: st.name.clone(), samples };
+                common::bench(&format!("{net}/{} b={b}", st.name), 1, reps, || {
+                    std::hint::black_box(rt.run_batch(&req).unwrap());
+                });
+            }
+        }
+        // Whole-task chain (throughput reference).
+        let st0 = &subtasks[0];
+        for &b in &[1usize, 8] {
+            let samples: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..st0.in_elems()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+                .collect();
+            common::bench(&format!("{net}/chain b={b}"), 1, reps, || {
+                std::hint::black_box(rt.run_chain(net, 0, samples.clone()).unwrap());
+            });
+        }
+    }
+}

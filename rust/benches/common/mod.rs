@@ -1,0 +1,31 @@
+//! Tiny bench harness shared by all `harness = false` bench binaries
+//! (criterion is not available in the offline registry).
+//!
+//! Measures wall-clock over `reps` runs after `warmup` runs and prints
+//! mean / min / throughput lines in a stable, grep-friendly format.
+
+// Not every bench binary uses every helper.
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Run `f` and report timing under `name`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("bench {name:<48} mean {:>10.3} ms  min {:>10.3} ms  reps {reps}", mean * 1e3, min * 1e3);
+}
+
+/// `quick` mode for CI-ish runs: `BATCHEDGE_BENCH_QUICK=1`.
+pub fn quick() -> bool {
+    std::env::var("BATCHEDGE_BENCH_QUICK").as_deref() == Ok("1")
+}

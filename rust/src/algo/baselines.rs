@@ -1,0 +1,361 @@
+//! Benchmark policies from §V-C: LC, PS, FIFO and IP-SSA-NP.
+
+use crate::scenario::Scenario;
+
+use super::ipssa;
+use super::types::{Batch, Discipline, Plan, SolveResult, Solver, UserPlan};
+
+/// LC — every user computes locally at the lowest deadline-feasible
+/// frequency.
+pub struct LocalOnly;
+
+impl Solver for LocalOnly {
+    fn name(&self) -> &'static str {
+        "LC"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> SolveResult {
+        let members: Vec<usize> = (0..scenario.m()).collect();
+        let deadline = min_deadline(scenario);
+        let plan = ipssa::all_local_fallback(scenario, &members, deadline).plan;
+        SolveResult { plan, scenario: scenario.clone() }
+    }
+}
+
+/// PS — offloading with processor sharing: the GPU is split evenly, so
+/// every offloaded sub-task takes `M · F_n(1)`; each user independently
+/// picks its partition point (no batching, no occupancy exclusivity).
+pub struct ProcessorSharing;
+
+impl Solver for ProcessorSharing {
+    fn name(&self) -> &'static str {
+        "PS"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> SolveResult {
+        let cfg = &scenario.cfg;
+        let n = cfg.net.n();
+        let m = scenario.m().max(1);
+        let dev = &cfg.device;
+        let mut users = Vec::with_capacity(scenario.m());
+        let mut batches = Vec::new();
+
+        for (ui, user) in scenario.users.iter().enumerate() {
+            // Edge suffix latency after partition p: Σ_{i>p} M·F_i(1).
+            let mut best: Option<UserPlan> = None;
+            let mut t_fmax = 0.0;
+            let mut e_fmax = 0.0;
+            for p in 0..=n {
+                if p > 0 {
+                    t_fmax += dev.local_latency_fmax(&cfg.profile, p);
+                    e_fmax += dev.local_energy_fmax(&cfg.profile, p);
+                }
+                let cand = if p == n {
+                    dev.frequency_for(t_fmax, user.deadline - user.arrival).map(|phi| {
+                        let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                        UserPlan {
+                            partition: p,
+                            phi,
+                            energy: dev.energy_at(e_fmax, phi),
+                            local_finish: user.arrival + run,
+                            upload_end: user.arrival + run,
+                            finish: user.arrival + run,
+                        }
+                    })
+                } else {
+                    let upload_t = cfg.net.boundary_bits(p) / user.rate_up;
+                    let edge_t: f64 = ((p + 1)..=n).map(|i| m as f64 * cfg.profile.f(i, 1)).sum();
+                    let avail = user.deadline - edge_t - upload_t - user.arrival;
+                    dev.frequency_for(t_fmax, avail).map(|phi| {
+                        let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                        let local_finish = user.arrival + run;
+                        UserPlan {
+                            partition: p,
+                            phi,
+                            energy: dev.energy_at(e_fmax, phi)
+                                + upload_t * cfg.radio.tx_circuit_w,
+                            local_finish,
+                            upload_end: local_finish + upload_t,
+                            finish: local_finish + upload_t + edge_t,
+                        }
+                    })
+                };
+                if let Some(c) = cand {
+                    if best.as_ref().map_or(true, |b| c.energy < b.energy - 1e-15) {
+                        best = Some(c);
+                    }
+                }
+            }
+            let plan = best.unwrap_or_else(|| emergency_local(scenario, ui));
+            if plan.partition < n {
+                // Record the user's edge occupancy as per-sub-task
+                // singleton "shares" for reporting.
+                let mut t = plan.upload_end;
+                for sub in (plan.partition + 1)..=n {
+                    let dur = m as f64 * cfg.profile.f(sub, 1);
+                    batches.push(Batch { sub, start: t, duration: dur, members: vec![ui] });
+                    t += dur;
+                }
+            }
+            users.push(plan);
+        }
+        batches.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        SolveResult {
+            plan: Plan {
+                users,
+                batches,
+                groups: vec![(0..scenario.m()).collect()],
+                discipline: Discipline::ProcessorSharing,
+                assumed_batch: 1,
+            },
+            scenario: scenario.clone(),
+        }
+    }
+}
+
+/// FIFO — the edge serves offloaded suffixes one user at a time, users
+/// sorted by uplink rate (descending); offloaders run their local prefix at
+/// `f_max` (paper: "we set f_m = f_max to allow the edge server to process
+/// the most sub-tasks"); users that cannot offload fall back to LC.
+pub struct Fifo;
+
+impl Solver for Fifo {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> SolveResult {
+        let cfg = &scenario.cfg;
+        let n = cfg.net.n();
+        let dev = &cfg.device;
+
+        let mut order: Vec<usize> = (0..scenario.m()).collect();
+        order.sort_by(|&a, &b| {
+            scenario.users[b].rate_up.partial_cmp(&scenario.users[a].rate_up).unwrap()
+        });
+
+        let mut users: Vec<Option<UserPlan>> = vec![None; scenario.m()];
+        let mut batches = Vec::new();
+        let mut edge_free_at = 0.0f64;
+
+        for &ui in &order {
+            let user = &scenario.users[ui];
+            // Full-local DVFS at the user's own deadline is always a
+            // candidate — a rational user never offloads at higher energy
+            // than staying local.
+            let local = emergency_local(scenario, ui);
+            let mut best: Option<(UserPlan, f64)> = None; // (plan, edge_finish)
+            let mut t_fmax = 0.0;
+            let mut e_fmax = 0.0;
+            for p in 0..n {
+                if p > 0 {
+                    t_fmax += dev.local_latency_fmax(&cfg.profile, p);
+                    e_fmax += dev.local_energy_fmax(&cfg.profile, p);
+                }
+                let upload_t = cfg.net.boundary_bits(p) / user.rate_up;
+                let upload_end = user.arrival + t_fmax + upload_t; // φ = 1
+                let edge_start = edge_free_at.max(upload_end);
+                let edge_t: f64 = ((p + 1)..=n).map(|i| cfg.profile.f(i, 1)).sum();
+                let finish = edge_start + edge_t;
+                if finish > user.deadline + 1e-12 {
+                    continue;
+                }
+                let plan = UserPlan {
+                    partition: p,
+                    phi: 1.0,
+                    energy: e_fmax + upload_t * cfg.radio.tx_circuit_w,
+                    local_finish: user.arrival + t_fmax,
+                    upload_end,
+                    finish,
+                };
+                if best.as_ref().map_or(true, |(b, _)| plan.energy < b.energy - 1e-15) {
+                    best = Some((plan, finish));
+                }
+            }
+            match best {
+                Some((plan, finish)) if plan.energy < local.energy => {
+                    // Occupy the edge and record singleton batches.
+                    let mut t = edge_free_at.max(plan.upload_end);
+                    for sub in (plan.partition + 1)..=n {
+                        let dur = cfg.profile.f(sub, 1);
+                        batches.push(Batch { sub, start: t, duration: dur, members: vec![ui] });
+                        t += dur;
+                    }
+                    edge_free_at = finish;
+                    users[ui] = Some(plan);
+                }
+                // Offloading infeasible or dearer -> DVFS local at own
+                // deadline.
+                _ => users[ui] = Some(local),
+            }
+        }
+        batches.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        SolveResult {
+            plan: Plan {
+                users: users.into_iter().map(Option::unwrap).collect(),
+                batches,
+                groups: vec![(0..scenario.m()).collect()],
+                discipline: Discipline::Sequential,
+                assumed_batch: 1,
+            },
+            scenario: scenario.clone(),
+        }
+    }
+}
+
+/// IP-SSA-NP — IP-SSA with the whole DNN as a single sub-task (no
+/// partitioning): upload the raw input or stay local.
+pub struct IpSsaNp;
+
+impl Solver for IpSsaNp {
+    fn name(&self) -> &'static str {
+        "IP-SSA-NP"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> SolveResult {
+        let np_cfg = std::sync::Arc::new(scenario.cfg.unpartitioned());
+        let np_scenario = Scenario { cfg: np_cfg, users: scenario.users.clone() };
+        let plan = ipssa::solve(&np_scenario);
+        SolveResult { plan, scenario: np_scenario }
+    }
+}
+
+/// DVFS full-local plan against the user's own deadline (`φ = 1` if even
+/// that is too slow — mirrors the online forced-local cost `C`).
+fn emergency_local(scenario: &Scenario, ui: usize) -> UserPlan {
+    let sol = ipssa::all_local_fallback(scenario, &[ui], scenario.users[ui].deadline);
+    sol.plan.users.into_iter().next().unwrap()
+}
+
+fn min_deadline(scenario: &Scenario) -> f64 {
+    scenario.users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min)
+}
+
+/// All §V-C solvers, in the paper's legend order.
+pub fn offline_suite() -> Vec<Box<dyn Solver>> {
+    vec![
+        Box::new(LocalOnly),
+        Box::new(ProcessorSharing),
+        Box::new(Fifo),
+        Box::new(IpSsaNp),
+        Box::new(ipssa::IpSsa),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::util::rng::Rng;
+
+    fn draw(m: usize, seed: u64) -> Scenario {
+        Scenario::draw(&SystemConfig::dssd3_default(), m, &mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn lc_meets_deadline_and_uses_dvfs() {
+        let s = draw(5, 1);
+        let r = LocalOnly.solve(&s);
+        for u in &r.plan.users {
+            assert_eq!(u.partition, 5);
+            assert!(u.finish <= 0.25 + 1e-9);
+            // 48 ms of fmax work stretched into 250 ms: φ = 0.192.
+            assert!((u.phi - 0.048 / 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ps_edge_latency_scales_with_m() {
+        // With many users PS's M·F_n(1) suffix becomes deadline-infeasible,
+        // pushing users local — the effect behind Fig. 7a.
+        let small = ProcessorSharing.solve(&draw(2, 3));
+        let large = ProcessorSharing.solve(&draw(14, 3));
+        let frac_offload = |r: &SolveResult| {
+            r.plan.users.iter().filter(|u| u.partition < 5).count() as f64
+                / r.plan.users.len() as f64
+        };
+        assert!(frac_offload(&small) >= frac_offload(&large));
+    }
+
+    #[test]
+    fn fifo_edge_never_overlaps() {
+        let s = draw(10, 5);
+        let r = Fifo.solve(&s);
+        let mut batches = r.plan.batches.clone();
+        batches.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in batches.windows(2) {
+            assert!(w[1].start >= w[0].end() - 1e-9);
+        }
+        for u in &r.plan.users {
+            assert!(u.finish <= 0.25 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fifo_favors_fast_uplinks() {
+        let s = draw(12, 7);
+        let r = Fifo.solve(&s);
+        // The fastest-uplink user is served first; if anyone offloads, it
+        // should (its edge window starts earliest).
+        let fastest = (0..s.m())
+            .max_by(|&a, &b| s.users[a].rate_up.partial_cmp(&s.users[b].rate_up).unwrap())
+            .unwrap();
+        let offloaders: Vec<usize> =
+            r.plan.users.iter().enumerate().filter(|(_, u)| u.partition < 5).map(|(i, _)| i).collect();
+        if !offloaders.is_empty() {
+            assert!(offloaders.contains(&fastest));
+        }
+    }
+
+    #[test]
+    fn np_has_binary_partition() {
+        let s = draw(6, 9);
+        let r = IpSsaNp.solve(&s);
+        for u in &r.plan.users {
+            assert!(u.partition == 0 || u.partition == 1, "NP partition {}", u.partition);
+        }
+        // The returned scenario is the unpartitioned view.
+        assert_eq!(r.scenario.cfg.net.n(), 1);
+    }
+
+    #[test]
+    fn ipssa_wins_or_ties_every_baseline_on_average() {
+        // The headline ordering of Fig. 5 (3dssd, W=1 MHz, M=10).
+        let mut totals = std::collections::BTreeMap::new();
+        for seed in 0..10 {
+            let s = draw(10, 100 + seed);
+            for solver in offline_suite() {
+                *totals.entry(solver.name()).or_insert(0.0) +=
+                    solver.solve(&s).plan.total_energy();
+            }
+        }
+        let ipssa = totals["IP-SSA"];
+        for (name, &e) in &totals {
+            assert!(ipssa <= e + 1e-9, "IP-SSA {ipssa} worse than {name} {e}");
+        }
+    }
+
+    #[test]
+    fn np_equals_ipssa_for_dssd3() {
+        // Paper: 3dssd intermediates ≥ input ⇒ partitioning adds nothing.
+        for seed in 0..6 {
+            let s = draw(8, 200 + seed);
+            let a = IpSsaNp.solve(&s).plan.total_energy();
+            let b = ipssa::IpSsa.solve(&s).plan.total_energy();
+            assert!((a - b).abs() < 1e-6, "seed {seed}: NP {a} vs IP-SSA {b}");
+        }
+    }
+
+    #[test]
+    fn np_no_better_than_lc_for_mobilenet_narrowband() {
+        // Paper: at W = 1 MHz mobilenet-v2's raw input cannot be shipped in
+        // 50 ms, so IP-SSA-NP degenerates to LC.
+        let cfg = SystemConfig::mobilenet_default();
+        for seed in 0..6 {
+            let s = Scenario::draw(&cfg, 8, &mut Rng::seed_from(300 + seed));
+            let np = IpSsaNp.solve(&s).plan.total_energy();
+            let lc = LocalOnly.solve(&s).plan.total_energy();
+            assert!((np - lc).abs() / lc < 1e-9, "seed {seed}: NP {np} vs LC {lc}");
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Plan validator: checks a [`Plan`] against the constraints of problem P1
+//! (eqs. 6–16). Used by unit, integration and property tests for *every*
+//! solver, and by the coordinator in debug builds before executing a plan.
+
+use crate::scenario::Scenario;
+
+use super::types::{Discipline, Plan};
+
+const EPS: f64 = 1e-6;
+
+/// A violated constraint.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum Violation {
+    #[error("user {user}: finish {finish:.6} exceeds deadline {deadline:.6} (eq. 14)")]
+    Deadline { user: usize, finish: f64, deadline: f64 },
+    #[error("user {user}: φ {phi} outside [{lo}, 1] (eq. 15)")]
+    Frequency { user: usize, phi: f64, lo: f64 },
+    #[error("user {user}: missing from batch for sub-task {sub} (eq. 6)")]
+    MissingBatch { user: usize, sub: usize },
+    #[error("user {user}: appears in {count} batches for sub-task {sub} (eq. 6)")]
+    DuplicateBatch { user: usize, sub: usize, count: usize },
+    #[error("batch(sub {sub}, start {start:.6}): member {user} not ready until {ready:.6} (eq. 9)")]
+    NotReady { sub: usize, start: f64, user: usize, ready: f64 },
+    #[error("server occupancy overlap: batch at {second:.6} starts before {first_end:.6} (eq. 11)")]
+    Overlap { first_end: f64, second: f64 },
+    #[error("batch(sub {sub}): duration {got:.6} != F_n(size) {want:.6}")]
+    Duration { sub: usize, got: f64, want: f64 },
+    #[error("user {user}: energy {got:.6} != recomputed {want:.6}")]
+    Energy { user: usize, got: f64, want: f64 },
+    #[error("user {user}: local prefix cannot fit (needs {need:.6}s, has {have:.6}s)")]
+    LocalWindow { user: usize, need: f64, have: f64 },
+    #[error("plan has {plans} user plans for {users} users")]
+    Arity { plans: usize, users: usize },
+}
+
+/// Check every P1 constraint that applies to the plan's discipline.
+pub fn check(scenario: &Scenario, plan: &Plan) -> Result<(), Violation> {
+    let cfg = &scenario.cfg;
+    let n = cfg.net.n();
+    let m = scenario.m();
+    if plan.users.len() != m {
+        return Err(Violation::Arity { plans: plan.users.len(), users: m });
+    }
+
+    // Per-user decisions.
+    for (ui, (user, up)) in scenario.users.iter().zip(&plan.users).enumerate() {
+        // (14) latency constraint, against the user's own deadline.
+        if up.finish > user.deadline + EPS {
+            return Err(Violation::Deadline { user: ui, finish: up.finish, deadline: user.deadline });
+        }
+        // (15) frequency bounds. Emergency plans may pin φ = 1.
+        if !(cfg.device.f_min_ratio - EPS..=1.0 + EPS).contains(&up.phi) {
+            return Err(Violation::Frequency { user: ui, phi: up.phi, lo: cfg.device.f_min_ratio });
+        }
+        // Local prefix timing: work at φ fits before upload_end.
+        let t_fmax = cfg.device.prefix_latency_fmax(&cfg.profile, up.partition);
+        if t_fmax > 0.0 {
+            let have = up.local_finish - user.arrival;
+            let need = t_fmax / up.phi;
+            if need > have + EPS {
+                return Err(Violation::LocalWindow { user: ui, need, have });
+            }
+        }
+        // Energy re-derivation (objective bookkeeping).
+        let e_fmax = cfg.device.prefix_energy_fmax(&cfg.profile, up.partition);
+        let mut want = e_fmax * up.phi * up.phi;
+        if up.partition < n {
+            let upload_t = cfg.net.boundary_bits(up.partition) / user.rate_up;
+            want += upload_t * cfg.radio.tx_circuit_w;
+        }
+        if (up.energy - want).abs() > EPS * want.max(1.0) {
+            return Err(Violation::Energy { user: ui, got: up.energy, want });
+        }
+    }
+
+    // (6): offloaders appear in exactly one batch per offloaded sub-task.
+    for (ui, up) in plan.users.iter().enumerate() {
+        for sub in (up.partition + 1)..=n {
+            let count = plan
+                .batches
+                .iter()
+                .filter(|b| b.sub == sub && b.members.contains(&ui))
+                .count();
+            if count == 0 {
+                return Err(Violation::MissingBatch { user: ui, sub });
+            }
+            if count > 1 {
+                return Err(Violation::DuplicateBatch { user: ui, sub, count });
+            }
+        }
+    }
+
+    // Batch-level checks.
+    for b in &plan.batches {
+        // Duration bookkeeping: F_n(actual size), except PS which shares
+        // the GPU M-ways.
+        let want = match plan.discipline {
+            Discipline::ProcessorSharing => m as f64 * cfg.profile.f(b.sub, 1),
+            _ => cfg.profile.f(b.sub, b.size()),
+        };
+        if (b.duration - want).abs() > EPS * want.max(1e-9) {
+            return Err(Violation::Duration { sub: b.sub, got: b.duration, want });
+        }
+        // (9) readiness: every member's input is at the server by b.start.
+        for &ui in &b.members {
+            let up = &plan.users[ui];
+            let ready = if b.sub == up.partition + 1 {
+                up.upload_end
+            } else {
+                // Previous sub-task's batch must have completed.
+                plan.batches
+                    .iter()
+                    .find(|pb| pb.sub + 1 == b.sub && pb.members.contains(&ui))
+                    .map(|pb| pb.end())
+                    .unwrap_or(f64::INFINITY)
+            };
+            if ready > b.start + EPS {
+                return Err(Violation::NotReady { sub: b.sub, start: b.start, user: ui, ready });
+            }
+        }
+    }
+
+    // (11) exclusive occupancy — batched and sequential disciplines only.
+    if plan.discipline != Discipline::ProcessorSharing {
+        let mut sorted: Vec<&_> = plan.batches.iter().collect();
+        sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        for w in sorted.windows(2) {
+            if w[1].start < w[0].end() - EPS {
+                return Err(Violation::Overlap { first_end: w[0].end(), second: w[1].start });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::types::Batch;
+    use crate::algo::{baselines, ipssa, og};
+
+    use crate::config::SystemConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_solvers_produce_feasible_plans() {
+        for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+            for seed in 0..5 {
+                let s = Scenario::draw(&cfg, 8, &mut Rng::seed_from(seed));
+                for solver in baselines::offline_suite() {
+                    let r = solver.solve(&s);
+                    check(&r.scenario, &r.plan)
+                        .unwrap_or_else(|v| panic!("{} seed {seed}: {v}", solver.name()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn og_plans_are_feasible() {
+        let cfg = SystemConfig::dssd3_default();
+        for seed in 0..5 {
+            let s = Scenario::draw_mixed_deadlines(&cfg, 9, 0.25, 1.0, &mut Rng::seed_from(seed));
+            let plan = og::solve(&s);
+            check(&s, &plan).unwrap_or_else(|v| panic!("seed {seed}: {v}"));
+        }
+    }
+
+    #[test]
+    fn detects_deadline_violation() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 3, &mut Rng::seed_from(1));
+        let mut plan = ipssa::solve(&s);
+        plan.users[0].finish = 99.0;
+        assert!(matches!(check(&s, &plan), Err(Violation::Deadline { user: 0, .. })));
+    }
+
+    #[test]
+    fn detects_energy_mismatch() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 3, &mut Rng::seed_from(1));
+        let mut plan = ipssa::solve(&s);
+        plan.users[1].energy *= 2.0;
+        assert!(matches!(check(&s, &plan), Err(Violation::Energy { user: 1, .. })));
+    }
+
+    #[test]
+    fn detects_occupancy_overlap() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 2, &mut Rng::seed_from(2));
+        let members: Vec<usize> = vec![0, 1];
+        let mut plan = ipssa::solve_group(&s, &members, 0.25, 0.0).plan;
+        if plan.batches.len() < 2 {
+            // Force two overlapping batches artificially.
+            plan.batches = vec![
+                Batch { sub: 1, start: 0.0, duration: 1.0, members: vec![] },
+                Batch { sub: 2, start: 0.5, duration: 1.0, members: vec![] },
+            ];
+        } else {
+            plan.batches[1].start = plan.batches[0].start;
+        }
+        // Either Overlap or a readiness/duration error must fire.
+        assert!(check(&s, &plan).is_err());
+    }
+
+    #[test]
+    fn detects_missing_batch_membership() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 4, &mut Rng::seed_from(40));
+        let mut plan = ipssa::solve(&s);
+        if let Some(b) = plan.batches.first_mut() {
+            if !b.members.is_empty() {
+                b.members.remove(0);
+                assert!(check(&s, &plan).is_err());
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Algorithm 2 — IP-SSA (independent partitioning, same-sub-task
+//! aggregating) for realistic batch-size-dependent `F_n(b)`.
+//!
+//! Directly applying Alg. 1 with `F_n(1)` can violate deadlines once the
+//! realized batches are larger than 1. IP-SSA sweeps the assumed worst-case
+//! batch size `b = M..1`: each assumption yields a (more conservative)
+//! schedule via eq. 17 with `F_n(b)`; a solution is *consistent* when its
+//! realized maximum batch size `b_max ≤ b`. The least-energy consistent
+//! solution wins. O(M²N).
+
+use crate::scenario::Scenario;
+
+use super::traverse;
+use super::types::{Discipline, Plan, SolveResult, Solver, UserPlan};
+
+/// Result of solving one (sub-)group with IP-SSA.
+#[derive(Debug, Clone)]
+pub struct GroupSolution {
+    pub plan: Plan,
+    pub energy: f64,
+}
+
+/// IP-SSA over a user subset (identified by scenario indices `members`)
+/// with group deadline `l̃` and a lower bound on the first batch start
+/// (`earliest_start`, used by OG to serialize adjacent groups; pass 0.0
+/// standalone).
+pub fn solve_group(
+    scenario: &Scenario,
+    members: &[usize],
+    deadline: f64,
+    earliest_start: f64,
+) -> GroupSolution {
+    let cfg = &scenario.cfg;
+    let n = cfg.net.n();
+    let m = members.len();
+    assert!(m > 0, "empty group");
+
+    let mut best: Option<GroupSolution> = None;
+
+    // b = M .. 1 (paper step 2). Every iteration also implicitly contains
+    // the all-local fallback (b_max = 0 ≤ b), so a feasible solution always
+    // exists provided full-local fits each user's window.
+    for b in (1..=m).rev() {
+        let starts = traverse::batch_starts(cfg, deadline, b);
+        let mut plans: Vec<UserPlan> = Vec::with_capacity(m);
+        let mut ok = true;
+        for &mi in members {
+            match traverse::best_partition(cfg, &scenario.users[mi], &starts, deadline) {
+                Some(c) => plans.push(c.plan),
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        // Realized maximum batch size: with monotone offloading the batch
+        // for sub-task n is everyone with partition < n, so the largest
+        // batch is sub-task N's — the full offloader count.
+        let b_max = plans.iter().filter(|u| u.partition < n).count();
+        if b_max > b {
+            continue; // inconsistent assumption (paper step 6)
+        }
+        // OG serialization: the first realized batch must not start before
+        // the previous group's window ends.
+        if b_max > 0 {
+            let first_sub = plans.iter().map(|u| u.partition + 1).min().unwrap();
+            if starts[first_sub - 1] < earliest_start - 1e-12 {
+                continue;
+            }
+        }
+        let energy: f64 = plans.iter().map(|u| u.energy).sum();
+        if best.as_ref().map_or(true, |s| energy < s.energy - 1e-15) {
+            let mut plans = plans;
+            let batches = traverse::assemble_batches(cfg, &mut plans, members, &starts);
+            best = Some(GroupSolution {
+                plan: Plan {
+                    users: plans,
+                    batches,
+                    groups: vec![members.to_vec()],
+                    discipline: Discipline::Batched,
+                    assumed_batch: b,
+                },
+                energy,
+            });
+        }
+    }
+
+    best.unwrap_or_else(|| all_local_fallback(scenario, members, deadline))
+}
+
+/// Forced full-local plan (the online emergency path: every user runs at
+/// the frequency that just meets its *own* deadline, `f_max` if needed).
+pub fn all_local_fallback(scenario: &Scenario, members: &[usize], deadline: f64) -> GroupSolution {
+    let cfg = &scenario.cfg;
+    let n = cfg.net.n();
+    let dev = &cfg.device;
+    let t_fmax = dev.prefix_latency_fmax(&cfg.profile, n);
+    let e_fmax = dev.prefix_energy_fmax(&cfg.profile, n);
+    let users: Vec<UserPlan> = members
+        .iter()
+        .map(|&mi| {
+            let u = &scenario.users[mi];
+            let avail = (u.deadline.max(deadline) - u.arrival).max(t_fmax);
+            let phi = dev.frequency_for(t_fmax, avail).unwrap_or(1.0);
+            let run = t_fmax / phi;
+            UserPlan {
+                partition: n,
+                phi,
+                energy: dev.energy_at(e_fmax, phi),
+                local_finish: u.arrival + run,
+                upload_end: u.arrival + run,
+                finish: u.arrival + run,
+            }
+        })
+        .collect();
+    GroupSolution {
+        energy: users.iter().map(|u| u.energy).sum(),
+        plan: Plan {
+            users,
+            batches: vec![],
+            groups: vec![members.to_vec()],
+            discipline: Discipline::Batched,
+            assumed_batch: 0,
+        },
+    }
+}
+
+/// IP-SSA over a whole scenario. The group deadline is the minimum user
+/// deadline (with equal deadlines — the intended IP-SSA setting — this is
+/// just `l`).
+pub fn solve(scenario: &Scenario) -> Plan {
+    let members: Vec<usize> = (0..scenario.m()).collect();
+    let deadline = scenario
+        .users
+        .iter()
+        .map(|u| u.deadline)
+        .fold(f64::INFINITY, f64::min);
+    solve_group(scenario, &members, deadline, 0.0).plan
+}
+
+/// [`Solver`] wrapper.
+pub struct IpSsa;
+
+impl Solver for IpSsa {
+    fn name(&self) -> &'static str {
+        "IP-SSA"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> SolveResult {
+        SolveResult { plan: solve(scenario), scenario: scenario.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn consistency_b_max_le_assumed() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 10, &mut Rng::seed_from(3));
+        let plan = solve(&s);
+        let n = cfg.net.n();
+        let b_max = plan.users.iter().filter(|u| u.partition < n).count();
+        assert!(b_max <= plan.assumed_batch.max(1), "b_max={b_max} assumed={}", plan.assumed_batch);
+    }
+
+    #[test]
+    fn no_deadline_violation_with_growing_fn() {
+        // The whole point of IP-SSA: realized batch latency never pushes the
+        // last batch past the deadline.
+        let cfg = SystemConfig::dssd3_default();
+        for seed in 0..20 {
+            let s = Scenario::draw(&cfg, 12, &mut Rng::seed_from(seed));
+            let plan = solve(&s);
+            for u in &plan.users {
+                assert!(u.finish <= 0.25 + 1e-9, "seed {seed}: finish {}", u.finish);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_or_matches_all_local() {
+        let cfg = SystemConfig::mobilenet_default();
+        for seed in 0..10 {
+            let s = Scenario::draw(&cfg, 8, &mut Rng::seed_from(seed));
+            let ipssa = solve(&s).total_energy();
+            let members: Vec<usize> = (0..8).collect();
+            let lc = all_local_fallback(&s, &members, cfg.deadline_s).energy;
+            assert!(ipssa <= lc + 1e-9, "seed {seed}: {ipssa} > {lc}");
+        }
+    }
+
+    #[test]
+    fn mobilenet_cpu_users_offload_rear() {
+        // CPU device (E_m two orders worse): offloading the rear sub-tasks
+        // should be strictly better than all-local for most draws.
+        let cfg = SystemConfig::mobilenet_default();
+        let s = Scenario::draw(&cfg, 10, &mut Rng::seed_from(1));
+        let plan = solve(&s);
+        assert!(plan.offloader_count() >= 5, "only {} offloaders", plan.offloader_count());
+    }
+
+    #[test]
+    fn earliest_start_constrains_schedule() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 6, &mut Rng::seed_from(9));
+        let members: Vec<usize> = (0..6).collect();
+        let free = solve_group(&s, &members, 0.25, 0.0);
+        // Demand the server stays idle until just before the deadline:
+        // batching becomes impossible, solution degrades to all-local.
+        let squeezed = solve_group(&s, &members, 0.25, 0.249);
+        assert!(squeezed.energy >= free.energy - 1e-12);
+        if let Some((first, _)) = squeezed.plan.busy_window() {
+            assert!(first >= 0.249 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn group_solution_respects_membership() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = Scenario::draw(&cfg, 6, &mut Rng::seed_from(4));
+        let sol = solve_group(&s, &[1, 3, 5], 0.25, 0.0);
+        assert_eq!(sol.plan.users.len(), 3);
+        for b in &sol.plan.batches {
+            for m in &b.members {
+                assert!([1usize, 3, 5].contains(m));
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Offline offloading + scheduling algorithms (paper §III–§IV) and the
+//! §V-C baselines.
+//!
+//! | paper | module |
+//! |---|---|
+//! | Alg. 1 (traverse, optimal under simplifications) | [`traverse`] |
+//! | Alg. 2 (IP-SSA) | [`ipssa`] |
+//! | Alg. 3 (OG dynamic program) | [`og`] |
+//! | LC / PS / FIFO / IP-SSA-NP baselines | [`baselines`] |
+//! | exhaustive optimality oracles | [`brute`] |
+//! | P1 constraint validator | [`feasibility`] |
+
+pub mod baselines;
+pub mod brute;
+pub mod feasibility;
+pub mod ipssa;
+pub mod multigpu;
+pub mod og;
+pub mod traverse;
+pub mod types;
+
+pub use types::{Batch, Discipline, Plan, SolveResult, Solver, UserPlan};

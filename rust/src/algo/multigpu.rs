@@ -1,0 +1,231 @@
+//! Multi-GPU edge server extension (paper footnote 1 and §VI future work:
+//! "by assigning users to different GPUs, the proposed algorithm can be
+//! easily extended to the multiple GPUs scenario").
+//!
+//! Each GPU is an independent batch-processing resource with the same
+//! `F_n(·)` profile; a user is associated with exactly one GPU and the
+//! per-GPU sub-problem is solved with IP-SSA (equal deadlines) or OG
+//! (mixed). The association policies trade optimality for cost:
+//!
+//! * [`Assign::RoundRobin`] — rate-ranked interleave: sort users by uplink
+//!   rate and deal them out like cards, so every GPU gets a similar mix of
+//!   good and bad channels (the load-balancing heuristic §VI gestures at).
+//! * [`Assign::GreedyEnergy`] — users join the GPU with the least marginal
+//!   solved energy; O(M² · solve) but noticeably better when channels are
+//!   skewed.
+
+use crate::scenario::Scenario;
+
+use super::{ipssa, og};
+use super::types::Plan;
+
+/// User→GPU association policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Assign {
+    RoundRobin,
+    GreedyEnergy,
+}
+
+/// Which per-GPU solver runs on each partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InnerSolver {
+    IpSsa,
+    Og,
+}
+
+/// A solved multi-GPU instance.
+#[derive(Debug, Clone)]
+pub struct MultiGpuPlan {
+    /// `assignment[user] = gpu index`.
+    pub assignment: Vec<usize>,
+    /// Per-GPU plans over the *sub-scenario* of that GPU's users (user
+    /// indices in each plan refer to `members[g]`).
+    pub plans: Vec<Plan>,
+    /// `members[g]` = scenario user indices served by GPU `g`.
+    pub members: Vec<Vec<usize>>,
+}
+
+impl MultiGpuPlan {
+    pub fn total_energy(&self) -> f64 {
+        self.plans.iter().map(Plan::total_energy).sum()
+    }
+
+    pub fn mean_energy(&self) -> f64 {
+        let users: usize = self.members.iter().map(Vec::len).sum();
+        if users == 0 {
+            0.0
+        } else {
+            self.total_energy() / users as f64
+        }
+    }
+}
+
+fn solve_subset(scenario: &Scenario, members: &[usize], inner: InnerSolver) -> Plan {
+    let sub = scenario.subset(members);
+    match inner {
+        InnerSolver::IpSsa => ipssa::solve(&sub),
+        InnerSolver::Og => og::solve(&sub),
+    }
+}
+
+/// Solve an `gpus`-GPU instance.
+pub fn solve(scenario: &Scenario, gpus: usize, assign: Assign, inner: InnerSolver) -> MultiGpuPlan {
+    assert!(gpus > 0, "need at least one GPU");
+    let m = scenario.m();
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); gpus];
+    let mut assignment = vec![0usize; m];
+
+    match assign {
+        Assign::RoundRobin => {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| {
+                scenario.users[b].rate_up.partial_cmp(&scenario.users[a].rate_up).unwrap()
+            });
+            for (rank, &u) in order.iter().enumerate() {
+                let g = rank % gpus;
+                assignment[u] = g;
+                members[g].push(u);
+            }
+        }
+        Assign::GreedyEnergy => {
+            // Deadline-ascending insertion keeps each GPU's subset sorted
+            // the way OG wants it; each user tries every GPU and joins the
+            // cheapest.
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| {
+                scenario.users[a].deadline.partial_cmp(&scenario.users[b].deadline).unwrap()
+            });
+            let mut cur_energy = vec![0.0f64; gpus];
+            for &u in &order {
+                let mut best = (f64::INFINITY, 0usize);
+                for g in 0..gpus {
+                    let mut trial = members[g].clone();
+                    trial.push(u);
+                    let e = solve_subset(scenario, &trial, inner).total_energy();
+                    let marginal = e - cur_energy[g];
+                    if marginal < best.0 {
+                        best = (marginal, g);
+                    }
+                }
+                let g = best.1;
+                assignment[u] = g;
+                members[g].push(u);
+                cur_energy[g] += best.0;
+            }
+        }
+    }
+
+    // Keep scenario order inside each GPU (subset() preserves order).
+    for mem in &mut members {
+        mem.sort_unstable();
+    }
+    let plans = members
+        .iter()
+        .map(|mem| {
+            if mem.is_empty() {
+                Plan {
+                    users: vec![],
+                    batches: vec![],
+                    groups: vec![],
+                    discipline: super::types::Discipline::Batched,
+                    assumed_batch: 0,
+                }
+            } else {
+                solve_subset(scenario, mem, inner)
+            }
+        })
+        .collect();
+    MultiGpuPlan { assignment, plans, members }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::feasibility;
+    use crate::config::SystemConfig;
+    use crate::util::rng::Rng;
+
+    fn draw(m: usize, seed: u64) -> Scenario {
+        Scenario::draw(&SystemConfig::dssd3_default(), m, &mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn assignment_partitions_users() {
+        let s = draw(11, 1);
+        for assign in [Assign::RoundRobin, Assign::GreedyEnergy] {
+            let mp = solve(&s, 3, assign, InnerSolver::IpSsa);
+            let mut seen = vec![false; 11];
+            for (g, mem) in mp.members.iter().enumerate() {
+                for &u in mem {
+                    assert!(!seen[u], "user {u} on two GPUs");
+                    seen[u] = true;
+                    assert_eq!(mp.assignment[u], g);
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn per_gpu_plans_are_feasible() {
+        let s = draw(9, 2);
+        let mp = solve(&s, 2, Assign::RoundRobin, InnerSolver::IpSsa);
+        for (mem, plan) in mp.members.iter().zip(&mp.plans) {
+            if mem.is_empty() {
+                continue;
+            }
+            let sub = s.subset(mem);
+            // Batch member indices are subset-local after re-solving on the
+            // subset scenario; validate against it.
+            feasibility::check(&sub, &remap(plan, mem)).unwrap();
+        }
+    }
+
+    /// Plans from solve_subset carry scenario indices in batches (via
+    /// ipssa::solve over the subset scenario, whose users are 0..k) — remap
+    /// is the identity here but kept for clarity.
+    fn remap(plan: &Plan, _mem: &[usize]) -> Plan {
+        plan.clone()
+    }
+
+    #[test]
+    fn more_gpus_never_hurt_much_and_usually_help() {
+        // Fig. 6(a) discussion: "deploying more GPUs on the edge server can
+        // also reduce the energy per user". With 3dssd at W=1 MHz the
+        // single GPU saturates quickly, so splitting users across GPUs
+        // should reduce energy.
+        let s = draw(12, 3);
+        let e1 = solve(&s, 1, Assign::RoundRobin, InnerSolver::IpSsa).total_energy();
+        let e2 = solve(&s, 2, Assign::RoundRobin, InnerSolver::IpSsa).total_energy();
+        let e4 = solve(&s, 4, Assign::RoundRobin, InnerSolver::IpSsa).total_energy();
+        assert!(e2 <= e1 + 1e-9, "2 GPUs worse than 1: {e2} vs {e1}");
+        assert!(e4 <= e2 + 1e-9, "4 GPUs worse than 2: {e4} vs {e2}");
+        assert!(e4 < e1 * 0.95, "4 GPUs should help a saturated cell");
+    }
+
+    #[test]
+    fn greedy_no_worse_than_round_robin_on_average() {
+        let mut rr = 0.0;
+        let mut greedy = 0.0;
+        for seed in 0..6 {
+            let s = draw(10, 100 + seed);
+            rr += solve(&s, 2, Assign::RoundRobin, InnerSolver::IpSsa).total_energy();
+            greedy += solve(&s, 2, Assign::GreedyEnergy, InnerSolver::IpSsa).total_energy();
+        }
+        assert!(greedy <= rr * 1.02 + 1e-9, "greedy {greedy} vs rr {rr}");
+    }
+
+    #[test]
+    fn og_inner_solver_with_mixed_deadlines() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = crate::scenario::Scenario::draw_mixed_deadlines(
+            &cfg, 8, 0.25, 1.0, &mut Rng::seed_from(7));
+        let mp = solve(&s, 2, Assign::GreedyEnergy, InnerSolver::Og);
+        for (mem, plan) in mp.members.iter().zip(&mp.plans) {
+            if !mem.is_empty() {
+                feasibility::check(&s.subset(mem), plan).unwrap();
+            }
+        }
+        assert!(mp.total_energy().is_finite());
+    }
+}

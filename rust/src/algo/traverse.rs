@@ -1,0 +1,326 @@
+//! Algorithm 1 — the traverse solver for the simplified problem.
+//!
+//! Under the two simplifications (same deadline `l̃`, batch-size-independent
+//! edge latency) Theorem 1 proves the optimum has (1) monotone offloading,
+//! (2) one aggregated batch per sub-task chained back-to-back so the last
+//! batch ends exactly at the deadline (eq. 17), and (3) the lowest feasible
+//! DVFS frequency (eq. 18). That decouples users: each independently picks
+//! the partition point minimizing its own energy.
+//!
+//! This module implements the per-user traverse given an *arbitrary* batch
+//! start schedule, so it is reused by IP-SSA (which re-derives the schedule
+//! for each assumed batch size `b`) and by the footnote-3 extension to
+//! per-user arrival offsets.
+
+use crate::config::SystemConfig;
+use crate::scenario::{Scenario, User};
+
+use super::types::{Batch, Discipline, Plan, UserPlan};
+
+/// Batch start times `s_1..s_N` from eq. 17 with `F_n(b)`:
+/// `s_N = l̃ - F_N(b)`, `s_{n-1} = s_n - F_{n-1}(b)`.
+///
+/// `starts[n-1]` is `s_n`. Values may be negative when `Σ F_n(b) > l̃`;
+/// the per-user traverse then finds those upload deadlines unreachable.
+pub fn batch_starts(cfg: &SystemConfig, deadline: f64, b: usize) -> Vec<f64> {
+    let n = cfg.net.n();
+    let mut starts = vec![0.0; n];
+    let mut t = deadline;
+    for sub in (1..=n).rev() {
+        t -= cfg.profile.f(sub, b);
+        starts[sub - 1] = t;
+    }
+    starts
+}
+
+/// Outcome of the per-user traverse for one user.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Choice {
+    pub plan: UserPlan,
+}
+
+/// Per-user optimal partition point given batch starts (Alg. 1 steps 3–8).
+///
+/// `deadline` is the group deadline `l̃` used for the full-local option;
+/// `user.arrival` is the footnote-3 arrival offset `t_{m,0}`.
+/// Returns `None` when no partition point is feasible (can only happen when
+/// `l̃ - arrival < α Σ F_n(1)`, i.e. even full-local at `f_max` misses).
+pub fn best_partition(cfg: &SystemConfig, user: &User, starts: &[f64], deadline: f64) -> Option<Choice> {
+    let n = cfg.net.n();
+    debug_assert_eq!(starts.len(), n);
+    let dev = &cfg.device;
+    let mut best: Option<Choice> = None;
+
+    // Running prefix aggregates (keeps the loop O(N) total).
+    let mut t_fmax = 0.0; // α Σ_{i<=p} F_i(1)
+    let mut e_fmax = 0.0; // Σ_{i<=p} e_i(f_max)
+
+    for p in 0..=n {
+        if p > 0 {
+            t_fmax += dev.local_latency_fmax(&cfg.profile, p);
+            e_fmax += dev.local_energy_fmax(&cfg.profile, p);
+        }
+        let cand = if p == n {
+            // Full local: fit the whole task into [arrival, deadline].
+            let avail = deadline - user.arrival;
+            dev.frequency_for(t_fmax, avail).map(|phi| {
+                let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                let finish = user.arrival + run;
+                Choice {
+                    plan: UserPlan {
+                        partition: p,
+                        phi,
+                        energy: dev.energy_at(e_fmax, phi),
+                        local_finish: finish,
+                        upload_end: finish,
+                        finish,
+                    },
+                }
+            })
+        } else {
+            // Offload from sub-task p+1: the boundary tensor must be fully
+            // uploaded by s_{p+1} (eq. 9), leaving the local prefix the
+            // window [arrival, s_{p+1} - B_p/R_u] (eq. 18).
+            let upload_t = cfg.net.boundary_bits(p) / user.rate_up;
+            let avail = starts[p] - upload_t - user.arrival;
+            dev.frequency_for(t_fmax, avail).map(|phi| {
+                let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                let local_finish = user.arrival + run;
+                Choice {
+                    plan: UserPlan {
+                        partition: p,
+                        phi,
+                        energy: dev.energy_at(e_fmax, phi)
+                            + upload_t * cfg.radio.tx_circuit_w,
+                        local_finish,
+                        upload_end: local_finish + upload_t,
+                        // Provisional: assembly rewrites it to the actual
+                        // end of the sub-task-N batch.
+                        finish: deadline,
+                    },
+                }
+            })
+        };
+        if let Some(c) = cand {
+            let better = match &best {
+                None => true,
+                Some(b) => c.plan.energy < b.plan.energy - 1e-15,
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+    }
+    best
+}
+
+/// Assemble the aggregated batch schedule (Theorem 1.2) for a set of
+/// per-user plans: the batch for sub-task `n` starts at `starts[n-1]` and
+/// contains every member with `partition < n`. Durations use the *actual*
+/// batch sizes, which are ≤ the assumption used to derive `starts`, so
+/// occupancy (eq. 11) is preserved.
+///
+/// `members[i]` maps local index `i` to the scenario user index recorded in
+/// the batches. Rewrites each offloader's `finish` to its sub-task-N batch
+/// end.
+pub fn assemble_batches(
+    cfg: &SystemConfig,
+    plans: &mut [UserPlan],
+    members: &[usize],
+    starts: &[f64],
+) -> Vec<Batch> {
+    let n = cfg.net.n();
+    let mut batches = Vec::new();
+    for sub in 1..=n {
+        let batch_members: Vec<usize> = plans
+            .iter()
+            .enumerate()
+            .filter(|(_, u)| u.partition < sub)
+            .map(|(i, _)| members[i])
+            .collect();
+        if batch_members.is_empty() {
+            continue;
+        }
+        let size = batch_members.len();
+        batches.push(Batch {
+            sub,
+            start: starts[sub - 1],
+            duration: cfg.profile.f(sub, size),
+            members: batch_members,
+        });
+    }
+    if let Some(last) = batches.last() {
+        if last.sub == n {
+            let end = last.end();
+            for u in plans.iter_mut() {
+                if u.partition < n {
+                    u.finish = end;
+                }
+            }
+        }
+    }
+    batches
+}
+
+/// Full Algorithm 1: schedule from eq. 17 with `F_n(b)`, then independent
+/// per-user traversal. `b = 1` is the paper's simplified-optimal setting.
+pub fn solve_with_batch(scenario: &Scenario, deadline: f64, b: usize) -> Option<Plan> {
+    let cfg = &scenario.cfg;
+    let starts = batch_starts(cfg, deadline, b);
+    let mut plans = Vec::with_capacity(scenario.m());
+    for user in &scenario.users {
+        plans.push(best_partition(cfg, user, &starts, deadline)?.plan);
+    }
+    let members: Vec<usize> = (0..scenario.m()).collect();
+    let batches = assemble_batches(cfg, &mut plans, &members, &starts);
+    Some(Plan {
+        users: plans,
+        batches,
+        groups: vec![members],
+        discipline: Discipline::Batched,
+        assumed_batch: b,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::scenario::Scenario;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_starts_chain_back_from_deadline() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = batch_starts(&cfg, 0.25, 1);
+        // s_N + F_N(1) == l.
+        assert!((s[4] + cfg.profile.f(5, 1) - 0.25).abs() < 1e-12);
+        // s_{n+1} - s_n == F_n(1).
+        for n in 1..5 {
+            assert!((s[n] - s[n - 1] - cfg.profile.f(n, 1)).abs() < 1e-12);
+        }
+        // Total edge time 48 ms -> s_1 = 202 ms.
+        assert!((s[0] - 0.202).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_starts_can_go_negative() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = batch_starts(&cfg, 0.25, 32);
+        assert!(s[0] < 0.0, "b=32 occupancy exceeds the deadline");
+    }
+
+    #[test]
+    fn good_channel_offloads_everything_for_dssd3() {
+        // 3dssd: intermediates >= input, so with a fast channel the best
+        // partition is p = 0 (ship the raw input, zero local energy).
+        let cfg = SystemConfig::dssd3_default();
+        let user = User {
+            distance_m: 1.0,
+            rate_up: 100e6,
+            rate_dn: 100e6,
+            deadline: 0.25,
+            arrival: 0.0,
+        };
+        let starts = batch_starts(&cfg, 0.25, 1);
+        let c = best_partition(&cfg, &user, &starts, 0.25).unwrap();
+        assert_eq!(c.plan.partition, 0);
+        assert!(c.plan.energy < 0.05, "upload-only energy, got {}", c.plan.energy);
+    }
+
+    #[test]
+    fn dead_channel_stays_local() {
+        let cfg = SystemConfig::dssd3_default();
+        let user = User {
+            distance_m: 100.0,
+            rate_up: 1e3, // 1 kbps: uploading 2 Mbit is hopeless
+            rate_dn: 1e3,
+            deadline: 0.25,
+            arrival: 0.0,
+        };
+        let starts = batch_starts(&cfg, 0.25, 1);
+        let c = best_partition(&cfg, &user, &starts, 0.25).unwrap();
+        assert_eq!(c.plan.partition, cfg.net.n());
+        // Full local stretched to the deadline: e = E_fmax (48/250)^2.
+        let e_fmax = 0.048 * 300.0;
+        let want = e_fmax * (0.048f64 / 0.25).powi(2);
+        assert!((c.plan.energy - want).abs() < 1e-3, "{} vs {}", c.plan.energy, want);
+    }
+
+    #[test]
+    fn arrival_offset_shrinks_window() {
+        // Footnote 3: a late arrival must run faster (higher φ / energy) or
+        // offload differently.
+        let cfg = SystemConfig::dssd3_default();
+        let starts = batch_starts(&cfg, 0.25, 1);
+        let mk = |arrival| User {
+            distance_m: 50.0,
+            rate_up: 1e3,
+            rate_dn: 1e3,
+            deadline: 0.25,
+            arrival,
+        };
+        let early = best_partition(&cfg, &mk(0.0), &starts, 0.25).unwrap();
+        let late = best_partition(&cfg, &mk(0.15), &starts, 0.25).unwrap();
+        assert!(late.plan.phi > early.plan.phi);
+        assert!(late.plan.energy > early.plan.energy);
+    }
+
+    #[test]
+    fn infeasible_arrival_returns_none() {
+        let cfg = SystemConfig::dssd3_default();
+        let starts = batch_starts(&cfg, 0.25, 1);
+        let user = User {
+            distance_m: 50.0,
+            rate_up: 1e3,
+            rate_dn: 1e3,
+            deadline: 0.25,
+            arrival: 0.249, // 1 ms left: even f_max local misses
+        };
+        assert!(best_partition(&cfg, &user, &starts, 0.25).is_none());
+    }
+
+    #[test]
+    fn solve_aggregates_same_subtasks_into_one_batch() {
+        let cfg = SystemConfig::dssd3_default();
+        let mut rng = Rng::seed_from(42);
+        let scenario = Scenario::draw(&cfg, 8, &mut rng);
+        let plan = solve_with_batch(&scenario, 0.25, 1).unwrap();
+        // Theorem 1.2: at most one batch per sub-task.
+        for sub in 1..=cfg.net.n() {
+            assert!(plan.batches.iter().filter(|b| b.sub == sub).count() <= 1);
+        }
+        // Batch membership == users with partition < sub.
+        for b in &plan.batches {
+            let want: Vec<usize> = plan
+                .users
+                .iter()
+                .enumerate()
+                .filter(|(_, u)| u.partition < b.sub)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(b.members, want);
+        }
+        // Offloaders' finish is the end of the last batch.
+        if let Some(last) = plan.batches.last() {
+            if last.sub == cfg.net.n() {
+                for u in plan.users.iter().filter(|u| u.partition < cfg.net.n()) {
+                    assert!((u.finish - last.end()).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_sizes_grow_toward_rear_subtasks() {
+        // Monotone offloading => b_n non-decreasing in n (Table III's shape).
+        let cfg = SystemConfig::mobilenet_default();
+        let mut rng = Rng::seed_from(7);
+        let scenario = Scenario::draw(&cfg, 10, &mut rng);
+        let plan = solve_with_batch(&scenario, 0.05, 1).unwrap();
+        let sizes: Vec<usize> = (1..=cfg.net.n()).map(|n| plan.batch_size_of_sub(n)).collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] >= w[0], "sizes {sizes:?}");
+        }
+    }
+}

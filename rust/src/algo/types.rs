@@ -1,0 +1,169 @@
+//! Shared solution types for the offline solvers.
+//!
+//! All solvers emit a [`Plan`]: per-user offloading decisions (partition
+//! point `p`, DVFS ratio `φ`, energy) plus the edge-server batch schedule.
+//! Monotone offloading (Theorem 1.1) makes a partition point a complete
+//! description of `x_{m,n,k}`: sub-tasks `1..=p` run locally, `p+1..=N` are
+//! offloaded; the batch for sub-task `n` contains every user with `p < n`.
+
+use crate::scenario::Scenario;
+
+/// One user's offloading decision and realized timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserPlan {
+    /// Partition point `p ∈ 0..=N`: number of locally computed sub-tasks.
+    pub partition: usize,
+    /// DVFS frequency ratio `φ = f/f_max` used for the local prefix.
+    pub phi: f64,
+    /// Total user energy (J): local compute + upload (+ download).
+    pub energy: f64,
+    /// Completion time of the local prefix (absolute, s).
+    pub local_finish: f64,
+    /// Completion time of the intermediate-data upload (= `local_finish`
+    /// when nothing is uploaded).
+    pub upload_end: f64,
+    /// Completion time of sub-task `N` (absolute, s).
+    pub finish: f64,
+}
+
+/// One edge batch: all members execute sub-task `sub` concurrently.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// 1-based sub-task index `n`.
+    pub sub: usize,
+    /// Start time `s_k` (absolute, s).
+    pub start: f64,
+    /// Execution latency `F_n(size)` with the *actual* batch size.
+    pub duration: f64,
+    /// Scenario user indices aggregated in this batch.
+    pub members: Vec<usize>,
+}
+
+impl Batch {
+    pub fn end(&self) -> f64 {
+        self.start + self.duration
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Edge-service discipline a plan was built for (decides which feasibility
+/// constraints apply — PS shares the GPU, so no occupancy exclusivity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Concurrent batch processing (the paper's system; IP-SSA / OG).
+    Batched,
+    /// Sequential FIFO occupancy, batch size 1.
+    Sequential,
+    /// Processor sharing: every sub-task takes `M · F_n(1)`.
+    ProcessorSharing,
+}
+
+/// A complete offloading + scheduling solution.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub users: Vec<UserPlan>,
+    /// Batch schedule sorted by start time.
+    pub batches: Vec<Batch>,
+    /// User groups (OG); single group = everything else. Scenario indices.
+    pub groups: Vec<Vec<usize>>,
+    pub discipline: Discipline,
+    /// The batch-size assumption `b` IP-SSA converged to (reporting).
+    pub assumed_batch: usize,
+}
+
+impl Plan {
+    /// Total user energy (the objective of P1).
+    pub fn total_energy(&self) -> f64 {
+        self.users.iter().map(|u| u.energy).sum()
+    }
+
+    /// Mean energy per user (the paper's Fig. 5/6 y-axis).
+    pub fn mean_energy(&self) -> f64 {
+        if self.users.is_empty() {
+            0.0
+        } else {
+            self.total_energy() / self.users.len() as f64
+        }
+    }
+
+    /// Realized batch size of sub-task `n` summed over batches
+    /// (Table III reports its average over draws).
+    pub fn batch_size_of_sub(&self, n: usize) -> usize {
+        self.batches.iter().filter(|b| b.sub == n).map(Batch::size).sum()
+    }
+
+    /// Number of users that offload at least one sub-task (= union of all
+    /// batch memberships).
+    pub fn offloader_count(&self) -> usize {
+        let mut seen = vec![false; self.users.len()];
+        for b in &self.batches {
+            for &m in &b.members {
+                seen[m] = true;
+            }
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+
+    /// Edge busy interval `(first start, last end)`, if any batch exists.
+    pub fn busy_window(&self) -> Option<(f64, f64)> {
+        let first = self.batches.first()?.start;
+        let last = self.batches.iter().map(Batch::end).fold(f64::MIN, f64::max);
+        Some((first, last))
+    }
+}
+
+/// Solver result: the plan plus the (possibly transformed) scenario it is a
+/// plan *for* — IP-SSA-NP plans against the unpartitioned model view.
+pub struct SolveResult {
+    pub plan: Plan,
+    pub scenario: Scenario,
+}
+
+impl SolveResult {
+    pub fn per_user_energy(&self) -> Vec<f64> {
+        self.plan.users.iter().map(|u| u.energy).collect()
+    }
+}
+
+/// Common interface for every offline algorithm and baseline.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+    fn solve(&self, scenario: &Scenario) -> SolveResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_with(users: Vec<UserPlan>, batches: Vec<Batch>) -> Plan {
+        Plan { users, batches, groups: vec![], discipline: Discipline::Batched, assumed_batch: 1 }
+    }
+
+    fn up(e: f64) -> UserPlan {
+        UserPlan { partition: 0, phi: 0.1, energy: e, local_finish: 0.0, upload_end: 0.0, finish: 0.0 }
+    }
+
+    #[test]
+    fn energy_aggregation() {
+        let p = plan_with(vec![up(1.0), up(2.0)], vec![]);
+        assert_eq!(p.total_energy(), 3.0);
+        assert_eq!(p.mean_energy(), 1.5);
+        assert_eq!(plan_with(vec![], vec![]).mean_energy(), 0.0);
+    }
+
+    #[test]
+    fn batch_accessors() {
+        let b = Batch { sub: 2, start: 1.0, duration: 0.5, members: vec![0, 3] };
+        assert_eq!(b.end(), 1.5);
+        assert_eq!(b.size(), 2);
+        let p = plan_with(vec![], vec![b.clone(), Batch { sub: 2, start: 2.0, duration: 0.1, members: vec![1] }]);
+        assert_eq!(p.batch_size_of_sub(2), 3);
+        assert_eq!(p.batch_size_of_sub(1), 0);
+        let (s, e) = p.busy_window().unwrap();
+        assert_eq!(s, 1.0);
+        assert_eq!(e, 2.1);
+    }
+}

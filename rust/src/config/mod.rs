@@ -1,0 +1,150 @@
+//! System configuration: one struct tying together the workload DNN, its
+//! latency profile, the device energy model and the radio parameters.
+//!
+//! Defaults reproduce the paper's Table II (offline) and Table IV (online)
+//! settings; everything is overridable from JSON and from the CLI.
+
+use std::sync::Arc;
+
+use crate::device::DeviceConfig;
+use crate::dnn::{models, DnnModel, LatencyProfile};
+use crate::util::json::Json;
+use crate::wireless::RadioConfig;
+
+/// Full system configuration for one workload.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Workload DNN descriptor (`B_n` table).
+    pub net: DnnModel,
+    /// Edge latency profile `F_n(b)`.
+    pub profile: LatencyProfile,
+    /// Device DVFS/energy model.
+    pub device: DeviceConfig,
+    /// Radio model.
+    pub radio: RadioConfig,
+    /// Default inference latency constraint `l` (s).
+    pub deadline_s: f64,
+}
+
+impl SystemConfig {
+    /// Paper Table II, mobilenet-v2 column: mobile **CPU** device
+    /// (`E_m = 0.3415 Gop/W`), `l = 50 ms`.
+    pub fn mobilenet_default() -> Arc<SystemConfig> {
+        Arc::new(SystemConfig {
+            net: models::mobilenet_v2(),
+            profile: models::mobilenet_v2_profile(),
+            device: DeviceConfig { energy_eff_dev: 0.3415, ..Default::default() },
+            radio: RadioConfig::default(),
+            deadline_s: 0.050,
+        })
+    }
+
+    /// Paper Table II, 3dssd column: mobile **GPU** device
+    /// (`E_m = 48.75 Gop/W`), `l = 250 ms`.
+    pub fn dssd3_default() -> Arc<SystemConfig> {
+        Arc::new(SystemConfig {
+            net: models::dssd3(),
+            profile: models::dssd3_profile(),
+            device: DeviceConfig::default(),
+            radio: RadioConfig::default(),
+            deadline_s: 0.250,
+        })
+    }
+
+    /// Config by net name with paper defaults.
+    pub fn by_name(name: &str) -> Option<Arc<SystemConfig>> {
+        match name {
+            "mobilenet_v2" => Some(Self::mobilenet_default()),
+            "dssd3" => Some(Self::dssd3_default()),
+            _ => None,
+        }
+    }
+
+    /// Collapse to the IP-SSA-NP view: whole DNN = one sub-task.
+    pub fn unpartitioned(&self) -> SystemConfig {
+        SystemConfig {
+            net: self.net.unpartitioned(),
+            profile: self.profile.unpartitioned(models::PROFILE_POINTS),
+            device: self.device.clone(),
+            radio: self.radio.clone(),
+            deadline_s: self.deadline_s,
+        }
+    }
+
+    /// Replace the latency profile (e.g. with a measured one).
+    pub fn with_profile(&self, profile: LatencyProfile) -> SystemConfig {
+        assert_eq!(profile.n(), self.net.n(), "profile/model sub-task mismatch");
+        SystemConfig { profile, ..self.clone() }
+    }
+
+    /// Apply overrides from a JSON object; unknown keys are rejected.
+    ///
+    /// Recognized keys: `bandwidth_mhz`, `alpha`, `deadline_ms`,
+    /// `energy_eff_dev`, `cell_radius_m`, `tx_circuit_w`, `f_min_ratio`.
+    pub fn apply_overrides(&mut self, v: &Json) -> anyhow::Result<()> {
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("overrides must be an object"))?;
+        for (k, val) in obj {
+            let x = val
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("override {k} must be a number"))?;
+            match k.as_str() {
+                "bandwidth_mhz" => self.radio.bandwidth_hz = x * 1e6,
+                "alpha" => self.device.alpha = x,
+                "deadline_ms" => self.deadline_s = x * 1e-3,
+                "energy_eff_dev" => self.device.energy_eff_dev = x,
+                "cell_radius_m" => self.radio.cell_radius_m = x,
+                "tx_circuit_w" => self.radio.tx_circuit_w = x,
+                "f_min_ratio" => self.device.f_min_ratio = x,
+                other => anyhow::bail!("unknown config override: {other}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let m = SystemConfig::mobilenet_default();
+        assert_eq!(m.deadline_s, 0.050);
+        assert_eq!(m.device.energy_eff_dev, 0.3415);
+        assert_eq!(m.radio.bandwidth_hz, 1e6);
+        let d = SystemConfig::dssd3_default();
+        assert_eq!(d.deadline_s, 0.250);
+        assert_eq!(d.device.energy_eff_dev, 48.75);
+        assert_eq!(d.device.alpha, 1.0);
+        assert_eq!(d.radio.tx_power_w, 0.05);
+        assert_eq!(d.device.gpu_power_w, 300.0);
+    }
+
+    #[test]
+    fn by_name_and_unpartitioned() {
+        let c = SystemConfig::by_name("dssd3").unwrap();
+        let np = c.unpartitioned();
+        assert_eq!(np.net.n(), 1);
+        assert_eq!(np.profile.n(), 1);
+        assert!(SystemConfig::by_name("x").is_none());
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut c = (*SystemConfig::mobilenet_default()).clone();
+        let ov = Json::parse(r#"{"bandwidth_mhz": 5, "deadline_ms": 100}"#).unwrap();
+        c.apply_overrides(&ov).unwrap();
+        assert_eq!(c.radio.bandwidth_hz, 5e6);
+        assert_eq!(c.deadline_s, 0.1);
+        let bad = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(c.apply_overrides(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn with_profile_checks_arity() {
+        let c = SystemConfig::mobilenet_default();
+        let p = models::dssd3_profile();
+        let _ = c.with_profile(p);
+    }
+}

@@ -1,0 +1,139 @@
+//! Discrete-event core: a time-ordered event queue with a simulated clock.
+//!
+//! The offline experiments are closed-form, but plan *execution* (batches
+//! starting when inputs arrive, the server freeing after `F_n(b)`, local
+//! completions) is naturally event-driven; this queue backs
+//! [`server`](super::server) timeline replay and keeps ordering stable for
+//! simultaneous events (FIFO by insertion sequence).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Event payloads the coordinator understands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A user's intermediate upload finished (user index).
+    UploadDone(usize),
+    /// A batch may start (index into the plan's batch list).
+    BatchStart(usize),
+    /// A batch finished (index into the plan's batch list).
+    BatchDone(usize),
+    /// A user's local-only task completed.
+    LocalDone(usize),
+}
+
+/// A scheduled event at simulated time `at`.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub at: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earliest time first, then insertion order.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-time event queue with a monotone clock.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `kind` at absolute time `at` (clamped to now — no past
+    /// scheduling).
+    pub fn schedule(&mut self, at: f64, kind: EventKind) {
+        let at = at.max(self.now);
+        self.heap.push(Event { at, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now - 1e-12, "time went backwards");
+        self.now = self.now.max(ev.at);
+        Some(ev)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, EventKind::LocalDone(0));
+        q.schedule(1.0, EventKind::UploadDone(1));
+        q.schedule(2.0, EventKind::BatchStart(0));
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.at)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::UploadDone(0));
+        q.schedule(1.0, EventKind::UploadDone(1));
+        q.schedule(1.0, EventKind::UploadDone(2));
+        let order: Vec<EventKind> = std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(
+            order,
+            vec![EventKind::UploadDone(0), EventKind::UploadDone(1), EventKind::UploadDone(2)]
+        );
+    }
+
+    #[test]
+    fn clock_is_monotone_and_clamps_past() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, EventKind::LocalDone(0));
+        q.pop();
+        // Scheduling "in the past" clamps to now.
+        q.schedule(1.0, EventKind::LocalDone(1));
+        let e = q.pop().unwrap();
+        assert_eq!(e.at, 2.0);
+    }
+}

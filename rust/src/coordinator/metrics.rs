@@ -1,0 +1,172 @@
+//! Serving metrics: per-request records and aggregate reports.
+
+use crate::util::stats::{percentile, Accumulator};
+
+/// One completed inference request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub user: usize,
+    /// Slot the task arrived.
+    pub arrival_slot: u64,
+    /// Slot the task was dispatched (scheduled / local / forced).
+    pub dispatch_slot: u64,
+    /// End-to-end latency in *model* time (s): waiting + plan finish.
+    pub latency_s: f64,
+    /// Deadline the task carried (s).
+    pub deadline_s: f64,
+    pub energy_j: f64,
+    /// How the task was served.
+    pub outcome: Outcome,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Scheduled by the offline algorithm, some sub-tasks offloaded.
+    Offloaded,
+    /// Scheduled but ended up fully local.
+    ScheduledLocal,
+    /// Local by policy choice (c = 1).
+    Local,
+    /// Forced to fmax-local by the deadline guard.
+    Forced,
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub requests: usize,
+    pub energy_mean_j: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub deadline_violations: usize,
+    pub offloaded_frac: f64,
+    pub forced_frac: f64,
+    /// Real PJRT compute consumed by batches (s) — 0 in pure simulation.
+    pub real_compute_s: f64,
+    /// Wall-clock of the serving loop (s).
+    pub wall_s: f64,
+}
+
+/// Metrics sink for a serving run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<RequestRecord>,
+    pub real_compute_s: f64,
+    pub batch_count: u64,
+    pub batch_size_sum: u64,
+}
+
+impl Metrics {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_count == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batch_count as f64
+        }
+    }
+
+    pub fn report(&self, wall_s: f64) -> Report {
+        let mut energy = Accumulator::new();
+        let mut lats: Vec<f64> = Vec::with_capacity(self.records.len());
+        let mut violations = 0;
+        let mut offloaded = 0;
+        let mut forced = 0;
+        for r in &self.records {
+            energy.push(r.energy_j);
+            lats.push(r.latency_s);
+            if r.latency_s > r.deadline_s + 1e-9 {
+                violations += 1;
+            }
+            match r.outcome {
+                Outcome::Offloaded => offloaded += 1,
+                Outcome::Forced => forced += 1,
+                _ => {}
+            }
+        }
+        let n = self.records.len();
+        Report {
+            requests: n,
+            energy_mean_j: energy.mean(),
+            latency_p50_s: if lats.is_empty() { 0.0 } else { percentile(&lats, 50.0) },
+            latency_p95_s: if lats.is_empty() { 0.0 } else { percentile(&lats, 95.0) },
+            deadline_violations: violations,
+            offloaded_frac: if n == 0 { 0.0 } else { offloaded as f64 / n as f64 },
+            forced_frac: if n == 0 { 0.0 } else { forced as f64 / n as f64 },
+            real_compute_s: self.real_compute_s,
+            wall_s,
+        }
+    }
+}
+
+impl Report {
+    /// Requests per second of *model* time.
+    pub fn throughput(&self, model_seconds: f64) -> f64 {
+        if model_seconds <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / model_seconds
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} energy/task={:.4} J p50={:.1} ms p95={:.1} ms violations={} \
+             offloaded={:.0}% forced={:.0}% real_compute={:.2} s wall={:.2} s",
+            self.requests,
+            self.energy_mean_j,
+            self.latency_p50_s * 1e3,
+            self.latency_p95_s * 1e3,
+            self.deadline_violations,
+            self.offloaded_frac * 100.0,
+            self.forced_frac * 100.0,
+            self.real_compute_s,
+            self.wall_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(lat: f64, dl: f64, outcome: Outcome) -> RequestRecord {
+        RequestRecord {
+            user: 0,
+            arrival_slot: 0,
+            dispatch_slot: 1,
+            latency_s: lat,
+            deadline_s: dl,
+            energy_j: 1.0,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut m = Metrics::default();
+        m.push(rec(0.01, 0.05, Outcome::Offloaded));
+        m.push(rec(0.02, 0.05, Outcome::Local));
+        m.push(rec(0.09, 0.05, Outcome::Forced)); // violation
+        let rep = m.report(1.0);
+        assert_eq!(rep.requests, 3);
+        assert_eq!(rep.deadline_violations, 1);
+        assert!((rep.offloaded_frac - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.forced_frac - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.latency_p50_s - 0.02).abs() < 1e-12);
+        assert!(rep.render().contains("requests=3"));
+        assert!((rep.throughput(2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_size_accounting() {
+        let mut m = Metrics::default();
+        m.batch_count = 4;
+        m.batch_size_sum = 10;
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+        assert_eq!(Metrics::default().mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Mobile-device compute model: DVFS latency/energy (paper §II-B, §V-B).
+//!
+//! The paper avoids absolute `A_n`/`κ_m` by parameterizing local compute
+//! through the edge profile (eqs. 21–23):
+//!
+//! * latency at max frequency:  `l_cp(f_max) = α_m · F_n(1)`        (eq. 22)
+//! * energy  at max frequency:  `e_cp(f_max) = (E_e/E_m) F_n(1) P_e` (eq. 21)
+//! * DVFS scaling: stretching a sub-task from `t_max` to `t` divides the
+//!   energy by `(t/t_max)²` (eq. 23, from `e ∝ f²` and `t ∝ 1/f`).
+//!
+//! We express frequency as the ratio `φ = f/f_max ∈ [φ_min, 1]`; running a
+//! workload whose `f_max`-latency is `T_max` in available time `T` requires
+//! `φ = T_max/T` and consumes `φ²` times the `f_max` energy.
+
+use crate::dnn::LatencyProfile;
+
+/// Device energy/DVFS parameters (defaults = paper Table II).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// `α_m` — ratio of local `f_max` latency to edge single-batch latency.
+    pub alpha: f64,
+    /// Edge GPU energy efficiency `E_e(f_e,max)` in Gop/W.
+    pub energy_eff_edge: f64,
+    /// Device energy efficiency `E_m(f_m,max)` in Gop/W
+    /// (48.75 = mobile GPU for 3dssd; 0.3415 = mobile CPU for mobilenet-v2).
+    pub energy_eff_dev: f64,
+    /// Edge GPU power `P_e` in W.
+    pub gpu_power_w: f64,
+    /// `f_min / f_max` — lowest DVFS ratio.
+    pub f_min_ratio: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            alpha: 1.0,
+            energy_eff_edge: 48.75,
+            energy_eff_dev: 48.75,
+            gpu_power_w: 300.0,
+            f_min_ratio: 0.1,
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// Local latency of sub-task `n` at `f_max` (eq. 22): `α · F_n(1)`.
+    pub fn local_latency_fmax(&self, profile: &LatencyProfile, n: usize) -> f64 {
+        self.alpha * profile.f(n, 1)
+    }
+
+    /// Local energy of sub-task `n` at `f_max` (eq. 21):
+    /// `(E_e/E_m) · F_n(1) · P_e`.
+    pub fn local_energy_fmax(&self, profile: &LatencyProfile, n: usize) -> f64 {
+        (self.energy_eff_edge / self.energy_eff_dev) * profile.f(n, 1) * self.gpu_power_w
+    }
+
+    /// `f_max`-latency of the prefix `1..=p` (0 for `p = 0`).
+    pub fn prefix_latency_fmax(&self, profile: &LatencyProfile, p: usize) -> f64 {
+        (1..=p).map(|n| self.local_latency_fmax(profile, n)).sum()
+    }
+
+    /// `f_max`-energy of the prefix `1..=p`.
+    pub fn prefix_energy_fmax(&self, profile: &LatencyProfile, p: usize) -> f64 {
+        (1..=p).map(|n| self.local_energy_fmax(profile, n)).sum()
+    }
+
+    /// Lowest feasible frequency ratio to fit workload `t_fmax` into
+    /// `t_avail` seconds (eq. 18 in φ-space).
+    ///
+    /// Returns `None` when even `f_max` is too slow (`φ > 1` required);
+    /// clamps to `φ_min` when the slack allows running slower than the
+    /// hardware floor. A zero workload returns `φ_min` (no compute).
+    pub fn frequency_for(&self, t_fmax: f64, t_avail: f64) -> Option<f64> {
+        if t_avail < 0.0 {
+            return None; // window already closed, even with no compute
+        }
+        if t_fmax <= 0.0 {
+            return Some(self.f_min_ratio);
+        }
+        if t_avail == 0.0 {
+            return None;
+        }
+        let phi = t_fmax / t_avail;
+        if phi > 1.0 + 1e-12 {
+            None
+        } else {
+            Some(phi.max(self.f_min_ratio))
+        }
+    }
+
+    /// Energy of running a prefix with `f_max`-energy `e_fmax` at ratio `φ`
+    /// (eq. 23): `e = e_fmax · φ²`.
+    pub fn energy_at(&self, e_fmax: f64, phi: f64) -> f64 {
+        debug_assert!((self.f_min_ratio - 1e-12..=1.0 + 1e-12).contains(&phi), "phi={phi}");
+        e_fmax * phi * phi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn eq21_eq22_parameterization() {
+        let p = models::dssd3_profile();
+        let d = DeviceConfig::default(); // α=1, E_e=E_m
+        // α=1 ⇒ local fmax latency equals edge b=1 latency.
+        assert!((d.local_latency_fmax(&p, 1) - p.f(1, 1)).abs() < 1e-12);
+        // E_e=E_m ⇒ local fmax energy equals edge energy F_n(1)·P_e.
+        assert!((d.local_energy_fmax(&p, 1) - p.f(1, 1) * 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_device_is_two_orders_less_efficient() {
+        let p = models::mobilenet_v2_profile();
+        let d = DeviceConfig { energy_eff_dev: 0.3415, ..Default::default() };
+        let ratio = d.local_energy_fmax(&p, 1) / (p.f(1, 1) * 300.0);
+        assert!((ratio - 48.75 / 0.3415).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prefix_sums() {
+        let p = models::mobilenet_v2_profile();
+        let d = DeviceConfig::default();
+        assert_eq!(d.prefix_latency_fmax(&p, 0), 0.0);
+        let full: f64 = (1..=8).map(|n| d.local_latency_fmax(&p, n)).sum();
+        assert!((d.prefix_latency_fmax(&p, 8) - full).abs() < 1e-15);
+    }
+
+    #[test]
+    fn frequency_selection_eq18() {
+        let d = DeviceConfig { f_min_ratio: 0.2, ..Default::default() };
+        // Tight fit: needs exactly φ = 0.5.
+        assert!((d.frequency_for(1.0, 2.0).unwrap() - 0.5).abs() < 1e-12);
+        // Loose fit clamps at φ_min.
+        assert_eq!(d.frequency_for(1.0, 100.0).unwrap(), 0.2);
+        // Impossible fit.
+        assert!(d.frequency_for(2.0, 1.0).is_none());
+        assert!(d.frequency_for(1.0, 0.0).is_none());
+        // No workload.
+        assert_eq!(d.frequency_for(0.0, 0.0).unwrap(), 0.2);
+    }
+
+    #[test]
+    fn dvfs_energy_quadratic() {
+        let d = DeviceConfig::default();
+        // Half frequency -> quarter energy (eq. 23).
+        assert!((d.energy_at(8.0, 0.5) - 2.0).abs() < 1e-12);
+        assert!((d.energy_at(8.0, 1.0) - 8.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! DNN inference-task model (paper §II-A).
+//!
+//! A task is a sequence of `N` sub-tasks. Sub-task `n` (1-based in the
+//! paper) has computation workload `A_n` and output size `B_n`; `B_0` is the
+//! input size. We never need `A_n` in absolute Gops: the experiment
+//! parameterization (paper §V-B, eqs. 21–23) expresses local compute via the
+//! *edge* latency `F_n(1)` and the capability ratio `α_m`, so the sub-task
+//! descriptor carries output bits only and the latency profile carries
+//! `F_n(b)`.
+
+pub mod models;
+pub mod profile;
+
+pub use profile::{BatchCurve, LatencyProfile};
+
+/// One DNN sub-task boundary (paper: sub-task `n`, output size `B_n`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubTask {
+    /// Human name matching the python artifact sub-task (`c_b1`, `sa2`, ...).
+    pub name: String,
+    /// Output (= next sub-task's input) size in **bits** (`B_n`).
+    pub out_bits: f64,
+}
+
+/// A partitioned DNN inference task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DnnModel {
+    /// Name matching the artifact manifest net (`mobilenet_v2`, `dssd3`).
+    pub name: String,
+    /// Input size in bits (`B_0`).
+    pub input_bits: f64,
+    /// The `N` sub-tasks in execution order.
+    pub subtasks: Vec<SubTask>,
+}
+
+impl DnnModel {
+    /// Number of sub-tasks `N`.
+    pub fn n(&self) -> usize {
+        self.subtasks.len()
+    }
+
+    /// `B_p` — bits crossing the boundary after a partition at `p`
+    /// (`p == 0` means the raw input is uploaded; `p == N` means nothing is).
+    pub fn boundary_bits(&self, p: usize) -> f64 {
+        if p == 0 {
+            self.input_bits
+        } else {
+            self.subtasks[p - 1].out_bits
+        }
+    }
+
+    /// Collapse the model to a single sub-task (the IP-SSA-NP baseline:
+    /// "the whole DNN inference task is treated as one sub-task").
+    pub fn unpartitioned(&self) -> DnnModel {
+        DnnModel {
+            name: format!("{}_np", self.name),
+            input_bits: self.input_bits,
+            subtasks: vec![SubTask {
+                name: "whole".into(),
+                out_bits: self.subtasks.last().map(|s| s.out_bits).unwrap_or(0.0),
+            }],
+        }
+    }
+}
+
+/// Bits of an f32 tensor with the given element count.
+pub fn f32_bits(elems: usize) -> f64 {
+    (elems * 32) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> DnnModel {
+        DnnModel {
+            name: "toy".into(),
+            input_bits: 100.0,
+            subtasks: vec![
+                SubTask { name: "a".into(), out_bits: 50.0 },
+                SubTask { name: "b".into(), out_bits: 20.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn boundary_bits_indexing() {
+        let m = toy();
+        assert_eq!(m.boundary_bits(0), 100.0);
+        assert_eq!(m.boundary_bits(1), 50.0);
+        assert_eq!(m.boundary_bits(2), 20.0);
+        assert_eq!(m.n(), 2);
+    }
+
+    #[test]
+    fn unpartitioned_collapses() {
+        let np = toy().unpartitioned();
+        assert_eq!(np.n(), 1);
+        assert_eq!(np.input_bits, 100.0);
+        assert_eq!(np.boundary_bits(1), 20.0);
+    }
+
+    #[test]
+    fn f32_bits_scale() {
+        assert_eq!(f32_bits(1000), 32_000.0);
+    }
+}

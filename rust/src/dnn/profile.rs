@@ -1,0 +1,217 @@
+//! Edge inference latency profiles `F_n(·)` (paper §II-C, Fig. 3).
+//!
+//! `F_n(b)` maps batch size to the GPU latency of sub-task `n`. The paper
+//! profiles an RTX3090; here a profile comes from one of two sources:
+//!
+//! * **calibrated** — analytic curves matching the paper's described shape
+//!   (Fig. 3: mobilenet-v2 nearly flat in `b`; 3dssd strongly increasing),
+//!   used by the experiment harness so shapes are comparable to the paper;
+//! * **measured** — `runtime::profiler` timings of the real AOT artifacts on
+//!   the CPU PJRT client, loaded from JSON (our Fig. 3 regeneration).
+//!
+//! `F_n(0) = 0` by definition (paper, below eq. 11).
+
+use crate::util::json::Json;
+
+/// Latency-vs-batch-size curve for one sub-task.
+///
+/// Stores latency at batch sizes `1..=K` (seconds); evaluation at larger
+/// batches extrapolates linearly from the last two points, matching the
+/// near-linear growth regime every profiled DNN enters at large `b`
+/// (paper Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchCurve {
+    lat: Vec<f64>,
+}
+
+impl BatchCurve {
+    /// From explicit measurements `lat[b-1] = F(b)`.
+    pub fn from_points(lat: Vec<f64>) -> Self {
+        assert!(!lat.is_empty(), "empty latency curve");
+        assert!(lat.iter().all(|&x| x > 0.0), "non-positive latency");
+        for w in lat.windows(2) {
+            assert!(w[1] >= w[0] * (1.0 - 1e-9), "F(b) must be non-decreasing: {lat:?}");
+        }
+        BatchCurve { lat }
+    }
+
+    /// Affine model `F(b) = base + slope * b` sampled at `1..=k`.
+    ///
+    /// `base` is the fixed launch/occupancy cost that batching amortizes;
+    /// `slope` the per-sample marginal cost.
+    pub fn affine(base: f64, slope: f64, k: usize) -> Self {
+        Self::from_points((1..=k).map(|b| base + slope * b as f64).collect())
+    }
+
+    /// `F(b)`; `F(0) = 0`.
+    pub fn eval(&self, b: usize) -> f64 {
+        match b {
+            0 => 0.0,
+            b if b <= self.lat.len() => self.lat[b - 1],
+            b => {
+                // Linear extrapolation from the last two points.
+                let k = self.lat.len();
+                let (last, slope) = if k >= 2 {
+                    (self.lat[k - 1], (self.lat[k - 1] - self.lat[k - 2]).max(0.0))
+                } else {
+                    // Single point: assume proportional growth F(b) = b·F(1).
+                    (self.lat[0], self.lat[0])
+                };
+                last + slope * (b - k) as f64
+            }
+        }
+    }
+
+    /// Largest profiled batch size.
+    pub fn max_profiled(&self) -> usize {
+        self.lat.len()
+    }
+}
+
+/// `F_n(·)` for every sub-task of one network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyProfile {
+    pub name: String,
+    curves: Vec<BatchCurve>,
+}
+
+impl LatencyProfile {
+    pub fn new(name: &str, curves: Vec<BatchCurve>) -> Self {
+        assert!(!curves.is_empty());
+        LatencyProfile { name: name.to_string(), curves }
+    }
+
+    /// Number of sub-tasks `N`.
+    pub fn n(&self) -> usize {
+        self.curves.len()
+    }
+
+    /// `F_n(b)` — `sub` is **1-based** like the paper; `F_n(0) = 0`.
+    pub fn f(&self, sub: usize, b: usize) -> f64 {
+        assert!((1..=self.curves.len()).contains(&sub), "sub-task index {sub}");
+        self.curves[sub - 1].eval(b)
+    }
+
+    /// `Σ_n F_n(b)` — the edge occupancy of a whole-task batch (eq. 20).
+    pub fn total(&self, b: usize) -> f64 {
+        (1..=self.n()).map(|n| self.f(n, b)).sum()
+    }
+
+    /// Throughput of the entire task at batch size `b` (tasks/s) — the red
+    /// curves of Fig. 3.
+    pub fn throughput(&self, b: usize) -> f64 {
+        if b == 0 {
+            0.0
+        } else {
+            b as f64 / self.total(b)
+        }
+    }
+
+    /// Collapse to a single-sub-task profile (IP-SSA-NP view): the whole
+    /// task is one batchable unit with `F(b) = Σ_n F_n(b)`.
+    pub fn unpartitioned(&self, k: usize) -> LatencyProfile {
+        let lat = (1..=k).map(|b| self.total(b)).collect();
+        LatencyProfile::new(&format!("{}_np", self.name), vec![BatchCurve::from_points(lat)])
+    }
+
+    // ------------------------------------------------------------------ io
+
+    /// Serialize (for `artifacts/profiles/*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "curves",
+                Json::Arr(self.curves.iter().map(|c| Json::arr_f64(&c.lat)).collect()),
+            ),
+        ])
+    }
+
+    /// Load a measured profile written by `runtime::profiler` (or
+    /// `to_json`).
+    pub fn from_json(v: &Json) -> anyhow::Result<LatencyProfile> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("profile: missing name"))?;
+        let curves = v
+            .get("curves")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("profile: missing curves"))?
+            .iter()
+            .map(|c| {
+                c.f64_array()
+                    .map(BatchCurve::from_points)
+                    .ok_or_else(|| anyhow::anyhow!("profile: bad curve"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(LatencyProfile::new(name, curves))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_zero_and_points() {
+        let c = BatchCurve::from_points(vec![1.0, 1.5, 2.0]);
+        assert_eq!(c.eval(0), 0.0);
+        assert_eq!(c.eval(1), 1.0);
+        assert_eq!(c.eval(3), 2.0);
+    }
+
+    #[test]
+    fn eval_extrapolates_linearly() {
+        let c = BatchCurve::from_points(vec![1.0, 1.5, 2.0]);
+        assert!((c.eval(5) - 3.0).abs() < 1e-12);
+        let single = BatchCurve::from_points(vec![2.0]);
+        assert!((single.eval(2) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn rejects_decreasing_curve() {
+        BatchCurve::from_points(vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn affine_matches_formula() {
+        let c = BatchCurve::affine(0.5, 0.25, 4);
+        assert!((c.eval(1) - 0.75).abs() < 1e-12);
+        assert!((c.eval(4) - 1.5).abs() < 1e-12);
+        assert!((c.eval(8) - 2.5).abs() < 1e-12, "extrapolation continues affine");
+    }
+
+    fn profile() -> LatencyProfile {
+        LatencyProfile::new(
+            "p",
+            vec![BatchCurve::affine(1.0, 0.0, 4), BatchCurve::affine(0.5, 0.5, 4)],
+        )
+    }
+
+    #[test]
+    fn f_total_throughput() {
+        let p = profile();
+        assert_eq!(p.f(1, 0), 0.0);
+        assert_eq!(p.f(1, 3), 1.0);
+        assert_eq!(p.f(2, 2), 1.5);
+        assert!((p.total(2) - 2.5).abs() < 1e-12);
+        assert!((p.throughput(2) - 0.8).abs() < 1e-12);
+        assert_eq!(p.throughput(0), 0.0);
+    }
+
+    #[test]
+    fn unpartitioned_sums() {
+        let np = profile().unpartitioned(4);
+        assert_eq!(np.n(), 1);
+        assert!((np.f(1, 2) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = profile();
+        let back = LatencyProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+}

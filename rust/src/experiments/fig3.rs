@@ -1,0 +1,102 @@
+//! Fig. 3 — sub-task latency `F_n(b)` and whole-task throughput vs batch
+//! size, for both DNNs.
+//!
+//! Two sources: the paper-calibrated curves (always available) and, when
+//! the AOT artifacts exist, *measured* CPU-PJRT profiles of the real
+//! executables — our substitute for the paper's RTX3090 profiling run.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::dnn::LatencyProfile;
+use crate::runtime::{default_artifacts_root, profiler, Runtime};
+use crate::util::json::Json;
+use crate::util::table::{line_chart, Table};
+
+use super::report::Report;
+
+fn profile_tables(rep: &mut Report, tag: &str, profile: &LatencyProfile, names: &[String], batches: &[usize]) {
+    let mut header: Vec<String> = vec!["sub-task".into()];
+    header.extend(batches.iter().map(|b| format!("b={b}")));
+    let mut t = Table::new(&format!("Fig.3 [{tag}] F_n(b) (ms)"))
+        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (i, name) in names.iter().enumerate() {
+        let row: Vec<f64> = batches.iter().map(|&b| profile.f(i + 1, b) * 1e3).collect();
+        t.row_f64(name, &row, 3);
+    }
+    let thr: Vec<f64> = batches.iter().map(|&b| profile.throughput(b)).collect();
+    t.row_f64("throughput (tasks/s)", &thr, 1);
+    rep.table(&format!("{tag}_fn"), t);
+
+    let labels: Vec<String> = batches.iter().map(|b| b.to_string()).collect();
+    let total: Vec<f64> = batches.iter().map(|&b| profile.total(b) * 1e3).collect();
+    rep.text(line_chart(
+        &format!("[{tag}] total latency (ms, o) and throughput (tasks/s, *) vs batch"),
+        &labels,
+        &[("total F(b) ms", total), ("throughput", thr)],
+        10,
+    ));
+}
+
+/// Run the Fig. 3 regeneration.
+pub fn run(measured: bool) -> Result<()> {
+    let mut rep = Report::new("fig3");
+    let batches = vec![1usize, 2, 4, 8, 16];
+
+    for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+        let names: Vec<String> = cfg.net.subtasks.iter().map(|s| s.name.clone()).collect();
+        profile_tables(
+            &mut rep,
+            &format!("{}-calibrated", cfg.net.name),
+            &cfg.profile,
+            &names,
+            &batches,
+        );
+    }
+
+    if measured {
+        let root = default_artifacts_root();
+        if root.join("manifest.json").exists() {
+            let rt = Runtime::open(&root)?;
+            for net in ["dssd3", "mobilenet_v2"] {
+                let settings = profiler::ProfileSettings::default();
+                let (profile, _) = profiler::profile_net(&rt, net, &settings)?;
+                let names: Vec<String> = rt
+                    .manifest()
+                    .net(net)?
+                    .subtasks
+                    .iter()
+                    .map(|s| s.name.clone())
+                    .collect();
+                profile_tables(&mut rep, &format!("{net}-measured"), &profile, &names, &batches);
+                // Persist for `--profile measured` experiment reruns.
+                rep.json(&format!("{net}_measured"), profile.to_json());
+                profile
+                    .to_json()
+                    .write_file(&root.join("profiles").join(format!("{net}.json")))?;
+            }
+        } else {
+            rep.text("(artifacts not built — measured profile skipped)");
+        }
+    }
+
+    // Shape assertions the paper's Fig. 3 narrative makes.
+    let m = SystemConfig::mobilenet_default();
+    let d = SystemConfig::dssd3_default();
+    rep.text(format!(
+        "shape check: mobilenet F(8)/F(1) = {:.2} (light, ~flat); 3dssd F(8)/F(1) = {:.2} (heavy, steep); \
+         throughput gain at b=8: mobilenet {:.1}x, 3dssd {:.1}x",
+        m.profile.total(8) / m.profile.total(1),
+        d.profile.total(8) / d.profile.total(1),
+        m.profile.throughput(8) / m.profile.throughput(1),
+        d.profile.throughput(8) / d.profile.throughput(1),
+    ));
+    rep.json(
+        "calibrated",
+        Json::obj(vec![
+            ("mobilenet_v2", m.profile.to_json()),
+            ("dssd3", d.profile.to_json()),
+        ]),
+    );
+    rep.save()
+}

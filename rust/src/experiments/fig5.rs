@@ -1,0 +1,109 @@
+//! Fig. 5 — average energy per user vs number of users, under different
+//! wireless bandwidths, all five policies, both DNNs.
+//!
+//! Paper headline (3dssd, M=15): IP-SSA cuts energy vs FIFO/PS by ~40-52%
+//! at W=1 MHz and ~93-95% at W=5 MHz; for mobilenet-v2 at W=1 MHz,
+//! IP-SSA-NP degenerates to LC while IP-SSA still wins via partial
+//! offloading.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::util::json::Json;
+use crate::util::table::{line_chart, Table};
+
+use super::offline::{sweep_users, variant};
+use super::report::Report;
+
+pub struct Params {
+    pub m_list: Vec<usize>,
+    pub bandwidths_mhz: Vec<f64>,
+    pub draws: usize,
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            m_list: (1..=15).collect(),
+            bandwidths_mhz: vec![1.0, 5.0],
+            draws: 50,
+            seed: 0xF165,
+        }
+    }
+}
+
+pub fn run(p: &Params) -> Result<()> {
+    let mut rep = Report::new("fig5");
+    for (panel, base) in [("a-dssd3", SystemConfig::dssd3_default()),
+                          ("b-mobilenet_v2", SystemConfig::mobilenet_default())] {
+        for &w in &p.bandwidths_mhz {
+            let cfg = variant(&base, |c| c.radio.bandwidth_hz = w * 1e6);
+            let sweep = sweep_users(&cfg, &p.m_list, p.draws, p.seed);
+
+            let mut header: Vec<String> = vec!["policy".into()];
+            header.extend(p.m_list.iter().map(|m| format!("M={m}")));
+            let mut t = Table::new(&format!(
+                "Fig.5({panel}) energy/user (J), W={w} MHz, l={} ms, {} draws",
+                cfg.deadline_s * 1e3,
+                p.draws
+            ))
+            .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+            for (si, name) in sweep.solver_names.iter().enumerate() {
+                t.row_f64(name, &sweep.energy[si], 4);
+            }
+            rep.table(&format!("{panel}_w{w}"), t);
+
+            let labels: Vec<String> = p.m_list.iter().map(|m| m.to_string()).collect();
+            let series: Vec<(&str, Vec<f64>)> = sweep
+                .solver_names
+                .iter()
+                .zip(&sweep.energy)
+                .map(|(n, e)| (*n, e.clone()))
+                .collect();
+            rep.text(line_chart(
+                &format!("Fig.5({panel}) W={w} MHz — energy/user vs M"),
+                &labels,
+                &series,
+                12,
+            ));
+
+            // Persist raw grid.
+            rep.json(
+                &format!("{panel}_w{w}"),
+                Json::obj(vec![
+                    ("m", Json::arr_f64(&p.m_list.iter().map(|&m| m as f64).collect::<Vec<_>>())),
+                    (
+                        "energy",
+                        Json::Obj(
+                            sweep
+                                .solver_names
+                                .iter()
+                                .zip(&sweep.energy)
+                                .map(|(n, e)| (n.to_string(), Json::arr_f64(e)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            );
+
+            // Paper-shape summary at the largest M.
+            let last = p.m_list.len() - 1;
+            let idx = |n: &str| sweep.solver_names.iter().position(|&x| x == n).unwrap();
+            let (ip, fifo, ps, lc) = (
+                sweep.energy[idx("IP-SSA")][last],
+                sweep.energy[idx("FIFO")][last],
+                sweep.energy[idx("PS")][last],
+                sweep.energy[idx("LC")][last],
+            );
+            rep.text(format!(
+                "  summary {panel} W={w}: at M={}: IP-SSA saves {:.1}% vs FIFO, {:.1}% vs PS, {:.1}% vs LC",
+                p.m_list[last],
+                (1.0 - ip / fifo) * 100.0,
+                (1.0 - ip / ps) * 100.0,
+                (1.0 - ip / lc) * 100.0,
+            ));
+        }
+    }
+    rep.save()
+}

@@ -1,0 +1,84 @@
+//! Experiment harness: one module per table/figure of the paper's §V, plus
+//! shared sweep machinery and the report sink. See DESIGN.md §5 for the
+//! experiment index and pass criteria.
+
+pub mod ablations;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7_tab3;
+pub mod fig8;
+pub mod offline;
+pub mod report;
+pub mod table5;
+
+use anyhow::{bail, Result};
+
+/// Experiment ids accepted by `batchedge experiment <id>` and the benches.
+pub const ALL: &[&str] = &["fig3", "fig5", "fig6", "fig7", "table3", "fig8", "table5", "ablations"];
+
+/// Run an experiment by id with default (paper-scale) parameters; `quick`
+/// shrinks Monte-Carlo draws and RL schedules for smoke runs.
+pub fn run(id: &str, quick: bool) -> Result<()> {
+    match id {
+        "fig3" => fig3::run(true),
+        "fig5" => {
+            let mut p = fig5::Params::default();
+            if quick {
+                p.m_list = vec![1, 5, 10, 15];
+                p.draws = 10;
+            }
+            fig5::run(&p)
+        }
+        "fig6" => {
+            let mut p = fig6::Params::default();
+            if quick {
+                p.m_list = vec![1, 5, 10, 15];
+                p.draws = 10;
+            }
+            fig6::run(&p)
+        }
+        "fig7" | "table3" => {
+            let mut p = fig7_tab3::Params::default();
+            if quick {
+                p.draws = 15;
+            }
+            fig7_tab3::run(&p)
+        }
+        "fig8" => {
+            let mut p = fig8::Params::default();
+            if quick {
+                p.m_list = vec![2, 8];
+                p.train.episodes = 6;
+                p.train.slots_per_episode = 200;
+                p.eval_episodes = 2;
+                p.eval_slots = 250;
+            }
+            fig8::run(&p)
+        }
+        "ablations" => {
+            let mut p = ablations::Params::default();
+            if quick {
+                p.draws = 5;
+                p.m = 8;
+            }
+            ablations::run(&p)
+        }
+        "table5" => {
+            let mut p = table5::Params::default();
+            if quick {
+                p.train.episodes = 6;
+                p.train.slots_per_episode = 200;
+                p.eval_slots = 400;
+            }
+            table5::run(&p)
+        }
+        "all" => {
+            for id in ALL {
+                run(id, quick)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,138 @@
+//! Shared machinery for the offline experiments (Fig. 5–7, Table III):
+//! Monte-Carlo sweeps of `mean energy per user` over user-count / config
+//! grids for a set of solvers.
+
+use std::sync::Arc;
+
+use crate::algo::{baselines, Solver};
+use crate::config::SystemConfig;
+use crate::scenario::Scenario;
+use crate::util::rng::Rng;
+use crate::util::stats::Accumulator;
+
+/// Result grid: `energy[solver][m_index]` = mean energy per user (J).
+pub struct Sweep {
+    pub solver_names: Vec<&'static str>,
+    pub m_list: Vec<usize>,
+    pub energy: Vec<Vec<f64>>,
+    pub ci95: Vec<Vec<f64>>,
+}
+
+/// Sweep the offline suite over user counts with `draws` Monte-Carlo
+/// channel realizations per point (common random numbers across solvers).
+pub fn sweep_users(
+    cfg: &Arc<SystemConfig>,
+    m_list: &[usize],
+    draws: usize,
+    seed: u64,
+) -> Sweep {
+    let solvers = baselines::offline_suite();
+    let names: Vec<&'static str> = solvers.iter().map(|s| s.name()).collect();
+    let mut energy = vec![vec![0.0; m_list.len()]; solvers.len()];
+    let mut ci = vec![vec![0.0; m_list.len()]; solvers.len()];
+
+    for (mi, &m) in m_list.iter().enumerate() {
+        let mut accs: Vec<Accumulator> = (0..solvers.len()).map(|_| Accumulator::new()).collect();
+        for d in 0..draws {
+            // Common random numbers: same channel draw for every solver.
+            let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
+            let scenario = Scenario::draw(cfg, m, &mut rng);
+            for (si, solver) in solvers.iter().enumerate() {
+                accs[si].push(solver.solve(&scenario).plan.mean_energy());
+            }
+        }
+        for (si, acc) in accs.iter().enumerate() {
+            energy[si][mi] = acc.mean();
+            ci[si][mi] = acc.ci95();
+        }
+    }
+    Sweep { solver_names: names, m_list: m_list.to_vec(), energy, ci95: ci }
+}
+
+/// Sweep a single solver over user counts for several config variants
+/// (Fig. 6's α / l families). Returns `energy[variant][m_index]`.
+pub fn sweep_variants(
+    variants: &[(String, Arc<SystemConfig>)],
+    solver: &dyn Solver,
+    m_list: &[usize],
+    draws: usize,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    let mut out = vec![vec![0.0; m_list.len()]; variants.len()];
+    for (vi, (_, cfg)) in variants.iter().enumerate() {
+        for (mi, &m) in m_list.iter().enumerate() {
+            let mut acc = Accumulator::new();
+            for d in 0..draws {
+                let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
+                let scenario = Scenario::draw(cfg, m, &mut rng);
+                acc.push(solver.solve(&scenario).plan.mean_energy());
+            }
+            out[vi][mi] = acc.mean();
+        }
+    }
+    out
+}
+
+/// Per-user energies pooled over draws (Fig. 7 histograms).
+pub fn pooled_user_energies(
+    cfg: &Arc<SystemConfig>,
+    solver: &dyn Solver,
+    m: usize,
+    draws: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(m * draws);
+    for d in 0..draws {
+        let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
+        let scenario = Scenario::draw(cfg, m, &mut rng);
+        out.extend(solver.solve(&scenario).per_user_energy());
+    }
+    out
+}
+
+/// A config variant with one field overridden.
+pub fn variant(cfg: &Arc<SystemConfig>, f: impl FnOnce(&mut SystemConfig)) -> Arc<SystemConfig> {
+    let mut c = (**cfg).clone();
+    f(&mut c);
+    Arc::new(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shape_and_crn_determinism() {
+        let cfg = SystemConfig::dssd3_default();
+        let a = sweep_users(&cfg, &[1, 4], 3, 7);
+        let b = sweep_users(&cfg, &[1, 4], 3, 7);
+        assert_eq!(a.solver_names.len(), 5);
+        assert_eq!(a.energy[0].len(), 2);
+        assert_eq!(a.energy, b.energy, "same seed, same numbers");
+    }
+
+    #[test]
+    fn ipssa_no_worse_than_lc_in_sweep() {
+        let cfg = SystemConfig::dssd3_default();
+        let s = sweep_users(&cfg, &[6], 4, 11);
+        let lc = s.energy[s.solver_names.iter().position(|&n| n == "LC").unwrap()][0];
+        let ip = s.energy[s.solver_names.iter().position(|&n| n == "IP-SSA").unwrap()][0];
+        assert!(ip <= lc + 1e-9);
+    }
+
+    #[test]
+    fn variant_override_applies() {
+        let cfg = SystemConfig::mobilenet_default();
+        let v = variant(&cfg, |c| c.radio.bandwidth_hz = 5e6);
+        assert_eq!(v.radio.bandwidth_hz, 5e6);
+        assert_eq!(cfg.radio.bandwidth_hz, 1e6, "original untouched");
+    }
+
+    #[test]
+    fn pooled_energies_count() {
+        let cfg = SystemConfig::mobilenet_default();
+        let xs = pooled_user_energies(&cfg, &crate::algo::ipssa::IpSsa, 5, 3, 2);
+        assert_eq!(xs.len(), 15);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+}

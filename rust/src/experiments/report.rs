@@ -1,0 +1,88 @@
+//! Experiment output sink: every experiment renders ASCII to stdout and
+//! persists a CSV + JSON pair under `results/` so EXPERIMENTS.md can quote
+//! stable numbers.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Where experiment outputs land (`$BATCHEDGE_RESULTS` or `./results`).
+pub fn results_dir() -> PathBuf {
+    std::env::var("BATCHEDGE_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Sink for one experiment id.
+pub struct Report {
+    id: String,
+    sections: Vec<String>,
+    tables: Vec<(String, Table)>,
+    json: Vec<(String, Json)>,
+}
+
+impl Report {
+    pub fn new(id: &str) -> Report {
+        Report { id: id.to_string(), sections: Vec::new(), tables: Vec::new(), json: Vec::new() }
+    }
+
+    /// Free-form text block (also printed).
+    pub fn text(&mut self, s: impl Into<String>) {
+        let s = s.into();
+        println!("{s}");
+        self.sections.push(s);
+    }
+
+    /// Add a table: printed now, persisted as `<id>.<tag>.csv`.
+    pub fn table(&mut self, tag: &str, t: Table) {
+        print!("{}", t.render());
+        self.sections.push(t.render());
+        self.tables.push((tag.to_string(), t));
+    }
+
+    /// Attach raw JSON data (persisted as `<id>.<tag>.json`).
+    pub fn json(&mut self, tag: &str, v: Json) {
+        self.json.push((tag.to_string(), v));
+    }
+
+    /// Persist everything.
+    pub fn save(&self) -> Result<()> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), self.sections.join("\n"))?;
+        for (tag, t) in &self.tables {
+            std::fs::write(dir.join(format!("{}.{}.csv", self.id, tag)), t.to_csv())?;
+        }
+        for (tag, v) in &self.json {
+            v.write_file(&dir.join(format!("{}.{}.json", self.id, tag)))?;
+        }
+        log::info!("saved results/{}.*", self.id);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_persists_txt_csv_json() {
+        let tmp = std::env::temp_dir().join("batchedge_report_test");
+        std::env::set_var("BATCHEDGE_RESULTS", &tmp);
+        let mut r = Report::new("unit");
+        r.text("hello");
+        let mut t = Table::new("T").header(&["a", "b"]);
+        t.row_f64("x", &[1.0], 2);
+        r.table("tab", t);
+        r.json("data", Json::Num(3.0));
+        r.save().unwrap();
+        assert!(tmp.join("unit.txt").exists());
+        assert!(tmp.join("unit.tab.csv").exists());
+        assert!(tmp.join("unit.data.json").exists());
+        std::env::remove_var("BATCHEDGE_RESULTS");
+        std::fs::remove_dir_all(tmp).ok();
+    }
+}

@@ -1,0 +1,132 @@
+//! Table V — online execution-cost statistics at M = 14 (Bernoulli):
+//! DDPG decision latency, offline-algorithm latency, tasks per scheduler
+//! call, tasks per group, for DDPG-OG / DDPG-IP-SSA / OG-TW=0.
+//!
+//! Paper shape: OG is an order of magnitude slower than IP-SSA per call
+//! and is called with more tasks under TW=0 than under DDPG (the busy
+//! period balloons); OG yields ~2–3 tasks per group.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::rl::env::{OnlineEnv, SchedulerAlg};
+use crate::rl::policy::{run_episode, DdpgPolicy, FixedTwPolicy, OnlinePolicy};
+use crate::rl::train::{train, TrainConfig};
+use crate::scenario::{ArrivalKind, ArrivalProcess};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+use super::report::Report;
+
+pub struct Params {
+    pub m: usize,
+    pub train: TrainConfig,
+    pub eval_slots: u64,
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            m: 14,
+            train: TrainConfig { episodes: 15, slots_per_episode: 300, ..Default::default() },
+            eval_slots: 800,
+            seed: 0xF169,
+        }
+    }
+}
+
+struct Row {
+    policy: String,
+    ddpg_ms: f64,
+    alg_ms: f64,
+    tasks_per_call: f64,
+    tasks_per_group: f64,
+}
+
+fn eval_policy(
+    cfg: &Arc<SystemConfig>,
+    alg: SchedulerAlg,
+    policy: &mut dyn OnlinePolicy,
+    p: &Params,
+) -> Row {
+    let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
+    let mut rng = Rng::seed_from(p.seed ^ 0x7AB5);
+    let mut env = OnlineEnv::new(cfg, p.m, arrivals, alg, p.train.slot_s, &mut rng);
+    run_episode(&mut env, policy, p.eval_slots, &mut rng);
+    Row {
+        policy: policy.name(),
+        // Filled in by the caller for DDPG policies (needs the concrete type).
+        ddpg_ms: f64::NAN,
+        alg_ms: env.stats.mean_latency_ms(),
+        tasks_per_call: env.stats.mean_tasks(),
+        tasks_per_group: if alg == SchedulerAlg::Og { env.stats.mean_tasks_per_group() } else { f64::NAN },
+    }
+}
+
+pub fn run(p: &Params) -> Result<()> {
+    let mut rep = Report::new("table5");
+    for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+        let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
+        let mut rows: Vec<Row> = Vec::new();
+
+        for (alg, label) in [(SchedulerAlg::Og, "DDPG-OG"), (SchedulerAlg::IpSsa, "DDPG-IP-SSA")] {
+            let mut rng = Rng::seed_from(p.seed ^ (p.m as u64) << 8);
+            let (agent, _) = train(&cfg, p.m, &arrivals, alg, &p.train, &mut rng);
+            let mut policy = DdpgPolicy::new(agent, label);
+            let mut row = eval_policy(&cfg, alg, &mut policy, p);
+            row.ddpg_ms = policy.mean_decision_ms();
+            rows.push(row);
+        }
+        let mut tw0 = FixedTwPolicy::new(0);
+        let mut row = eval_policy(&cfg, SchedulerAlg::Og, &mut tw0, p);
+        row.policy = "OG, TW=0".into();
+        rows.push(row);
+
+        let mut t = Table::new(&format!("Table V — {}, M={}, Bernoulli", cfg.net.name, p.m))
+            .header(&["metric", "DDPG-OG", "DDPG-IP-SSA", "OG, TW=0"]);
+        let col = |f: &dyn Fn(&Row) -> f64| -> Vec<f64> { rows.iter().map(|r| f(r)).collect() };
+        t.row_f64("Latency of DDPG (ms)", &col(&|r| r.ddpg_ms), 3);
+        t.row_f64("Latency of offline alg (ms)", &col(&|r| r.alg_ms), 3);
+        t.row_f64("Number of tasks", &col(&|r| r.tasks_per_call), 2);
+        t.row_f64("Number of tasks per group", &col(&|r| r.tasks_per_group), 2);
+        rep.table(&cfg.net.name, t);
+
+        rep.json(
+            &cfg.net.name,
+            Json::Obj(
+                rows.iter()
+                    .map(|r| {
+                        (
+                            r.policy.clone(),
+                            Json::obj(vec![
+                                ("ddpg_ms", Json::Num(r.ddpg_ms)),
+                                ("alg_ms", Json::Num(r.alg_ms)),
+                                ("tasks_per_call", Json::Num(r.tasks_per_call)),
+                                ("tasks_per_group", Json::Num(r.tasks_per_group)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+
+        // Paper-shape notes.
+        let og_ms = rows[0].alg_ms;
+        let ip_ms = rows[1].alg_ms;
+        let tw_tasks = rows[2].tasks_per_call;
+        let og_tasks = rows[0].tasks_per_call;
+        rep.text(format!(
+            "  shape[{}]: OG/IP-SSA latency ratio {:.1}x (paper ~6-10x); \
+             TW=0 tasks/call {:.2} vs DDPG-OG {:.2} (paper: TW=0 higher)",
+            cfg.net.name,
+            og_ms / ip_ms.max(1e-9),
+            tw_tasks,
+            og_tasks
+        ));
+    }
+    rep.save()
+}

@@ -1,0 +1,59 @@
+//! # batchedge
+//!
+//! A production-grade reproduction of *"Multi-user Co-inference with Batch
+//! Processing Capable Edge Server"* (Shi, Zhou, Niu, Jiang, Geng — 2022).
+//!
+//! `batchedge` is a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the co-inference coordinator: request
+//!   routing, batch scheduling, the paper's offline solvers
+//!   ([`algo::traverse`], [`algo::ipssa`], [`algo::og`]) and baselines,
+//!   a pure-Rust DDPG agent for the online setting ([`rl`]), a
+//!   discrete-event simulation core and a real-execution serving loop
+//!   ([`coordinator`]), plus the experiment harness that regenerates every
+//!   table and figure of the paper ([`experiments`]).
+//! * **Layer 2 (python/compile, build-time only)** — the workload DNNs
+//!   (mobilenet-v2 and 3dssd proxies) written in JAX at sub-task
+//!   granularity and AOT-lowered to HLO text per `(net, sub-task, batch)`.
+//! * **Layer 1 (python/compile/kernels, build-time only)** — Pallas kernels
+//!   for the batched hot spots, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and executes them
+//! from Rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use batchedge::prelude::*;
+//!
+//! // Draw an offline scenario: 8 users in a 100 m cell running mobilenet-v2.
+//! let cfg = SystemConfig::mobilenet_default();
+//! let mut rng = Rng::seed_from(7);
+//! let scenario = Scenario::draw(&cfg, 8, &mut rng);
+//! // Solve it with IP-SSA and check the plan against the paper's constraints.
+//! let plan = ipssa::solve(&scenario);
+//! assert!(feasibility::check(&scenario, &plan).is_ok());
+//! println!("total user energy: {:.3} J", plan.total_energy());
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod dnn;
+pub mod wireless;
+pub mod device;
+pub mod scenario;
+pub mod algo;
+pub mod rl;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::algo::{self, feasibility, ipssa, og, traverse, Plan, Solver};
+    pub use crate::config::SystemConfig;
+    pub use crate::dnn::{DnnModel, LatencyProfile, SubTask};
+    pub use crate::scenario::Scenario;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,272 @@
+//! `batchedge` — leader entrypoint.
+//!
+//! Subcommands:
+//!   profile     measure F_n(b) of the AOT artifacts on CPU-PJRT (Fig. 3)
+//!   solve       solve one offline scenario and print the plan
+//!   serve       run the online serving coordinator (sim or real compute)
+//!   train       train a DDPG agent and print the learning curve
+//!   experiment  regenerate a paper table/figure (fig3 fig5 fig6 fig7
+//!               table3 fig8 table5, or `all`)
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use batchedge::algo::{baselines, feasibility, ipssa, og, Solver};
+use batchedge::config::SystemConfig;
+use batchedge::coordinator::Coordinator;
+use batchedge::experiments;
+use batchedge::rl::env::SchedulerAlg;
+use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
+use batchedge::rl::train::{train, TrainConfig};
+use batchedge::runtime::{default_artifacts_root, profiler, Runtime};
+use batchedge::scenario::{ArrivalKind, ArrivalProcess, Scenario};
+use batchedge::util::cli::{Cli, CliError};
+use batchedge::util::rng::Rng;
+use batchedge::util::table::Table;
+
+fn main() {
+    batchedge::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        if let Some(CliError::Help(usage)) = e.downcast_ref::<CliError>() {
+            println!("{usage}");
+            return;
+        }
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let sub = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match sub {
+        "profile" => cmd_profile(rest),
+        "solve" => cmd_solve(rest),
+        "serve" => cmd_serve(rest),
+        "train" => cmd_train(rest),
+        "experiment" => cmd_experiment(rest),
+        "help" | "--help" | "-h" => {
+            println!(
+                "batchedge — multi-user co-inference with a batch-capable edge server\n\n\
+                 USAGE: batchedge <profile|solve|serve|train|experiment> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}; try `batchedge help`"),
+    }
+}
+
+fn net_cfg(name: &str) -> Result<Arc<SystemConfig>> {
+    SystemConfig::by_name(name).ok_or_else(|| anyhow!("unknown net {name} (mobilenet_v2|dssd3)"))
+}
+
+fn cmd_profile(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge profile", "measure F_n(b) on CPU-PJRT (Fig. 3)")
+        .opt("artifacts", None, "artifacts dir (default ./artifacts)")
+        .opt("reps", Some("5"), "repetitions per point")
+        .opt("out", None, "write profiles JSON under this dir");
+    let args = cli.parse(argv)?;
+    let root = args.str("artifacts").map(Into::into).unwrap_or_else(default_artifacts_root);
+    let rt = Runtime::open(&root)?;
+    for net in ["mobilenet_v2", "dssd3"] {
+        let settings = profiler::ProfileSettings { reps: args.usize("reps")?, ..Default::default() };
+        let (profile, _raw) = profiler::profile_net(&rt, net, &settings)?;
+        let mut t = Table::new(&format!("measured F_n(b) — {net} (ms)"))
+            .header(&["sub-task", "b=1", "b=2", "b=4", "b=8", "b=16"]);
+        for (i, st) in rt.manifest().net(net)?.subtasks.iter().enumerate() {
+            let row: Vec<f64> =
+                [1usize, 2, 4, 8, 16].iter().map(|&b| profile.f(i + 1, b) * 1e3).collect();
+            t.row_f64(&st.name, &row, 3);
+        }
+        print!("{}", t.render());
+        if let Some(out) = args.str("out") {
+            let path = std::path::Path::new(out).join(format!("{net}.json"));
+            profile.to_json().write_file(&path)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_solve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge solve", "solve one offline scenario")
+        .opt("net", Some("mobilenet_v2"), "workload net")
+        .opt("users", Some("10"), "number of users M")
+        .opt("alg", Some("ipssa"), "ipssa|og|lc|ps|fifo|np")
+        .opt("seed", Some("1"), "scenario seed")
+        .opt("deadline-ms", None, "override latency constraint")
+        .opt("mixed-deadlines", None, "draw deadlines in [lo,hi] ms, e.g. 50,200");
+    let args = cli.parse(argv)?;
+    let mut cfg = (*net_cfg(args.str("net").unwrap())?).clone();
+    if let Some(dl) = args.str("deadline-ms") {
+        cfg.deadline_s = dl.parse::<f64>().map_err(|e| anyhow!("deadline-ms: {e}"))? * 1e-3;
+    }
+    let cfg = Arc::new(cfg);
+    let mut rng = Rng::seed_from(args.u64("seed")?);
+    let m = args.usize("users")?;
+    let scenario = match args.str("mixed-deadlines") {
+        Some(_) => {
+            let range = args.list_f64("mixed-deadlines")?;
+            if range.len() != 2 {
+                bail!("--mixed-deadlines wants lo,hi (ms)");
+            }
+            Scenario::draw_mixed_deadlines(&cfg, m, range[0] * 1e-3, range[1] * 1e-3, &mut rng)
+        }
+        None => Scenario::draw(&cfg, m, &mut rng),
+    };
+
+    let solver: Box<dyn Solver> = match args.str("alg").unwrap() {
+        "ipssa" => Box::new(ipssa::IpSsa),
+        "og" => Box::new(og::Og),
+        "lc" => Box::new(baselines::LocalOnly),
+        "ps" => Box::new(baselines::ProcessorSharing),
+        "fifo" => Box::new(baselines::Fifo),
+        "np" => Box::new(baselines::IpSsaNp),
+        other => bail!("unknown alg {other}"),
+    };
+    let t0 = std::time::Instant::now();
+    let r = solver.solve(&scenario);
+    let took = t0.elapsed();
+    feasibility::check(&r.scenario, &r.plan).map_err(|v| anyhow!("infeasible plan: {v}"))?;
+
+    println!(
+        "{}: E = {:.4} J total ({:.4} J/user), solved in {:.2?}, assumed batch {}",
+        solver.name(),
+        r.plan.total_energy(),
+        r.plan.mean_energy(),
+        took,
+        r.plan.assumed_batch
+    );
+    let mut t = Table::new("per-user plan")
+        .header(&["user", "rate_up (Mbps)", "deadline (ms)", "partition", "phi", "energy (J)", "finish (ms)"]);
+    for (i, (u, p)) in r.scenario.users.iter().zip(&r.plan.users).enumerate() {
+        t.row(vec![
+            format!("{i}"),
+            format!("{:.2}", u.rate_up / 1e6),
+            format!("{:.0}", u.deadline * 1e3),
+            format!("{}", p.partition),
+            format!("{:.3}", p.phi),
+            format!("{:.4}", p.energy),
+            format!("{:.1}", p.finish * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    let mut bt = Table::new("batches").header(&["sub-task", "start (ms)", "dur (ms)", "size"]);
+    for b in &r.plan.batches {
+        bt.row(vec![
+            format!("{}", b.sub),
+            format!("{:.2}", b.start * 1e3),
+            format!("{:.2}", b.duration * 1e3),
+            format!("{}", b.size()),
+        ]);
+    }
+    print!("{}", bt.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge serve", "run the online serving coordinator")
+        .opt("net", Some("mobilenet_v2"), "workload net")
+        .opt("users", Some("8"), "number of users M")
+        .opt("slots", Some("400"), "time slots to serve")
+        .opt("policy", Some("tw0"), "lc|tw<k>|ddpg-og|ddpg-ipssa")
+        .opt("arrivals", Some("bernoulli"), "bernoulli|immediate")
+        .opt("episodes", Some("12"), "DDPG training episodes (ddpg policies)")
+        .opt("seed", Some("1"), "rng seed")
+        .switch("real", "execute scheduled plans on the PJRT runtime");
+    let args = cli.parse(argv)?;
+    let cfg = net_cfg(args.str("net").unwrap())?;
+    let m = args.usize("users")?;
+    let kind = match args.str("arrivals").unwrap() {
+        "bernoulli" => ArrivalKind::Bernoulli,
+        "immediate" => ArrivalKind::Immediate,
+        other => bail!("unknown arrival process {other}"),
+    };
+    let arrivals = ArrivalProcess::paper_default(&cfg.net.name, kind);
+    let seed = args.u64("seed")?;
+
+    let (policy, alg): (Box<dyn OnlinePolicy>, SchedulerAlg) = match args.str("policy").unwrap() {
+        "lc" => (Box::new(LcPolicy), SchedulerAlg::Og),
+        p if p.starts_with("tw") => {
+            let k: u64 = p[2..].parse().map_err(|e| anyhow!("policy {p}: {e}"))?;
+            (Box::new(FixedTwPolicy::new(k)), SchedulerAlg::Og)
+        }
+        p @ ("ddpg-og" | "ddpg-ipssa") => {
+            let alg = if p == "ddpg-og" { SchedulerAlg::Og } else { SchedulerAlg::IpSsa };
+            let tc = TrainConfig { episodes: args.usize("episodes")?, ..Default::default() };
+            let mut rng = Rng::seed_from(seed ^ 0xDD);
+            log::info!("training {p} for {} episodes...", tc.episodes);
+            let (agent, _) = train(&cfg, m, &arrivals, alg, &tc, &mut rng);
+            (Box::new(DdpgPolicy::new(agent, p)), alg)
+        }
+        other => bail!("unknown policy {other}"),
+    };
+
+    let runtime = if args.has("real") {
+        Some(Arc::new(Runtime::open(&default_artifacts_root())?))
+    } else {
+        None
+    };
+    let mut coord =
+        Coordinator::new(&cfg, m, arrivals, alg, 0.025, policy, runtime, seed)?;
+    let slots = args.u64("slots")?;
+    let report = coord.run(slots)?;
+    println!("serve: {}", report.render());
+    println!(
+        "throughput: {:.2} tasks/s (model time); scheduler calls: {}; mean batch size {:.2}",
+        report.throughput(slots as f64 * 0.025),
+        coord.env.stats.calls,
+        coord.metrics.mean_batch_size()
+    );
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge train", "train a DDPG agent")
+        .opt("net", Some("mobilenet_v2"), "workload net")
+        .opt("users", Some("8"), "number of users M")
+        .opt("alg", Some("og"), "og|ipssa")
+        .opt("episodes", Some("30"), "episodes")
+        .opt("slots", Some("400"), "slots per episode")
+        .opt("seed", Some("1"), "rng seed");
+    let args = cli.parse(argv)?;
+    let cfg = net_cfg(args.str("net").unwrap())?;
+    let alg = match args.str("alg").unwrap() {
+        "og" => SchedulerAlg::Og,
+        "ipssa" => SchedulerAlg::IpSsa,
+        other => bail!("unknown alg {other}"),
+    };
+    let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
+    let tc = TrainConfig {
+        episodes: args.usize("episodes")?,
+        slots_per_episode: args.u64("slots")?,
+        log_every: 1,
+        ..Default::default()
+    };
+    let mut rng = Rng::seed_from(args.u64("seed")?);
+    let (_, curve) = train(&cfg, args.usize("users")?, &arrivals, alg, &tc, &mut rng);
+    let mut t = Table::new("learning curve")
+        .header(&["episode", "energy/user/slot (J)", "completed", "forced"]);
+    for l in &curve {
+        t.row(vec![
+            format!("{}", l.episode),
+            format!("{:.4}", l.energy_per_user_slot),
+            format!("{}", l.tasks_completed),
+            format!("{}", l.tasks_forced),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge experiment", "regenerate a paper table/figure")
+        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|all")
+        .switch("quick", "smoke-scale parameters");
+    let args = cli.parse(argv)?;
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    experiments::run(id, args.has("quick"))
+}

@@ -1,0 +1,218 @@
+//! DDPG (Lillicrap et al. 2016) — the online agent of §IV-C.
+//!
+//! Actor `μ(s) ∈ [-1,1]²` (tanh) and critic `Q(s,a)` are 3-layer 128-wide
+//! MLPs (paper Table IV). The continuous 2-D output is decoded by
+//! [`Action::from_raw`](super::env::Action::from_raw): equal-width
+//! discretization of the first dimension into `c ∈ {0,1,2}` (the paper's
+//! footnote-4 recipe) and a linear map of the second onto `[0, l_high]`.
+
+use crate::util::rng::Rng;
+
+use super::mlp::{Act, Mlp};
+use super::replay::{ReplayBuffer, Transition};
+
+/// DDPG hyper-parameters (defaults = paper Table IV, except the episode
+/// schedule which EXPERIMENTS.md documents as CPU-scaled).
+#[derive(Debug, Clone)]
+pub struct DdpgConfig {
+    pub hidden: usize,
+    pub actor_lr: f64,
+    pub critic_lr: f64,
+    pub gamma: f64,
+    /// Target smoothing τ.
+    pub tau: f64,
+    /// Gaussian exploration noise std (raw action space).
+    pub noise_std: f64,
+    pub batch_size: usize,
+    pub replay_capacity: usize,
+    /// Gradient updates performed per environment step.
+    pub updates_per_step: usize,
+    /// Steps collected before training starts.
+    pub warmup_steps: usize,
+}
+
+impl Default for DdpgConfig {
+    fn default() -> Self {
+        DdpgConfig {
+            hidden: 128,
+            actor_lr: 1e-4,
+            critic_lr: 1e-3,
+            gamma: 0.99,
+            tau: 0.005,
+            noise_std: 0.1,
+            batch_size: 128,
+            replay_capacity: 1_000_000,
+            updates_per_step: 1,
+            warmup_steps: 256,
+        }
+    }
+}
+
+/// The agent: actor/critic plus target copies and replay.
+pub struct Ddpg {
+    pub cfg: DdpgConfig,
+    pub actor: Mlp,
+    pub critic: Mlp,
+    actor_t: Mlp,
+    critic_t: Mlp,
+    pub replay: ReplayBuffer,
+    state_dim: usize,
+    action_dim: usize,
+}
+
+impl Ddpg {
+    pub fn new(state_dim: usize, action_dim: usize, cfg: DdpgConfig, rng: &mut Rng) -> Ddpg {
+        let h = cfg.hidden;
+        let actor = Mlp::new(&[state_dim, h, h, action_dim], Act::Relu, Act::Tanh, rng);
+        let critic = Mlp::new(&[state_dim + action_dim, h, h, 1], Act::Relu, Act::Linear, rng);
+        let mut actor_t = actor.clone();
+        let mut critic_t = critic.clone();
+        actor_t.copy_weights_from(&actor);
+        critic_t.copy_weights_from(&critic);
+        Ddpg {
+            replay: ReplayBuffer::new(cfg.replay_capacity),
+            cfg,
+            actor,
+            critic,
+            actor_t,
+            critic_t,
+            state_dim,
+            action_dim,
+        }
+    }
+
+    /// Deterministic policy output in `[-1, 1]^action_dim`.
+    pub fn act(&self, state: &[f64]) -> Vec<f64> {
+        self.actor.forward(state)
+    }
+
+    /// Exploration policy: `μ(s) + N(0, σ)`, clipped.
+    pub fn act_explore(&self, state: &[f64], rng: &mut Rng) -> Vec<f64> {
+        self.act(state)
+            .into_iter()
+            .map(|a| (a + rng.normal_ms(0.0, self.cfg.noise_std)).clamp(-1.0, 1.0))
+            .collect()
+    }
+
+    pub fn remember(&mut self, t: Transition) {
+        debug_assert_eq!(t.state.len(), self.state_dim);
+        debug_assert_eq!(t.action.len(), self.action_dim);
+        self.replay.push(t);
+    }
+
+    /// One critic + actor update on a uniform minibatch. Returns
+    /// `(critic_loss, actor_objective)` for logging, or `None` during
+    /// warmup.
+    pub fn update(&mut self, rng: &mut Rng) -> Option<(f64, f64)> {
+        if self.replay.len() < self.cfg.warmup_steps.max(self.cfg.batch_size) {
+            return None;
+        }
+        let batch: Vec<Transition> = self
+            .replay
+            .sample(self.cfg.batch_size, rng)
+            .into_iter()
+            .cloned()
+            .collect();
+        let inv = 1.0 / batch.len() as f64;
+
+        // ---- Critic: minimize (Q(s,a) - y)², y = r + γ(1-d)·Q'(s',μ'(s')).
+        let mut critic_loss = 0.0;
+        self.critic.zero_grad();
+        for t in &batch {
+            let a2 = self.actor_t.forward(&t.next_state);
+            let mut in2 = t.next_state.clone();
+            in2.extend(&a2);
+            let q2 = self.critic_t.forward(&in2)[0];
+            let y = t.reward + if t.done { 0.0 } else { self.cfg.gamma * q2 };
+
+            let mut input = t.state.clone();
+            input.extend(&t.action);
+            let q = self.critic.forward_train(&input)[0];
+            let err = q - y;
+            critic_loss += err * err * inv;
+            self.critic.backward(&[2.0 * err * inv]);
+        }
+        self.critic.adam_step(self.cfg.critic_lr);
+
+        // ---- Actor: maximize Q(s, μ(s)) — ascend via dQ/da · dμ/dθ.
+        let mut actor_obj = 0.0;
+        self.actor.zero_grad();
+        for t in &batch {
+            let a = self.actor.forward_train(&t.state);
+            let mut input = t.state.clone();
+            input.extend(&a);
+            let q = self.critic.forward_train(&input)[0];
+            actor_obj += q * inv;
+            // dL/dQ = -1/B (gradient ASCENT on Q): grads w.r.t. critic
+            // input, sliced to the action part, flow into the actor.
+            self.critic.zero_grad(); // scratch use; critic params not stepped here
+            let dinput = self.critic.backward(&[-inv]);
+            self.actor.backward(&dinput[self.state_dim..]);
+        }
+        self.actor.adam_step(self.cfg.actor_lr);
+
+        // ---- Targets.
+        self.actor_t.soft_update_from(&self.actor, self.cfg.tau);
+        self.critic_t.soft_update_from(&self.critic, self.cfg.tau);
+        Some((critic_loss, actor_obj))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1-D toy: state x, reward = -(a - 0.6)² each step. The optimal policy
+    /// outputs 0.6 regardless of state; DDPG should find it.
+    #[test]
+    fn learns_constant_target_action() {
+        let mut rng = Rng::seed_from(7);
+        let cfg = DdpgConfig {
+            hidden: 32,
+            batch_size: 32,
+            warmup_steps: 64,
+            noise_std: 0.3,
+            ..Default::default()
+        };
+        let mut agent = Ddpg::new(1, 1, cfg, &mut rng);
+        let mut state = vec![0.0f64];
+        for step in 0..3000 {
+            let a = agent.act_explore(&state, &mut rng);
+            let reward = -(a[0] - 0.6) * (a[0] - 0.6);
+            let next = vec![(step % 10) as f64 / 10.0];
+            agent.remember(Transition {
+                state: state.clone(),
+                action: a,
+                reward,
+                next_state: next.clone(),
+                done: false,
+            });
+            agent.update(&mut rng);
+            state = next;
+        }
+        let a = agent.act(&[0.3]);
+        assert!(
+            (a[0] - 0.6).abs() < 0.15,
+            "policy should converge near 0.6, got {}",
+            a[0]
+        );
+    }
+
+    #[test]
+    fn update_is_none_during_warmup() {
+        let mut rng = Rng::seed_from(1);
+        let mut agent = Ddpg::new(2, 2, DdpgConfig::default(), &mut rng);
+        assert!(agent.update(&mut rng).is_none());
+    }
+
+    #[test]
+    fn exploration_noise_is_clipped() {
+        let mut rng = Rng::seed_from(2);
+        let cfg = DdpgConfig { noise_std: 5.0, ..Default::default() };
+        let agent = Ddpg::new(2, 2, cfg, &mut rng);
+        for _ in 0..100 {
+            let a = agent.act_explore(&[0.1, -0.5], &mut rng);
+            assert!(a.iter().all(|x| (-1.0..=1.0).contains(x)));
+        }
+    }
+}

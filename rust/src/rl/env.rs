@@ -1,0 +1,427 @@
+//! The online MDP of §IV-C: slotted time, task buffers, 2-D action.
+//!
+//! * **State** `s_t = [l_t, o_t]`: per-user remaining latency constraints
+//!   (0 = no pending task) and the edge server's remaining busy period.
+//! * **Action** `a_t = [c_t, l_th]`: `c ∈ {0: wait, 1: local, 2: call the
+//!   offline scheduler}`; `l_th` caps the deadline of scheduled tasks so
+//!   the busy period (and hence the resources reserved away from future
+//!   tasks) stays controllable — the paper's two-trade-off design.
+//! * **Reward** `r_t = −E(s,a) − C(l_t)`, where `C` charges `e(f_max)` for
+//!   every task forced to emergency-local because waiting one more slot
+//!   would make its deadline unreachable.
+
+use std::sync::Arc;
+
+use crate::algo::{ipssa, og};
+use crate::config::SystemConfig;
+use crate::scenario::{ArrivalProcess, Scenario, User};
+use crate::util::rng::Rng;
+
+/// Which offline algorithm `c = 2` invokes (DDPG-OG vs DDPG-IP-SSA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerAlg {
+    Og,
+    IpSsa,
+}
+
+/// Decoded environment action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Action {
+    /// 0 = do nothing, 1 = local-process all, 2 = call the scheduler.
+    pub c: u8,
+    /// Deadline cap for scheduled tasks (s).
+    pub l_th: f64,
+}
+
+impl Action {
+    /// Decode a raw DDPG output in `[-1, 1]²` (equal-width discretization
+    /// of `c`, linear map of `l_th` onto `[0, l_high]`).
+    pub fn from_raw(raw: &[f64], l_high: f64) -> Action {
+        let c = (((raw[0] + 1.0) / 2.0 * 3.0).floor() as i64).clamp(0, 2) as u8;
+        let l_th = ((raw[1] + 1.0) / 2.0 * l_high).clamp(0.0, l_high);
+        Action { c, l_th }
+    }
+}
+
+/// Fine-grained task lifecycle event within one slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepEvent {
+    /// Task of `user` dispatched by the offline scheduler.
+    Scheduled { user: usize, energy: f64, finish_s: f64, offloaded: bool },
+    /// Task of `user` locally processed by policy choice (`c = 1`).
+    LocalProcessed { user: usize, energy: f64, run_s: f64 },
+    /// Task of `user` forced to fmax-local by the deadline guard.
+    Forced { user: usize, energy: f64 },
+    /// A new task arrived for `user` with this deadline.
+    Arrived { user: usize, deadline: f64 },
+}
+
+/// Per-step outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct StepResult {
+    pub reward: f64,
+    /// Scheduled/local processing energy this slot (J).
+    pub energy: f64,
+    /// Forced-local penalty energy `C(l_t)` this slot (J).
+    pub penalty: f64,
+}
+
+/// Scheduler-call statistics (Table V).
+#[derive(Debug, Clone, Default)]
+pub struct AlgStats {
+    pub calls: u64,
+    pub latency_sum_s: f64,
+    pub tasks_sum: u64,
+    pub groups_sum: u64,
+}
+
+impl AlgStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.calls as f64 * 1e3
+        }
+    }
+
+    pub fn mean_tasks(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.tasks_sum as f64 / self.calls as f64
+        }
+    }
+
+    pub fn mean_tasks_per_group(&self) -> f64 {
+        if self.groups_sum == 0 {
+            0.0
+        } else {
+            self.tasks_sum as f64 / self.groups_sum as f64
+        }
+    }
+}
+
+/// The slotted online environment.
+pub struct OnlineEnv {
+    pub cfg: Arc<SystemConfig>,
+    /// Episode-static channel realizations.
+    pub users: Vec<User>,
+    pub arrivals: ArrivalProcess,
+    pub alg: SchedulerAlg,
+    /// Slot length `T` (s).
+    pub slot_s: f64,
+    /// Remaining deadline of each user's pending task (None = empty buffer).
+    pub pending: Vec<Option<f64>>,
+    /// Remaining edge busy period `o_t` (s).
+    pub busy: f64,
+    pub slot: u64,
+
+    // Episode metrics.
+    pub total_energy: f64,
+    pub total_penalty: f64,
+    pub tasks_completed: u64,
+    pub tasks_forced: u64,
+    pub stats: AlgStats,
+    /// The most recent scheduler output (plan + scenario-member indices) —
+    /// consumed by the coordinator to execute the real batches.
+    pub last_plan: Option<(crate::algo::Plan, Vec<usize>)>,
+    /// What happened to each task this step (cleared on every `step`) —
+    /// the coordinator's per-request accounting feed.
+    pub step_events: Vec<StepEvent>,
+
+    // Cached model constants.
+    lcp_fmax: f64,
+    e_fmax: f64,
+}
+
+impl OnlineEnv {
+    /// New episode: draw channels, empty buffers, idle server.
+    pub fn new(
+        cfg: &Arc<SystemConfig>,
+        m: usize,
+        arrivals: ArrivalProcess,
+        alg: SchedulerAlg,
+        slot_s: f64,
+        rng: &mut Rng,
+    ) -> OnlineEnv {
+        let users = (0..m)
+            .map(|_| {
+                let (d, up, dn) = cfg.radio.draw_user(rng);
+                User { distance_m: d, rate_up: up, rate_dn: dn, deadline: 0.0, arrival: 0.0 }
+            })
+            .collect();
+        let n = cfg.net.n();
+        let lcp_fmax = cfg.device.prefix_latency_fmax(&cfg.profile, n);
+        let e_fmax = cfg.device.prefix_energy_fmax(&cfg.profile, n);
+        OnlineEnv {
+            cfg: Arc::clone(cfg),
+            users,
+            arrivals,
+            alg,
+            slot_s,
+            pending: vec![None; m],
+            busy: 0.0,
+            slot: 0,
+            total_energy: 0.0,
+            total_penalty: 0.0,
+            tasks_completed: 0,
+            tasks_forced: 0,
+            stats: AlgStats::default(),
+            last_plan: None,
+            step_events: Vec::new(),
+            lcp_fmax,
+            e_fmax,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.users.len()
+    }
+
+    /// Minimum local `f_max` latency `l_cp(f_max)` — the forced-local guard.
+    pub fn lcp_fmax(&self) -> f64 {
+        self.lcp_fmax
+    }
+
+    /// State vector for the agent: `[l_1..l_M, o] / l_high`.
+    pub fn state(&self) -> Vec<f64> {
+        let scale = self.arrivals.l_high;
+        let mut s: Vec<f64> = self
+            .pending
+            .iter()
+            .map(|p| p.unwrap_or(0.0) / scale)
+            .collect();
+        s.push(self.busy / scale);
+        s
+    }
+
+    /// Advance one slot under `action`.
+    pub fn step(&mut self, action: Action, rng: &mut Rng) -> StepResult {
+        let mut energy = 0.0;
+        let mut penalty = 0.0;
+        self.step_events.clear();
+
+        let effective_c = if action.c == 2 && self.busy > 1e-12 {
+            // The GPU is still occupied by the previous scheduling round;
+            // a new round cannot start (the agent learns to time this via
+            // o_t in the state).
+            0
+        } else {
+            action.c
+        };
+
+        match effective_c {
+            1 => {
+                // Local-process every pending task at its minimal feasible
+                // frequency.
+                for i in 0..self.pending.len() {
+                    if let Some(l) = self.pending[i].take() {
+                        let phi = self
+                            .cfg
+                            .device
+                            .frequency_for(self.lcp_fmax, l)
+                            .unwrap_or(1.0);
+                        let e = self.cfg.device.energy_at(self.e_fmax, phi);
+                        energy += e;
+                        self.tasks_completed += 1;
+                        self.step_events.push(StepEvent::LocalProcessed {
+                            user: i,
+                            energy: e,
+                            run_s: self.lcp_fmax / phi,
+                        });
+                    }
+                }
+            }
+            2 => {
+                let members: Vec<usize> =
+                    (0..self.m()).filter(|&i| self.pending[i].is_some()).collect();
+                if !members.is_empty() {
+                    energy += self.call_scheduler(&members, action.l_th);
+                }
+            }
+            _ => {}
+        }
+
+        // Time passes: decrement deadlines; tasks that would become
+        // unreachable next slot are forced local at f_max (the cost C).
+        for i in 0..self.pending.len() {
+            if let Some(l) = self.pending[i] {
+                let l2 = l - self.slot_s;
+                if l2 < self.lcp_fmax {
+                    penalty += self.e_fmax;
+                    self.tasks_forced += 1;
+                    self.pending[i] = None;
+                    self.step_events.push(StepEvent::Forced { user: i, energy: self.e_fmax });
+                } else {
+                    self.pending[i] = Some(l2);
+                }
+            }
+        }
+        self.busy = (self.busy - self.slot_s).max(0.0);
+
+        // New arrivals (one pending task per user at most).
+        for i in 0..self.m() {
+            if let Some(l) = self.arrivals.step(self.pending[i].is_some(), rng) {
+                self.pending[i] = Some(l);
+                self.step_events.push(StepEvent::Arrived { user: i, deadline: l });
+            }
+        }
+
+        self.slot += 1;
+        self.total_energy += energy;
+        self.total_penalty += penalty;
+        StepResult { reward: -(energy + penalty), energy, penalty }
+    }
+
+    /// Invoke the offline algorithm over the pending tasks with deadlines
+    /// capped at `l_th` (the second action dimension). Returns the energy.
+    fn call_scheduler(&mut self, members: &[usize], l_th: f64) -> f64 {
+        // Build an offline scenario: tasks are "arrived now" with their
+        // remaining deadlines, capped at l_th but never below the minimum
+        // local-processing time (the cap trades busy period, not
+        // feasibility).
+        let users: Vec<User> = members
+            .iter()
+            .map(|&i| {
+                let mut u = self.users[i].clone();
+                let l = self.pending[i].unwrap();
+                u.deadline = l.min(l_th.max(self.lcp_fmax)).max(self.lcp_fmax);
+                u.arrival = 0.0;
+                u
+            })
+            .collect();
+        let scenario = Scenario { cfg: Arc::clone(&self.cfg), users };
+        let t0 = std::time::Instant::now();
+        let plan = match self.alg {
+            SchedulerAlg::Og => og::solve(&scenario),
+            SchedulerAlg::IpSsa => ipssa::solve(&scenario),
+        };
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        self.stats.calls += 1;
+        self.stats.latency_sum_s += elapsed;
+        self.stats.tasks_sum += members.len() as u64;
+        self.stats.groups_sum += plan.groups.len() as u64;
+
+        // Paper: the busy period becomes the last group's deadline; we use
+        // the realized end of the batch schedule (≤ that, tighter).
+        self.busy = plan.busy_window().map(|(_, end)| end).unwrap_or(0.0);
+        let n = self.cfg.net.n();
+        for (slot_idx, &i) in members.iter().enumerate() {
+            self.pending[i] = None;
+            self.tasks_completed += 1;
+            let up = &plan.users[slot_idx];
+            self.step_events.push(StepEvent::Scheduled {
+                user: i,
+                energy: up.energy,
+                finish_s: up.finish,
+                offloaded: up.partition < n,
+            });
+        }
+        let energy = plan.total_energy();
+        self.last_plan = Some((plan, members.to_vec()));
+        energy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ArrivalKind;
+
+    fn env(alg: SchedulerAlg, kind: ArrivalKind) -> (OnlineEnv, Rng) {
+        let cfg = SystemConfig::mobilenet_default();
+        let arr = ArrivalProcess::paper_default("mobilenet_v2", kind);
+        let mut rng = Rng::seed_from(11);
+        let env = OnlineEnv::new(&cfg, 4, arr, alg, 0.025, &mut rng);
+        (env, rng)
+    }
+
+    #[test]
+    fn action_decoding_covers_all_c() {
+        assert_eq!(Action::from_raw(&[-1.0, 0.0], 0.2).c, 0);
+        assert_eq!(Action::from_raw(&[0.0, 0.0], 0.2).c, 1);
+        assert_eq!(Action::from_raw(&[0.9, 0.0], 0.2).c, 2);
+        let a = Action::from_raw(&[0.0, 1.0], 0.2);
+        assert!((a.l_th - 0.2).abs() < 1e-12);
+        assert_eq!(Action::from_raw(&[0.0, -1.0], 0.2).l_th, 0.0);
+    }
+
+    #[test]
+    fn waiting_accumulates_tasks_then_forced_local_charges_penalty() {
+        let (mut env, mut rng) = env(SchedulerAlg::IpSsa, ArrivalKind::Immediate);
+        let mut penalties = 0.0;
+        for _ in 0..64 {
+            let r = env.step(Action { c: 0, l_th: 0.2 }, &mut rng);
+            penalties += r.penalty;
+        }
+        // Doing nothing forever: every task eventually forced local.
+        assert!(env.tasks_forced > 0);
+        assert!(penalties > 0.0);
+        assert_eq!(env.tasks_completed, 0);
+    }
+
+    #[test]
+    fn local_action_clears_buffers_with_dvfs_energy() {
+        let (mut env, mut rng) = env(SchedulerAlg::IpSsa, ArrivalKind::Immediate);
+        env.step(Action { c: 0, l_th: 0.2 }, &mut rng); // let arrivals land
+        assert!(env.pending.iter().any(Option::is_some));
+        let r = env.step(Action { c: 1, l_th: 0.2 }, &mut rng);
+        assert!(r.energy > 0.0);
+        // Energy must be below the all-fmax worst case.
+        assert!(r.energy < env.e_fmax * env.m() as f64);
+    }
+
+    #[test]
+    fn scheduler_action_sets_busy_and_completes_tasks() {
+        let (mut env, mut rng) = env(SchedulerAlg::Og, ArrivalKind::Immediate);
+        env.step(Action { c: 0, l_th: 0.2 }, &mut rng);
+        let pending_before = env.pending.iter().filter(|p| p.is_some()).count();
+        assert!(pending_before > 0);
+        env.step(Action { c: 2, l_th: 0.2 }, &mut rng);
+        assert_eq!(env.stats.calls, 1);
+        assert_eq!(env.stats.tasks_sum as usize, pending_before);
+        assert!(env.tasks_completed as usize >= pending_before);
+    }
+
+    #[test]
+    fn busy_server_defers_scheduler_calls() {
+        let (mut env, mut rng) = env(SchedulerAlg::Og, ArrivalKind::Immediate);
+        env.step(Action { c: 0, l_th: 0.2 }, &mut rng);
+        env.step(Action { c: 2, l_th: 0.2 }, &mut rng);
+        if env.busy > 1e-9 {
+            let calls_before = env.stats.calls;
+            env.step(Action { c: 2, l_th: 0.2 }, &mut rng);
+            // Second call while busy degrades to no-op.
+            assert_eq!(env.stats.calls, calls_before);
+        }
+    }
+
+    #[test]
+    fn state_vector_layout() {
+        let (mut env, mut rng) = env(SchedulerAlg::IpSsa, ArrivalKind::Bernoulli);
+        let s = env.state();
+        assert_eq!(s.len(), env.m() + 1);
+        assert!(s.iter().all(|&x| (0.0..=1.001).contains(&x)));
+        for _ in 0..50 {
+            env.step(Action { c: 0, l_th: 0.1 }, &mut rng);
+        }
+        assert!(env.state().iter().all(|&x| x.is_finite()));
+    }
+
+    #[test]
+    fn bernoulli_arrival_rate_statistics() {
+        let (mut env, mut rng) = env(SchedulerAlg::IpSsa, ArrivalKind::Bernoulli);
+        let mut arrivals = 0u64;
+        for _ in 0..2000 {
+            let before: usize = env.pending.iter().filter(|p| p.is_some()).count();
+            env.step(Action { c: 1, l_th: 0.2 }, &mut rng); // drain every slot
+            let _ = before;
+            arrivals = env.tasks_completed + env.tasks_forced;
+        }
+        // p=0.25 per user per slot with immediate draining -> roughly
+        // 0.25 * M * slots arrivals.
+        let expect = 0.25 * env.m() as f64 * 2000.0;
+        assert!((arrivals as f64) > expect * 0.8 && (arrivals as f64) < expect * 1.2);
+    }
+}

@@ -1,0 +1,344 @@
+//! Dense multi-layer perceptron with backprop and Adam — the actor/critic
+//! function approximators of the DDPG agent (paper Table IV: two 3-layer
+//! MLPs, 128 hidden units per layer).
+//!
+//! Pure Rust, f64, row-major `Vec` storage; the networks are tiny
+//! (`(M+1) → 128 → 128 → 2`), so a cache-friendly loop nest outperforms
+//! anything that would round-trip through PJRT here.
+
+use crate::util::rng::Rng;
+
+/// Hidden/output nonlinearity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Tanh,
+}
+
+impl Act {
+    fn apply(self, x: f64) -> f64 {
+        match self {
+            Act::Linear => x,
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative expressed in terms of the *activated* output `y`.
+    fn grad_from_y(self, y: f64) -> f64 {
+        match self {
+            Act::Linear => 1.0,
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - y * y,
+        }
+    }
+}
+
+/// One dense layer with Adam state.
+#[derive(Debug, Clone)]
+struct Dense {
+    w: Vec<f64>, // out × in, row-major
+    b: Vec<f64>,
+    dw: Vec<f64>,
+    db: Vec<f64>,
+    mw: Vec<f64>,
+    vw: Vec<f64>,
+    mb: Vec<f64>,
+    vb: Vec<f64>,
+    n_in: usize,
+    n_out: usize,
+    act: Act,
+}
+
+impl Dense {
+    fn new(n_in: usize, n_out: usize, act: Act, rng: &mut Rng) -> Dense {
+        // He/Xavier-ish uniform init.
+        let scale = (6.0 / (n_in + n_out) as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| rng.uniform(-scale, scale)).collect();
+        Dense {
+            w,
+            b: vec![0.0; n_out],
+            dw: vec![0.0; n_in * n_out],
+            db: vec![0.0; n_out],
+            mw: vec![0.0; n_in * n_out],
+            vw: vec![0.0; n_in * n_out],
+            mb: vec![0.0; n_out],
+            vb: vec![0.0; n_out],
+            n_in,
+            n_out,
+            act,
+        }
+    }
+
+    fn forward(&self, x: &[f64], y: &mut Vec<f64>) {
+        y.clear();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let z = dot(row, x) + self.b[o];
+            y.push(self.act.apply(z));
+        }
+    }
+
+    /// Accumulate grads given upstream dL/dy; returns dL/dx.
+    fn backward(&mut self, x: &[f64], y: &[f64], dy: &[f64]) -> Vec<f64> {
+        let mut dx = vec![0.0; self.n_in];
+        for o in 0..self.n_out {
+            let dz = dy[o] * self.act.grad_from_y(y[o]);
+            if dz == 0.0 {
+                continue; // dead ReLU unit: nothing flows either way
+            }
+            self.db[o] += dz;
+            // Two independent streams, split so each loop vectorizes.
+            let row = &mut self.dw[o * self.n_in..(o + 1) * self.n_in];
+            for (d, &xi) in row.iter_mut().zip(x) {
+                *d += dz * xi;
+            }
+            let wrow = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            for (d, &wi) in dx.iter_mut().zip(wrow) {
+                *d += dz * wi;
+            }
+        }
+        dx
+    }
+}
+
+/// A fully-connected network with a uniform hidden activation.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    layers: Vec<Dense>,
+    /// Per-layer activations cached by [`Mlp::forward_train`].
+    cache: Vec<Vec<f64>>,
+    adam_t: u64,
+}
+
+impl Mlp {
+    /// `dims = [in, h1, ..., out]`; hidden layers use `hidden`, the last
+    /// layer uses `out`.
+    pub fn new(dims: &[usize], hidden: Act, out: Act, rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2);
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let act = if i + 2 == dims.len() { out } else { hidden };
+                Dense::new(w[0], w[1], act, rng)
+            })
+            .collect();
+        Mlp { layers, cache: Vec::new(), adam_t: 0 }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    /// Inference-only forward.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for l in &self.layers {
+            l.forward(&cur, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// Forward caching intermediates for a following [`Mlp::backward`].
+    pub fn forward_train(&mut self, x: &[f64]) -> Vec<f64> {
+        self.cache.clear();
+        self.cache.push(x.to_vec());
+        for i in 0..self.layers.len() {
+            let mut y = Vec::new();
+            self.layers[i].forward(&self.cache[i], &mut y);
+            self.cache.push(y);
+        }
+        self.cache.last().unwrap().clone()
+    }
+
+    /// Backprop from dL/d(output); accumulates parameter grads and returns
+    /// dL/d(input) — the critic-to-actor pathway needs the input grad.
+    pub fn backward(&mut self, dout: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cache.len(), self.layers.len() + 1, "call forward_train first");
+        let mut dy = dout.to_vec();
+        for i in (0..self.layers.len()).rev() {
+            // Disjoint field borrows: layers[i] is mutated, cache is read.
+            dy = self.layers[i].backward(&self.cache[i], &self.cache[i + 1], &dy);
+        }
+        dy
+    }
+
+    pub fn zero_grad(&mut self) {
+        for l in &mut self.layers {
+            l.dw.iter_mut().for_each(|g| *g = 0.0);
+            l.db.iter_mut().for_each(|g| *g = 0.0);
+        }
+    }
+
+    /// One Adam step with the standard bias correction (β1 = .9, β2 = .999).
+    pub fn adam_step(&mut self, lr: f64) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.adam_t += 1;
+        let t = self.adam_t as f64;
+        let c1 = 1.0 - B1.powf(t);
+        let c2 = 1.0 - B2.powf(t);
+        for l in &mut self.layers {
+            for i in 0..l.w.len() {
+                l.mw[i] = B1 * l.mw[i] + (1.0 - B1) * l.dw[i];
+                l.vw[i] = B2 * l.vw[i] + (1.0 - B2) * l.dw[i] * l.dw[i];
+                l.w[i] -= lr * (l.mw[i] / c1) / ((l.vw[i] / c2).sqrt() + EPS);
+            }
+            for i in 0..l.b.len() {
+                l.mb[i] = B1 * l.mb[i] + (1.0 - B1) * l.db[i];
+                l.vb[i] = B2 * l.vb[i] + (1.0 - B2) * l.db[i] * l.db[i];
+                l.b[i] -= lr * (l.mb[i] / c1) / ((l.vb[i] / c2).sqrt() + EPS);
+            }
+        }
+    }
+
+    /// Polyak soft update: `θ ← τ·θ_src + (1-τ)·θ` (target networks).
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f64) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            for (w, sw) in dst.w.iter_mut().zip(&s.w) {
+                *w = tau * sw + (1.0 - tau) * *w;
+            }
+            for (b, sb) in dst.b.iter_mut().zip(&s.b) {
+                *b = tau * sb + (1.0 - tau) * *b;
+            }
+        }
+    }
+
+    /// Hard copy of weights (target init).
+    pub fn copy_weights_from(&mut self, src: &Mlp) {
+        self.soft_update_from(src, 1.0);
+    }
+}
+
+/// Four-accumulator dot product: breaks the sequential FP dependency chain
+/// so the compiler can keep multiple FMAs in flight (the reassociation-
+/// blocked `sum()` form runs markedly slower on the 128-wide layers here).
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut ta = a.chunks_exact(4);
+    let mut tb = b.chunks_exact(4);
+    for (ca, cb) in (&mut ta).zip(&mut tb) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ta.remainder().iter().zip(tb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..131).map(|i| (i as f64) * 0.37 - 3.0).collect();
+        let b: Vec<f64> = (0..131).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::seed_from(1);
+        let net = Mlp::new(&[3, 8, 2], Act::Relu, Act::Tanh, &mut rng);
+        let y = net.forward(&[0.1, -0.2, 0.3]);
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|v| v.abs() <= 1.0), "tanh bounded");
+    }
+
+    #[test]
+    fn numeric_gradient_check() {
+        // Finite-difference check of dL/dθ for L = Σ y² on a tiny net.
+        let mut rng = Rng::seed_from(2);
+        let mut net = Mlp::new(&[2, 4, 1], Act::Tanh, Act::Linear, &mut rng);
+        let x = [0.3, -0.7];
+        let y = net.forward_train(&x);
+        net.zero_grad();
+        net.backward(&[2.0 * y[0]]);
+        let analytic = net.layers[0].dw[0];
+
+        let eps = 1e-6;
+        let orig = net.layers[0].w[0];
+        net.layers[0].w[0] = orig + eps;
+        let lp = net.forward(&x)[0].powi(2);
+        net.layers[0].w[0] = orig - eps;
+        let lm = net.forward(&x)[0].powi(2);
+        net.layers[0].w[0] = orig;
+        let numeric = (lp - lm) / (2.0 * eps);
+        assert!(
+            (analytic - numeric).abs() < 1e-6 * numeric.abs().max(1.0),
+            "analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    #[test]
+    fn input_gradient_check() {
+        let mut rng = Rng::seed_from(3);
+        let mut net = Mlp::new(&[2, 6, 1], Act::Relu, Act::Linear, &mut rng);
+        let x = [0.5, 0.25];
+        let y = net.forward_train(&x);
+        net.zero_grad();
+        let dx = net.backward(&[2.0 * y[0]]);
+        let eps = 1e-6;
+        let lp = net.forward(&[x[0] + eps, x[1]])[0].powi(2);
+        let lm = net.forward(&[x[0] - eps, x[1]])[0].powi(2);
+        let numeric = (lp - lm) / (2.0 * eps);
+        assert!((dx[0] - numeric).abs() < 1e-5 * numeric.abs().max(1.0));
+    }
+
+    #[test]
+    fn adam_learns_xor_ish_regression() {
+        // Fit y = x0*x1 on 4 points — sanity that training reduces loss.
+        let mut rng = Rng::seed_from(4);
+        let mut net = Mlp::new(&[2, 16, 1], Act::Tanh, Act::Linear, &mut rng);
+        let data = [([0.0, 0.0], 0.0), ([0.0, 1.0], 0.0), ([1.0, 0.0], 0.0), ([1.0, 1.0], 1.0)];
+        let loss = |net: &Mlp| -> f64 {
+            data.iter().map(|(x, t)| (net.forward(x)[0] - t).powi(2)).sum()
+        };
+        let before = loss(&net);
+        for _ in 0..400 {
+            net.zero_grad();
+            for (x, t) in &data {
+                let y = net.forward_train(x);
+                net.backward(&[2.0 * (y[0] - t)]);
+            }
+            net.adam_step(3e-3);
+        }
+        let after = loss(&net);
+        assert!(after < before * 0.05, "loss {before} -> {after}");
+    }
+
+    #[test]
+    fn soft_update_interpolates() {
+        let mut rng = Rng::seed_from(5);
+        let a = Mlp::new(&[2, 3, 1], Act::Relu, Act::Linear, &mut rng);
+        let mut b = Mlp::new(&[2, 3, 1], Act::Relu, Act::Linear, &mut rng);
+        let before = b.layers[0].w[0];
+        let target = a.layers[0].w[0];
+        b.soft_update_from(&a, 0.5);
+        assert!((b.layers[0].w[0] - 0.5 * (before + target)).abs() < 1e-12);
+        b.copy_weights_from(&a);
+        assert_eq!(b.layers[0].w[0], target);
+    }
+}

@@ -1,0 +1,19 @@
+//! Online scheduling via reinforcement learning (paper §IV-C, §V-D).
+//!
+//! | paper | module |
+//! |---|---|
+//! | MDP (state/action/transition/reward) | [`env`] |
+//! | DDPG agent (actor/critic/targets/replay) | [`ddpg`], [`mlp`], [`replay`] |
+//! | LC / fixed-TW / DDPG-OG / DDPG-IP-SSA policies | [`policy`] |
+//! | training loop | [`train`] |
+
+pub mod ddpg;
+pub mod env;
+pub mod mlp;
+pub mod policy;
+pub mod replay;
+pub mod train;
+
+pub use ddpg::{Ddpg, DdpgConfig};
+pub use env::{Action, OnlineEnv, SchedulerAlg};
+pub use policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};

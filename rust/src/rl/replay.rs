@@ -1,0 +1,87 @@
+//! Uniform experience replay buffer (paper Table IV: capacity 10⁶).
+
+use crate::util::rng::Rng;
+
+/// One transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    /// Raw (pre-squash) agent action in `[-1, 1]²`.
+    pub action: Vec<f64>,
+    pub reward: f64,
+    pub next_state: Vec<f64>,
+    pub done: bool,
+}
+
+/// Fixed-capacity ring buffer with uniform sampling.
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity.min(1 << 20)), capacity, head: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty());
+        (0..n).map(|_| &self.buf[rng.usize_below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f64) -> Transition {
+        Transition { state: vec![r], action: vec![0.0], reward: r, next_state: vec![r], done: false }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f64));
+        }
+        assert_eq!(rb.len(), 3);
+        let rewards: Vec<f64> = rb.buf.iter().map(|x| x.reward).collect();
+        // 0 and 1 were overwritten by 3 and 4.
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn sampling_uniform_coverage() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..10 {
+            rb.push(t(i as f64));
+        }
+        let mut rng = Rng::seed_from(1);
+        let mut seen = [false; 10];
+        for tr in rb.sample(500, &mut rng) {
+            seen[tr.reward as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

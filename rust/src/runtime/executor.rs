@@ -1,0 +1,212 @@
+//! Batched sub-task execution on top of [`Runtime`](super::Runtime):
+//! bucket padding, per-sample packing/unpacking, and whole-chain inference.
+//!
+//! This is the compute the coordinator schedules: a [`BatchRequest`] carries
+//! the activations of several users at the same sub-task boundary; the
+//! executor pads them to the nearest compiled bucket, runs the PJRT
+//! executable once, and splits the outputs back per user — the Rust
+//! rendition of the paper's "same sub-tasks aggregated into one batch".
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Runtime;
+
+/// Activations of one or more users at one sub-task boundary.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub net: String,
+    /// Sub-task name (manifest name, e.g. `b5`).
+    pub sub: String,
+    /// Per-user activation tensors (each `in_elems` long).
+    pub samples: Vec<Vec<f32>>,
+}
+
+/// Result of executing a batch: per-user outputs in request order.
+#[derive(Debug, Clone)]
+pub struct BatchResponse {
+    pub outputs: Vec<Vec<f32>>,
+    /// Bucket the batch was padded to.
+    pub bucket: usize,
+    /// PJRT wall-clock (s).
+    pub latency: f64,
+}
+
+impl Runtime {
+    /// Execute a batch of same-sub-task samples (pad → run → split).
+    pub fn run_batch(&self, req: &BatchRequest) -> Result<BatchResponse> {
+        let st = self
+            .manifest()
+            .net(&req.net)?
+            .subtasks
+            .iter()
+            .find(|s| s.name == req.sub)
+            .ok_or_else(|| anyhow!("sub-task {}", req.sub))?
+            .clone();
+        let m = req.samples.len();
+        if m == 0 {
+            bail!("empty batch");
+        }
+        for (i, s) in req.samples.iter().enumerate() {
+            if s.len() != st.in_elems() {
+                bail!("sample {i}: {} elements, want {}", s.len(), st.in_elems());
+            }
+        }
+        let bucket = self.manifest().bucket_for(m)?;
+        let mut data = Vec::with_capacity(bucket * st.in_elems());
+        for s in &req.samples {
+            data.extend_from_slice(s);
+        }
+        data.resize(bucket * st.in_elems(), 0.0); // zero-pad to bucket
+
+        let t0 = std::time::Instant::now();
+        let flat = self.run_raw(&req.net, &req.sub, bucket, &data)?;
+        let latency = t0.elapsed().as_secs_f64();
+
+        let oe = st.out_elems();
+        let outputs = (0..m).map(|i| flat[i * oe..(i + 1) * oe].to_vec()).collect();
+        Ok(BatchResponse { outputs, bucket, latency })
+    }
+
+    /// Run the full sub-task chain of `net` starting from sub-task index
+    /// `from` (0-based) on a batch of raw samples. Returns final outputs
+    /// per user plus total PJRT time.
+    pub fn run_chain(
+        &self,
+        net: &str,
+        from: usize,
+        samples: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let n = self.manifest().net(net)?.subtasks.len();
+        self.run_range(net, from, n, samples)
+    }
+
+    /// Run sub-tasks `from..to` (0-based, `to` exclusive) — the local
+    /// prefix (`0..p`) and offloaded suffix (`p..N`) of a partitioned plan.
+    pub fn run_range(
+        &self,
+        net: &str,
+        from: usize,
+        to: usize,
+        samples: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        let names: Vec<String> = self
+            .manifest()
+            .net(net)?
+            .subtasks
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        if from > to || to > names.len() {
+            bail!("chain range {from}..{to} out of bounds ({} sub-tasks)", names.len());
+        }
+        let mut acts = samples;
+        let mut total = 0.0;
+        for name in &names[from..to] {
+            let resp = self.run_batch(&BatchRequest {
+                net: net.to_string(),
+                sub: name.clone(),
+                samples: acts,
+            })?;
+            total += resp.latency;
+            acts = resp.outputs;
+        }
+        Ok((acts, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_root;
+
+    fn runtime() -> Option<Runtime> {
+        let root = default_artifacts_root();
+        root.join("manifest.json").exists().then(|| Runtime::open(&root).unwrap())
+    }
+
+    #[test]
+    fn batch_pads_to_bucket_and_splits() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // 3 samples -> bucket 4.
+        let st = &rt.manifest().net("dssd3").unwrap().subtasks[4]; // ph
+        let samples: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32 * 0.1; st.in_elems()]).collect();
+        let resp = rt
+            .run_batch(&BatchRequest { net: "dssd3".into(), sub: "ph".into(), samples })
+            .unwrap();
+        assert_eq!(resp.bucket, 4);
+        assert_eq!(resp.outputs.len(), 3);
+        assert!(resp.outputs.iter().all(|o| o.len() == st.out_elems()));
+        assert!(resp.latency > 0.0);
+    }
+
+    #[test]
+    fn batched_equals_single_sample_execution() {
+        // Row independence through the real PJRT path — the premise that
+        // lets the edge server batch different users' tasks.
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let st = &rt.manifest().net("mobilenet_v2").unwrap().subtasks[7]; // cls
+        let mk = |seed: usize| -> Vec<f32> {
+            (0..st.in_elems()).map(|i| ((i * 31 + seed * 17) % 13) as f32 * 0.03).collect()
+        };
+        let samples = vec![mk(1), mk(2)];
+        let batched = rt
+            .run_batch(&BatchRequest {
+                net: "mobilenet_v2".into(),
+                sub: "cls".into(),
+                samples: samples.clone(),
+            })
+            .unwrap();
+        for (i, s) in samples.iter().enumerate() {
+            let single = rt
+                .run_batch(&BatchRequest {
+                    net: "mobilenet_v2".into(),
+                    sub: "cls".into(),
+                    samples: vec![s.clone()],
+                })
+                .unwrap();
+            for (a, b) in batched.outputs[i].iter().zip(&single.outputs[0]) {
+                assert!((a - b).abs() < 1e-4, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_runs_end_to_end() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let st0 = &rt.manifest().net("dssd3").unwrap().subtasks[0];
+        let input = vec![0.05f32; st0.in_elems()];
+        let (outs, secs) = rt.run_chain("dssd3", 0, vec![input]).unwrap();
+        let last = rt.manifest().net("dssd3").unwrap().subtasks.last().unwrap().out_elems();
+        assert_eq!(outs[0].len(), last);
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn rejects_wrong_sample_size_and_empty_batch() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let bad = rt.run_batch(&BatchRequest {
+            net: "dssd3".into(),
+            sub: "ph".into(),
+            samples: vec![vec![0.0; 3]],
+        });
+        assert!(bad.is_err());
+        let empty = rt.run_batch(&BatchRequest {
+            net: "dssd3".into(),
+            sub: "ph".into(),
+            samples: vec![],
+        });
+        assert!(empty.is_err());
+    }
+}

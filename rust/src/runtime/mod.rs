@@ -1,0 +1,307 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and executes batched sub-task inference from the Rust hot path.
+//!
+//! Python is **never** on the request path: `make artifacts` ran once at
+//! build time; this module reads `artifacts/manifest.json`, compiles the
+//! HLO **text** programs on the PJRT CPU client (text, not serialized
+//! proto — jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids) and executes them with f32
+//! tensors.
+//!
+//! Executables are compiled per `(net, sub-task, batch-bucket)` exactly like
+//! bucketed-batch GPU serving: a request batch is padded up to the nearest
+//! compiled bucket.
+
+pub mod executor;
+pub mod profiler;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Manifest entry for one sub-task.
+#[derive(Debug, Clone)]
+pub struct SubTaskArtifact {
+    pub name: String,
+    /// Per-sample input shape (without the batch dimension).
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// batch bucket -> artifact path (relative to the artifacts root).
+    pub files: HashMap<usize, String>,
+}
+
+impl SubTaskArtifact {
+    pub fn in_elems(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// Manifest entry for one network.
+#[derive(Debug, Clone)]
+pub struct NetArtifact {
+    pub name: String,
+    pub subtasks: Vec<SubTaskArtifact>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch_sizes: Vec<usize>,
+    pub nets: Vec<NetArtifact>,
+    pub goldens: Vec<(String, usize, String)>, // (net, batch, path)
+}
+
+impl Manifest {
+    /// Load from `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let v = Json::from_file(&root.join("manifest.json"))?;
+        let batch_sizes = v
+            .get("batch_sizes")
+            .and_then(Json::usize_array)
+            .ok_or_else(|| anyhow!("manifest: batch_sizes"))?;
+        let mut nets = Vec::new();
+        for net in v.get("nets").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = net.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("net name"))?;
+            let mut subtasks = Vec::new();
+            for st in net.get("subtasks").and_then(Json::as_arr).unwrap_or(&[]) {
+                let mut files = HashMap::new();
+                for (k, p) in st.get("files").and_then(Json::as_obj).into_iter().flatten() {
+                    let b: usize = k.parse().context("batch key")?;
+                    files.insert(b, p.as_str().ok_or_else(|| anyhow!("file path"))?.to_string());
+                }
+                subtasks.push(SubTaskArtifact {
+                    name: st
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("subtask name"))?
+                        .to_string(),
+                    in_shape: st
+                        .get("in_shape")
+                        .and_then(Json::usize_array)
+                        .ok_or_else(|| anyhow!("in_shape"))?,
+                    out_shape: st
+                        .get("out_shape")
+                        .and_then(Json::usize_array)
+                        .ok_or_else(|| anyhow!("out_shape"))?,
+                    files,
+                });
+            }
+            nets.push(NetArtifact { name: name.to_string(), subtasks });
+        }
+        let goldens = v
+            .get("goldens")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|g| {
+                Some((
+                    g.get("net")?.as_str()?.to_string(),
+                    g.get("batch")?.as_usize()?,
+                    g.get("path")?.as_str()?.to_string(),
+                ))
+            })
+            .collect();
+        Ok(Manifest { root: root.to_path_buf(), batch_sizes, nets, goldens })
+    }
+
+    pub fn net(&self, name: &str) -> Result<&NetArtifact> {
+        self.nets
+            .iter()
+            .find(|n| n.name == name)
+            .ok_or_else(|| anyhow!("net {name} not in manifest"))
+    }
+
+    /// Smallest compiled bucket that fits `batch`.
+    pub fn bucket_for(&self, batch: usize) -> Result<usize> {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .ok_or_else(|| anyhow!("batch {batch} exceeds largest bucket"))
+    }
+}
+
+/// PJRT client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<
+        HashMap<(String, String, usize), std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    >,
+}
+
+impl Runtime {
+    /// CPU-PJRT runtime over an artifacts directory.
+    pub fn open(artifacts_root: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_root)
+            .with_context(|| format!("loading manifest from {}", artifacts_root.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "runtime: platform={} devices={} nets={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.nets.len()
+        );
+        Ok(Runtime { client, manifest, cache: Default::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for
+    /// `(net, sub-task, bucket)`.
+    pub fn executable(
+        &self,
+        net: &str,
+        sub: &str,
+        bucket: usize,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = (net.to_string(), sub.to_string(), bucket);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let net_art = self.manifest.net(net)?;
+        let st = net_art
+            .subtasks
+            .iter()
+            .find(|s| s.name == sub)
+            .ok_or_else(|| anyhow!("sub-task {sub} not in {net}"))?;
+        let rel = st
+            .files
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no artifact for {net}/{sub} b={bucket}"))?;
+        let path = self.manifest.root.join(rel);
+        // Guard against elided constants: `as_hlo_text()` without
+        // `print_large_constants` prints weights as `constant({...})` and
+        // this XLA's text parser silently zero-fills them — the bug class
+        // is corrupted numerics, not a parse error, so reject it here.
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if text.contains("{...}") {
+            bail!(
+                "{}: HLO text has elided constants ({{...}}); re-run `make artifacts` \
+                 with an aot.py that prints large constants",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        log::debug!("compiled {net}/{sub} b={bucket}");
+        Ok(exe)
+    }
+
+    /// Execute one sub-task on a `bucket × in_shape` f32 tensor.
+    /// `data.len()` must equal `bucket · in_elems`.
+    pub fn run_raw(&self, net: &str, sub: &str, bucket: usize, data: &[f32]) -> Result<Vec<f32>> {
+        let net_art = self.manifest.net(net)?;
+        let st = net_art
+            .subtasks
+            .iter()
+            .find(|s| s.name == sub)
+            .ok_or_else(|| anyhow!("sub-task {sub}"))?;
+        if data.len() != bucket * st.in_elems() {
+            bail!(
+                "{net}/{sub} b={bucket}: expected {} elements, got {}",
+                bucket * st.in_elems(),
+                data.len()
+            );
+        }
+        let mut dims: Vec<i64> = vec![bucket as i64];
+        dims.extend(st.in_shape.iter().map(|&d| d as i64));
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let exe = self.executable(net, sub, bucket)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {net}/{sub}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?
+            // aot.py lowers with return_tuple=True.
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Default artifacts root: `$BATCHEDGE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_root() -> PathBuf {
+    std::env::var("BATCHEDGE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let root = default_artifacts_root();
+        root.join("manifest.json").exists().then_some(root)
+    }
+
+    #[test]
+    fn manifest_loads_and_indexes() {
+        let Some(root) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.batch_sizes, vec![1, 2, 4, 8, 16]);
+        let mv2 = m.net("mobilenet_v2").unwrap();
+        assert_eq!(mv2.subtasks.len(), 8);
+        assert_eq!(mv2.subtasks[0].in_shape, vec![32, 32, 3]);
+        assert!(m.net("nope").is_err());
+        assert_eq!(m.bucket_for(3).unwrap(), 4);
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert!(m.bucket_for(99).is_err());
+        assert!(!m.goldens.is_empty());
+    }
+
+    #[test]
+    fn run_raw_validates_element_count() {
+        let Some(root) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&root).unwrap();
+        let err = rt.run_raw("dssd3", "ph", 1, &[0.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("expected"));
+    }
+
+    #[test]
+    fn executes_subtask_and_caches_executable() {
+        let Some(root) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&root).unwrap();
+        // dssd3/ph: in (16,128) -> out (16,12).
+        let data = vec![0.1f32; 16 * 128];
+        let out = rt.run_raw("dssd3", "ph", 1, &data).unwrap();
+        assert_eq!(out.len(), 16 * 12);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Second call hits the cache (same Rc).
+        let a = rt.executable("dssd3", "ph", 1).unwrap();
+        let b = rt.executable("dssd3", "ph", 1).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+}

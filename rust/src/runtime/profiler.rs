@@ -1,0 +1,151 @@
+//! `F_n(b)` profiler — the Fig.-3 measurement pipeline on our substrate.
+//!
+//! The paper profiles each sub-task at each batch size on an RTX3090; this
+//! module does the same against the real AOT artifacts on the CPU PJRT
+//! client: warm up, run `reps` repetitions, record the mean latency, and
+//! emit a [`LatencyProfile`] (JSON) the algorithms can consume directly in
+//! place of the calibrated curves.
+
+use anyhow::Result;
+
+use crate::dnn::profile::{BatchCurve, LatencyProfile};
+use crate::util::rng::Rng;
+
+use super::executor::BatchRequest;
+use super::Runtime;
+
+/// Measurement settings.
+#[derive(Debug, Clone)]
+pub struct ProfileSettings {
+    pub warmup: usize,
+    pub reps: usize,
+    /// Batch sizes to measure (must be compiled buckets).
+    pub batches: Vec<usize>,
+}
+
+impl Default for ProfileSettings {
+    fn default() -> Self {
+        ProfileSettings { warmup: 2, reps: 5, batches: vec![1, 2, 4, 8, 16] }
+    }
+}
+
+/// One sub-task × batch measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub sub: String,
+    pub batch: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+/// Profile every sub-task of `net` at every requested batch size.
+pub fn profile_net(
+    rt: &Runtime,
+    net: &str,
+    settings: &ProfileSettings,
+) -> Result<(LatencyProfile, Vec<Measurement>)> {
+    let subtasks = rt.manifest().net(net)?.subtasks.clone();
+    let mut rng = Rng::seed_from(0xBEEF);
+    let mut curves = Vec::new();
+    let mut raw = Vec::new();
+
+    for st in &subtasks {
+        let mut lats = Vec::new();
+        for &b in &settings.batches {
+            let samples: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..st.in_elems()).map(|_| rng.uniform(-1.0, 1.0) as f32).collect())
+                .collect();
+            let req = BatchRequest { net: net.to_string(), sub: st.name.clone(), samples };
+            for _ in 0..settings.warmup {
+                rt.run_batch(&req)?;
+            }
+            let mut mean = 0.0;
+            let mut min = f64::INFINITY;
+            for _ in 0..settings.reps {
+                let resp = rt.run_batch(&req)?;
+                mean += resp.latency;
+                min = min.min(resp.latency);
+            }
+            mean /= settings.reps as f64;
+            raw.push(Measurement { sub: st.name.clone(), batch: b, mean_s: mean, min_s: min });
+            lats.push(mean);
+        }
+        // Enforce monotone non-decreasing latency (measurement noise on a
+        // busy CPU can dip; BatchCurve requires F(b) non-decreasing).
+        for i in 1..lats.len() {
+            if lats[i] < lats[i - 1] {
+                lats[i] = lats[i - 1];
+            }
+        }
+        // Expand bucket measurements to a dense 1..=max curve by linear
+        // interpolation so F_n(b) is defined at every integer batch.
+        let dense = densify(&settings.batches, &lats);
+        curves.push(BatchCurve::from_points(dense));
+        log::info!("profiled {net}/{} ({} batch points)", st.name, settings.batches.len());
+    }
+    Ok((LatencyProfile::new(net, curves), raw))
+}
+
+/// Interpolate sparse (batch, latency) points onto every integer batch in
+/// `1..=max(batches)`.
+fn densify(batches: &[usize], lats: &[f64]) -> Vec<f64> {
+    let max = *batches.last().unwrap();
+    let mut out = Vec::with_capacity(max);
+    for b in 1..=max {
+        // Find the surrounding measured points.
+        let pos = batches.partition_point(|&x| x < b);
+        let v = if pos == 0 {
+            lats[0]
+        } else if pos >= batches.len() {
+            lats[lats.len() - 1]
+        } else if batches[pos] == b {
+            lats[pos]
+        } else {
+            let (b0, b1) = (batches[pos - 1] as f64, batches[pos] as f64);
+            let t = (b as f64 - b0) / (b1 - b0);
+            lats[pos - 1] * (1.0 - t) + lats[pos] * t
+        };
+        out.push(v);
+    }
+    // partition_point with batches[pos-1] == b-? ensure exact hits taken:
+    for (i, &b) in batches.iter().enumerate() {
+        out[b - 1] = lats[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_root;
+
+    #[test]
+    fn densify_interpolates_and_keeps_exact_points() {
+        let dense = densify(&[1, 2, 4, 8], &[1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(dense.len(), 8);
+        assert_eq!(dense[0], 1.0);
+        assert_eq!(dense[1], 2.0);
+        assert_eq!(dense[2], 3.0); // interpolated b=3
+        assert_eq!(dense[3], 4.0);
+        assert_eq!(dense[5], 6.0); // interpolated b=6
+        assert_eq!(dense[7], 8.0);
+    }
+
+    #[test]
+    fn profiles_real_artifacts() {
+        let root = default_artifacts_root();
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(&root).unwrap();
+        let settings = ProfileSettings { warmup: 1, reps: 2, batches: vec![1, 2] };
+        let (profile, raw) = profile_net(&rt, "dssd3", &settings).unwrap();
+        assert_eq!(profile.n(), 5);
+        assert_eq!(raw.len(), 10);
+        assert!(profile.f(1, 1) > 0.0);
+        // JSON roundtrip (what `batchedge profile` writes).
+        let back = LatencyProfile::from_json(&profile.to_json()).unwrap();
+        assert_eq!(back.n(), 5);
+    }
+}

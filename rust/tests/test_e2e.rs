@@ -1,0 +1,104 @@
+//! End-to-end integration: the full stack (policy → offline solver → plan
+//! → real PJRT batched execution → metrics) over a served episode, plus
+//! offline-solver cross-checks at system level.
+
+use std::sync::Arc;
+
+use batchedge::algo::{feasibility, og};
+use batchedge::config::SystemConfig;
+use batchedge::coordinator::Coordinator;
+use batchedge::rl::env::SchedulerAlg;
+use batchedge::rl::policy::FixedTwPolicy;
+use batchedge::runtime::{default_artifacts_root, Runtime};
+use batchedge::scenario::{ArrivalKind, ArrivalProcess, Scenario};
+use batchedge::util::rng::Rng;
+
+#[test]
+fn simulated_serving_full_episode_all_accounted() {
+    let cfg = SystemConfig::dssd3_default();
+    let arrivals = ArrivalProcess::paper_default("dssd3", ArrivalKind::Bernoulli);
+    let mut coord = Coordinator::new(
+        &cfg,
+        6,
+        arrivals,
+        SchedulerAlg::Og,
+        0.025,
+        Box::new(FixedTwPolicy::new(0)),
+        None,
+        31,
+    )
+    .unwrap();
+    let report = coord.run(600).unwrap();
+    assert_eq!(
+        report.requests as u64,
+        coord.env.tasks_completed + coord.env.tasks_forced
+    );
+    assert!(report.requests > 10, "arrivals should flow");
+    assert!(report.energy_mean_j.is_finite() && report.energy_mean_j > 0.0);
+    // Scheduled (non-forced) tasks never violate their deadline budget.
+    assert!(report.latency_p50_s <= coord.env.arrivals.l_high + 1e-9);
+}
+
+#[test]
+fn real_execution_serving_runs_batches_through_pjrt() {
+    let root = default_artifacts_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Arc::new(Runtime::open(&root).unwrap());
+    let cfg = SystemConfig::mobilenet_default();
+    let arrivals = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Immediate);
+    let mut coord = Coordinator::new(
+        &cfg,
+        4,
+        arrivals,
+        SchedulerAlg::Og,
+        0.025,
+        Box::new(FixedTwPolicy::new(0)),
+        Some(rt),
+        5,
+    )
+    .unwrap();
+    let report = coord.run(80).unwrap();
+    assert!(coord.env.stats.calls > 0, "the scheduler must fire");
+    if report.offloaded_frac > 0.0 {
+        assert!(report.real_compute_s > 0.0, "offloads must consume real PJRT time");
+        assert!(coord.metrics.batch_count > 0);
+        assert!(coord.metrics.mean_batch_size() >= 1.0);
+    }
+}
+
+#[test]
+fn og_plans_feasible_at_scale_m20() {
+    // Larger-than-paper scale as a robustness check.
+    let cfg = SystemConfig::dssd3_default();
+    for seed in 0..3 {
+        let s = Scenario::draw_mixed_deadlines(&cfg, 20, 0.25, 1.0, &mut Rng::seed_from(seed));
+        let plan = og::solve(&s);
+        feasibility::check(&s, &plan).unwrap_or_else(|v| panic!("seed {seed}: {v}"));
+        assert!(plan.groups.len() >= 1);
+    }
+}
+
+#[test]
+fn deterministic_serving_given_seed() {
+    let cfg = SystemConfig::mobilenet_default();
+    let run = || {
+        let arrivals = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Bernoulli);
+        let mut coord = Coordinator::new(
+            &cfg,
+            5,
+            arrivals,
+            SchedulerAlg::IpSsa,
+            0.025,
+            Box::new(FixedTwPolicy::new(1)),
+            None,
+            99,
+        )
+        .unwrap();
+        let rep = coord.run(300).unwrap();
+        (rep.requests, coord.env.total_energy, coord.env.tasks_forced)
+    };
+    assert_eq!(run(), run(), "same seed, same trajectory");
+}

@@ -1,0 +1,81 @@
+//! Smoke tests for the experiment harness: every table/figure module runs
+//! at miniature scale, writes its results files, and upholds the paper's
+//! shape claims that are cheap enough to assert in CI.
+
+use batchedge::experiments::{fig5, fig6, fig7_tab3, offline};
+use batchedge::config::SystemConfig;
+
+fn use_temp_results(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("batchedge_exp_{tag}"));
+    std::env::set_var("BATCHEDGE_RESULTS", &dir);
+    dir
+}
+
+#[test]
+fn fig5_headline_orderings_hold_in_miniature() {
+    let dir = use_temp_results("fig5");
+    let p = fig5::Params {
+        m_list: vec![1, 8, 15],
+        bandwidths_mhz: vec![1.0, 5.0],
+        draws: 6,
+        seed: 42,
+    };
+    fig5::run(&p).unwrap();
+    assert!(dir.join("fig5.txt").exists());
+    std::env::remove_var("BATCHEDGE_RESULTS");
+
+    // Independent re-derivation of the key orderings (not via files).
+    for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+        let sweep = offline::sweep_users(&cfg, &[8, 15], 6, 42);
+        let idx = |n: &str| sweep.solver_names.iter().position(|&x| x == n).unwrap();
+        for mi in 0..2 {
+            let ip = sweep.energy[idx("IP-SSA")][mi];
+            for other in ["LC", "PS", "FIFO", "IP-SSA-NP"] {
+                assert!(
+                    ip <= sweep.energy[idx(other)][mi] + 1e-9,
+                    "{}: IP-SSA must win at every M (vs {other})",
+                    cfg.net.name
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn fig5_bandwidth_reduces_ipssa_energy() {
+    let cfg = SystemConfig::dssd3_default();
+    let narrow = offline::sweep_users(&cfg, &[10], 6, 7);
+    let wide_cfg = offline::variant(&cfg, |c| c.radio.bandwidth_hz = 5e6);
+    let wide = offline::sweep_users(&wide_cfg, &[10], 6, 7);
+    let idx = narrow.solver_names.iter().position(|&x| x == "IP-SSA").unwrap();
+    assert!(wide.energy[idx][0] < narrow.energy[idx][0]);
+}
+
+#[test]
+fn fig6_shapes() {
+    let dir = use_temp_results("fig6");
+    let p = fig6::Params {
+        m_list: vec![2, 10],
+        alphas: vec![1.0, 4.0],
+        deadlines_ms: vec![40.0, 50.0, 100.0],
+        draws: 6,
+        seed: 9,
+    };
+    fig6::run(&p).unwrap();
+    assert!(dir.join("fig6.a.csv").exists());
+    assert!(dir.join("fig6.b.csv").exists());
+    std::env::remove_var("BATCHEDGE_RESULTS");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig7_table3_runs_and_asserts_monotone_batches() {
+    let dir = use_temp_results("fig7");
+    let p = fig7_tab3::Params { m: 6, draws: 6, bins: 8, seed: 4 };
+    // run() itself asserts the Table-III monotone-batch shape.
+    fig7_tab3::run(&p).unwrap();
+    assert!(dir.join("fig7_tab3.tab3.csv").exists());
+    std::env::remove_var("BATCHEDGE_RESULTS");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,218 @@
+//! Property-based invariant tests over randomized scenarios, using the
+//! in-repo property harness (`PROP_SEED`/`PROP_CASES` env to replay/scale).
+//!
+//! Every property runs all solvers over random (M, config, channel,
+//! deadline) draws and asserts the P1 constraints plus the paper's
+//! structural theorems.
+
+use std::sync::Arc;
+
+use batchedge::algo::{baselines, feasibility, ipssa, og, Solver};
+use batchedge::config::SystemConfig;
+use batchedge::scenario::Scenario;
+use batchedge::util::prop::{forall, forall_with_rng};
+use batchedge::util::rng::Rng;
+
+/// Random scenario generator: net, M, bandwidth, deadline family.
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let base = if rng.bernoulli(0.5) {
+        SystemConfig::dssd3_default()
+    } else {
+        SystemConfig::mobilenet_default()
+    };
+    let mut cfg = (*base).clone();
+    cfg.radio.bandwidth_hz = *rng.choose(&[1e6, 2e6, 5e6]);
+    cfg.device.alpha = *rng.choose(&[1.0, 2.0]);
+    let cfg = Arc::new(cfg);
+    let m = rng.usize_below(10) + 1;
+    if rng.bernoulli(0.5) {
+        Scenario::draw(&cfg, m, rng)
+    } else {
+        let lo = cfg.deadline_s;
+        Scenario::draw_mixed_deadlines(&cfg, m, lo, lo * 4.0, rng)
+    }
+}
+
+#[test]
+fn every_solver_output_satisfies_p1_constraints() {
+    forall("p1-feasibility", gen_scenario, |s| {
+        for solver in baselines::offline_suite() {
+            let r = solver.solve(s);
+            feasibility::check(&r.scenario, &r.plan)
+                .map_err(|v| format!("{}: {v}", solver.name()))?;
+        }
+        let plan = og::solve(s);
+        feasibility::check(s, &plan).map_err(|v| format!("OG: {v}"))?;
+        Ok(())
+    });
+}
+
+/// Equal-deadline variant of the generator — IP-SSA's intended setting
+/// (with heterogeneous deadlines IP-SSA deliberately over-constrains to
+/// the minimum; that regime belongs to OG).
+fn gen_equal_deadline(rng: &mut Rng) -> Scenario {
+    let mut s = gen_scenario(rng);
+    let l = s.cfg.deadline_s;
+    for u in &mut s.users {
+        u.deadline = l;
+    }
+    s
+}
+
+#[test]
+fn ipssa_never_worse_than_local_computing() {
+    forall("ipssa<=lc", gen_equal_deadline, |s| {
+        let ip = ipssa::IpSsa.solve(s).plan.total_energy();
+        let lc = baselines::LocalOnly.solve(s).plan.total_energy();
+        if ip <= lc + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("IP-SSA {ip} > LC {lc}"))
+        }
+    });
+}
+
+#[test]
+fn og_groups_are_deadline_contiguous_theorem2() {
+    // Theorem 2: groups are contiguous runs of the deadline-sorted users,
+    // in deadline order.
+    forall("og-theorem2", gen_scenario, |s| {
+        let plan = og::solve(s);
+        let mut prev_max = f64::NEG_INFINITY;
+        for g in &plan.groups {
+            let deadlines: Vec<f64> = g.iter().map(|&u| s.users[u].deadline).collect();
+            let lo = deadlines.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = deadlines.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if lo < prev_max - 1e-12 {
+                return Err(format!("group deadline ranges interleave: {lo} < {prev_max}"));
+            }
+            prev_max = prev_max.max(hi);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn og_never_worse_than_min_deadline_single_group() {
+    forall("og<=single-group", gen_scenario, |s| {
+        let og_e = og::solve(s).total_energy();
+        let min_l = s.users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let members: Vec<usize> = (0..s.m()).collect();
+        let single = ipssa::solve_group(s, &members, min_l, 0.0).energy;
+        if og_e <= single + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("OG {og_e} > single-group {single}"))
+        }
+    });
+}
+
+#[test]
+fn monotone_offloading_structure_holds() {
+    // Theorem 1.1 (as realized by the solvers): batch membership for
+    // sub-task n is exactly the users with partition < n — no user ever
+    // "returns local" after offloading.
+    forall("monotone-offloading", gen_scenario, |s| {
+        let plan = ipssa::solve(s);
+        let n = s.cfg.net.n();
+        for b in &plan.batches {
+            for (ui, up) in plan.users.iter().enumerate() {
+                let should_be_in = up.partition < b.sub;
+                let is_in = b.members.contains(&ui);
+                if should_be_in != is_in {
+                    return Err(format!(
+                        "user {ui} partition {} batch sub {}: in={is_in}",
+                        up.partition, b.sub
+                    ));
+                }
+            }
+        }
+        let _ = n;
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_sizes_nondecreasing_toward_rear() {
+    forall("tab3-monotone-batches", gen_scenario, |s| {
+        let plan = ipssa::solve(s);
+        let sizes: Vec<usize> =
+            (1..=s.cfg.net.n()).map(|n| plan.batch_size_of_sub(n)).collect();
+        for w in sizes.windows(2) {
+            if w[1] < w[0] {
+                return Err(format!("batch sizes decrease toward rear: {sizes:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn energy_monotone_in_deadline() {
+    // Loosening every deadline can only reduce (or keep) IP-SSA energy.
+    forall_with_rng("energy-monotone-deadline", gen_scenario, |s, _rng| {
+        let tight = ipssa::solve(s).total_energy();
+        let mut loose = s.clone();
+        for u in &mut loose.users {
+            u.deadline *= 2.0;
+        }
+        let loose_e = ipssa::solve(&loose).total_energy();
+        if loose_e <= tight + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("looser deadlines raised energy: {tight} -> {loose_e}"))
+        }
+    });
+}
+
+#[test]
+fn more_bandwidth_never_hurts() {
+    forall("energy-monotone-bandwidth", gen_scenario, |s| {
+        let base = ipssa::solve(s).total_energy();
+        let mut cfg = (*s.cfg).clone();
+        cfg.radio.bandwidth_hz *= 4.0;
+        let faster = Scenario {
+            cfg: Arc::new(cfg),
+            users: s
+                .users
+                .iter()
+                .map(|u| {
+                    let mut u = u.clone();
+                    // Rates scale consistently with the bandwidth knob: the
+                    // draw would have produced ≥ these rates (log2 concave),
+                    // so scaling by the worst-case factor keeps it fair.
+                    u.rate_up *= 2.0;
+                    u.rate_dn *= 2.0;
+                    u
+                })
+                .collect(),
+        };
+        let better = ipssa::solve(&faster).total_energy();
+        if better <= base + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("more rate raised energy: {base} -> {better}"))
+        }
+    });
+}
+
+#[test]
+fn og_groups_partition_users_exactly() {
+    forall("og-groups-partition", gen_scenario, |s| {
+        let plan = og::solve(s);
+        let mut seen = vec![false; s.m()];
+        for g in &plan.groups {
+            for &u in g {
+                if seen[u] {
+                    return Err(format!("user {u} in two groups"));
+                }
+                seen[u] = true;
+            }
+        }
+        if seen.iter().all(|&x| x) {
+            Ok(())
+        } else {
+            Err("some user missing from all groups".into())
+        }
+    });
+}

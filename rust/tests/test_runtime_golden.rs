@@ -1,0 +1,128 @@
+//! Golden-value integration tests: replay the deterministic input/output
+//! tensors exported by `python/compile/aot.py` through the Rust PJRT
+//! runtime and require numeric agreement at every sub-task boundary.
+//!
+//! This pins the whole interchange: JAX/Pallas lowering → HLO text →
+//! xla-crate parse → PJRT compile → execute.
+
+use std::path::PathBuf;
+
+use batchedge::runtime::{default_artifacts_root, Manifest, Runtime};
+use batchedge::util::json::Json;
+
+fn artifacts() -> Option<PathBuf> {
+    let root = default_artifacts_root();
+    root.join("manifest.json").exists().then_some(root)
+}
+
+#[test]
+fn goldens_replay_through_pjrt_per_subtask() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::open(&root).unwrap();
+    let manifest = Manifest::load(&root).unwrap();
+    assert!(!manifest.goldens.is_empty(), "aot.py must emit goldens");
+
+    for (net, batch, rel) in &manifest.goldens {
+        let doc = Json::from_file(&root.join(rel)).unwrap();
+        let input = doc.get("input").unwrap().f32_array().unwrap();
+        let subtasks = doc.get("subtasks").unwrap().as_arr().unwrap();
+
+        // Feed the golden input through the chain one sub-task at a time,
+        // checking each boundary tensor.
+        let st0 = &manifest.net(net).unwrap().subtasks[0];
+        assert_eq!(input.len(), batch * st0.in_elems(), "{net} b={batch} input size");
+        let per = st0.in_elems();
+        let mut acts: Vec<Vec<f32>> =
+            (0..*batch).map(|i| input[i * per..(i + 1) * per].to_vec()).collect();
+
+        for (si, entry) in subtasks.iter().enumerate() {
+            let name = entry.get("name").unwrap().as_str().unwrap();
+            let want = entry.get("values").unwrap().f32_array().unwrap();
+            let resp = rt
+                .run_batch(&batchedge::runtime::executor::BatchRequest {
+                    net: net.clone(),
+                    sub: name.to_string(),
+                    samples: acts,
+                })
+                .unwrap_or_else(|e| panic!("{net}/{name}: {e}"));
+            acts = resp.outputs;
+            let flat: Vec<f32> = acts.iter().flatten().copied().collect();
+            assert_eq!(flat.len(), want.len(), "{net}/{name} b={batch} output arity");
+            let mut max_err = 0.0f32;
+            for (a, b) in flat.iter().zip(&want) {
+                max_err = max_err.max((a - b).abs());
+            }
+            assert!(
+                max_err < 1e-4,
+                "{net}/{name} (sub {si}, b={batch}): max |err| = {max_err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bucket_padding_does_not_change_golden_numerics() {
+    // Run the b=1 golden through padded buckets and require every row to
+    // match the golden final output — padding rows must not leak.
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::open(&root).unwrap();
+    let manifest = Manifest::load(&root).unwrap();
+    let (net, _, rel) = manifest
+        .goldens
+        .iter()
+        .find(|(n, b, _)| n == "mobilenet_v2" && *b == 1)
+        .expect("b=1 golden");
+    let doc = Json::from_file(&root.join(rel)).unwrap();
+    let input = doc.get("input").unwrap().f32_array().unwrap();
+    let want_final = doc
+        .get("subtasks")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .last()
+        .unwrap()
+        .get("values")
+        .unwrap()
+        .f32_array()
+        .unwrap();
+
+    for copies in [1usize, 2, 3] {
+        let samples: Vec<Vec<f32>> = (0..copies).map(|_| input.clone()).collect();
+        let (outs, _) = rt.run_chain(net, 0, samples).unwrap();
+        for (ci, out) in outs.iter().enumerate() {
+            for (a, b) in out.iter().zip(&want_final) {
+                assert!((a - b).abs() < 1e-4, "copies={copies} row {ci}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_manifest_artifact_compiles() {
+    // Compile-coverage: all (net, sub-task, bucket) HLO programs parse and
+    // compile on the PJRT client (smoke for the full artifact matrix).
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::open(&root).unwrap();
+    let manifest = Manifest::load(&root).unwrap();
+    let mut count = 0;
+    for net in &manifest.nets {
+        for st in &net.subtasks {
+            for &b in manifest.batch_sizes.iter() {
+                assert!(st.files.contains_key(&b), "{}/{} missing b={b}", net.name, st.name);
+                rt.executable(&net.name, &st.name, b)
+                    .unwrap_or_else(|e| panic!("{}/{} b={b}: {e}", net.name, st.name));
+                count += 1;
+            }
+        }
+    }
+    assert_eq!(count, (8 + 5) * 5, "full artifact matrix");
+}
