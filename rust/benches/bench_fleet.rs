@@ -1,0 +1,70 @@
+//! Fleet engine benchmarks: servers × population × dispatch policy.
+//!
+//! Two views:
+//!  * the serving table — p50/p95/p99, shed and utilization per policy on
+//!    a capacity-skewed fleet (the JSQ/P2C-vs-RR headline), and
+//!  * engine wall-clock — events/s of the discrete-event core at 10⁵⁺
+//!    users, the number that makes fleet sweeps tractable.
+//!
+//! `BATCHEDGE_BENCH_QUICK=1` shrinks everything for smoke runs.
+
+mod common;
+
+use batchedge::config::SystemConfig;
+use batchedge::experiments::fleet::{run_fleet, skewed_speeds};
+use batchedge::fleet::DispatchPolicy;
+
+fn main() {
+    let quick = common::quick();
+    let cfg = SystemConfig::mobilenet_default();
+    let horizon = if quick { 2.0 } else { 10.0 };
+
+    // --- Serving quality: policy sweep on skewed fleets.
+    for &servers in if quick { &[8usize][..] } else { &[4usize, 8, 16][..] } {
+        let users = 70_000 * servers / 8;
+        println!(
+            "\n== {servers} servers (last quarter at 0.25x), U={users} @ 0.05 Hz, \
+             horizon {horizon} s =="
+        );
+        let mut p95 = Vec::new();
+        for policy in DispatchPolicy::ALL {
+            let rep = run_fleet(
+                &cfg,
+                policy,
+                servers,
+                skewed_speeds(servers),
+                users,
+                0.05,
+                horizon,
+                42,
+            );
+            println!("{:>8}: {}", policy.name(), rep.render());
+            p95.push((policy.name(), rep.latency_p95_s));
+        }
+        let get = |n: &str| p95.iter().find(|(p, _)| *p == n).unwrap().1;
+        println!(
+            "p95 ratio vs rr: jsq {:.3}x  p2c {:.3}x  deadline {:.3}x",
+            get("jsq") / get("rr"),
+            get("p2c") / get("rr"),
+            get("deadline") / get("rr"),
+        );
+    }
+
+    // --- Engine throughput: how fast the event core chews requests.
+    let reps = if quick { 2 } else { 5 };
+    for &users in if quick { &[20_000usize][..] } else { &[20_000usize, 100_000, 400_000][..] } {
+        common::bench(&format!("fleet/jsq 8 servers U={users}"), 1, reps, || {
+            let rep = run_fleet(
+                &cfg,
+                DispatchPolicy::ShortestQueue,
+                8,
+                Vec::new(),
+                users,
+                0.05,
+                horizon,
+                7,
+            );
+            std::hint::black_box(rep.completed);
+        });
+    }
+}

@@ -10,8 +10,8 @@ use batchedge::util::rng::Rng;
 
 fn main() {
     let root = default_artifacts_root();
-    if !root.join("manifest.json").exists() {
-        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
+    if !batchedge::runtime::pjrt_available() || !root.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`) or no pjrt — skipping");
         return;
     }
     let rt = Runtime::open(&root).unwrap();

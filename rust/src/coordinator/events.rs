@@ -5,9 +5,12 @@
 //! completions) is naturally event-driven; this queue backs
 //! [`server`](super::server) timeline replay and keeps ordering stable for
 //! simultaneous events (FIFO by insertion sequence).
+//!
+//! The heap/clock mechanics live in the generic
+//! [`fleet::events::EventQueue`](crate::fleet::events::EventQueue); this
+//! module specializes it to the coordinator's [`EventKind`] payload.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use crate::fleet::events::EventQueue as GenericEventQueue;
 
 /// Event payloads the coordinator understands.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,45 +25,17 @@ pub enum EventKind {
     LocalDone(usize),
 }
 
-/// A scheduled event at simulated time `at`.
-#[derive(Debug, Clone)]
+/// A popped event at simulated time `at`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Event {
     pub at: f64,
-    pub seq: u64,
     pub kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earliest time first, then insertion order.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
 }
 
 /// Min-time event queue with a monotone clock.
 #[derive(Debug, Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
-    seq: u64,
-    now: f64,
+    inner: GenericEventQueue<EventKind>,
 }
 
 impl EventQueue {
@@ -70,31 +45,26 @@ impl EventQueue {
 
     /// Current simulated time.
     pub fn now(&self) -> f64 {
-        self.now
+        self.inner.now()
     }
 
     /// Schedule `kind` at absolute time `at` (clamped to now — no past
     /// scheduling).
     pub fn schedule(&mut self, at: f64, kind: EventKind) {
-        let at = at.max(self.now);
-        self.heap.push(Event { at, seq: self.seq, kind });
-        self.seq += 1;
+        self.inner.schedule(at, kind);
     }
 
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<Event> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.at >= self.now - 1e-12, "time went backwards");
-        self.now = self.now.max(ev.at);
-        Some(ev)
+        self.inner.pop().map(|(at, kind)| Event { at, kind })
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.inner.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.inner.len()
     }
 }
 
@@ -135,5 +105,7 @@ mod tests {
         q.schedule(1.0, EventKind::LocalDone(1));
         let e = q.pop().unwrap();
         assert_eq!(e.at, 2.0);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
     }
 }

@@ -36,13 +36,14 @@ pub struct Coordinator {
     runtime: Option<Arc<Runtime>>,
     net: String,
     pub metrics: Metrics,
-    /// Arrival slot of each user's pending task.
-    arrival_slot: Vec<Option<u64>>,
+    /// Arrival slot and deadline of each user's pending task.
+    arrival_info: Vec<Option<(u64, f64)>>,
     rng: Rng,
     input_elems: usize,
 }
 
 impl Coordinator {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &Arc<SystemConfig>,
         m: usize,
@@ -66,7 +67,7 @@ impl Coordinator {
             runtime,
             net,
             metrics: Metrics::default(),
-            arrival_slot: vec![None; m],
+            arrival_info: vec![None; m],
             rng,
             input_elems,
         })
@@ -75,10 +76,29 @@ impl Coordinator {
     /// Serve `slots` time slots; returns the aggregate report.
     pub fn run(&mut self, slots: u64) -> Result<Report> {
         let wall0 = std::time::Instant::now();
+        self.step_slots(slots)?;
+        Ok(self.metrics.report(wall0.elapsed().as_secs_f64()))
+    }
+
+    /// Advance `slots` slots without producing a report — the reusable
+    /// per-shard step API ([`fleet::pool`](crate::fleet::pool) drives many
+    /// coordinators in lockstep and aggregates their metrics itself).
+    pub fn step_slots(&mut self, slots: u64) -> Result<()> {
         for _ in 0..slots {
             self.step()?;
         }
-        Ok(self.metrics.report(wall0.elapsed().as_secs_f64()))
+        Ok(())
+    }
+
+    /// Tasks finished so far (completed + forced) — conservation checks.
+    pub fn served(&self) -> u64 {
+        self.env.tasks_completed + self.env.tasks_forced
+    }
+
+    /// Aggregate report at the current instant, with caller-measured wall
+    /// time (the per-shard counterpart of [`Coordinator::run`]'s report).
+    pub fn report_now(&self, wall_s: f64) -> Report {
+        self.metrics.report(wall_s)
     }
 
     /// One slot: policy decision, environment transition, accounting, and
@@ -93,8 +113,8 @@ impl Coordinator {
         let events = std::mem::take(&mut self.env.step_events);
         for ev in &events {
             match *ev {
-                StepEvent::Arrived { user, .. } => {
-                    self.arrival_slot[user] = Some(self.env.slot);
+                StepEvent::Arrived { user, deadline } => {
+                    self.arrival_info[user] = Some((self.env.slot, deadline));
                 }
                 StepEvent::Scheduled { user, energy, finish_s, offloaded } => {
                     self.complete(
@@ -148,17 +168,19 @@ impl Coordinator {
         outcome: Outcome,
         slot_s: f64,
     ) {
-        let arrival = self.arrival_slot[user].take().unwrap_or(decision_slot);
+        // Each task's actual deadline was captured from its Arrived event;
+        // fall back to the arrival process's upper bound only for tasks
+        // whose arrival predates this coordinator (never in practice).
+        let (arrival, deadline_s) = self.arrival_info[user]
+            .take()
+            .unwrap_or((decision_slot, self.env.arrivals.l_high));
         let wait_s = (decision_slot.saturating_sub(arrival)) as f64 * slot_s;
-        // Deadline bookkeeping: remaining deadline at arrival is unknown
-        // here, so record the arrival-relative budget = wait + service vs
-        // the arrival process's bounds. We conservatively use l_high.
         self.metrics.push(RequestRecord {
             user,
             arrival_slot: arrival,
             dispatch_slot: decision_slot,
             latency_s: wait_s + service_s,
-            deadline_s: self.env.arrivals.l_high,
+            deadline_s,
             energy_j: energy,
             outcome,
         });
@@ -202,10 +224,25 @@ mod tests {
     }
 
     #[test]
+    fn request_records_carry_per_task_deadlines() {
+        let mut c = coordinator(None);
+        c.run(400).unwrap();
+        let (lo, hi) = (c.env.arrivals.l_low, c.env.arrivals.l_high);
+        let deadlines: Vec<f64> = c.metrics.records.iter().map(|r| r.deadline_s).collect();
+        assert!(!deadlines.is_empty());
+        assert!(deadlines.iter().all(|&d| d >= lo - 1e-9 && d <= hi + 1e-9));
+        // Deadlines are drawn uniform in [l_low, l_high): a run this long
+        // must show spread, not the old l_high constant.
+        let min = deadlines.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = deadlines.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max - min > 0.2 * (hi - lo), "per-task deadlines must vary: [{min}, {max}]");
+    }
+
+    #[test]
     fn real_execution_path_runs_batches() {
         let root = crate::runtime::default_artifacts_root();
-        if !root.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+        if !crate::runtime::pjrt_available() || !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built or no pjrt feature");
             return;
         }
         let rt = Arc::new(Runtime::open(&root).unwrap());

@@ -56,7 +56,7 @@ pub fn run(measured: bool) -> Result<()> {
 
     if measured {
         let root = default_artifacts_root();
-        if root.join("manifest.json").exists() {
+        if crate::runtime::pjrt_available() && root.join("manifest.json").exists() {
             let rt = Runtime::open(&root)?;
             for net in ["dssd3", "mobilenet_v2"] {
                 let settings = profiler::ProfileSettings::default();

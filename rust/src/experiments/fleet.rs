@@ -1,0 +1,158 @@
+//! Fleet scaling experiment: servers × population × dispatch policy.
+//!
+//! Not a paper figure — the scaling study the ROADMAP's production north
+//! star calls for. Two sweeps:
+//!
+//! 1. **Policy sweep on a skewed fleet** — heterogeneous server speeds
+//!    (a fraction of the pool runs at quarter capacity, the "mixed
+//!    generation" deployment). Round-robin collapses in p95/shed while
+//!    JSQ and power-of-two-choices stay near the homogeneous tail — the
+//!    fleet-level headline.
+//! 2. **Population scaling under JSQ** — offered load grows with the
+//!    population at fixed per-server headroom, demonstrating the
+//!    event-driven core sweeps 10⁴–10⁵⁺ users in seconds.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport};
+use crate::scenario::PopulationArrivals;
+use crate::util::json::Json;
+
+use super::report::Report;
+
+pub struct Params {
+    /// Fleet sizes for the policy sweep.
+    pub servers: Vec<usize>,
+    /// Population sizes for the scaling sweep.
+    pub populations: Vec<usize>,
+    /// Mean per-user request rate (Hz).
+    pub rate_per_user_hz: f64,
+    /// Model-time horizon per run (s).
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            servers: vec![4, 8, 16],
+            populations: vec![10_000, 50_000, 100_000],
+            rate_per_user_hz: 0.05,
+            horizon_s: 10.0,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+/// Speeds for a skewed fleet: the last quarter of servers at 1/4 capacity.
+pub fn skewed_speeds(servers: usize) -> Vec<f64> {
+    (0..servers)
+        .map(|i| if i >= servers - servers.div_ceil(4) { 0.25 } else { 1.0 })
+        .collect()
+}
+
+/// One fleet run (shared by the experiment, bench and example).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet(
+    cfg: &Arc<SystemConfig>,
+    policy: DispatchPolicy,
+    servers: usize,
+    speeds: Vec<f64>,
+    population: usize,
+    rate_per_user_hz: f64,
+    horizon_s: f64,
+    seed: u64,
+) -> FleetReport {
+    let arrivals =
+        PopulationArrivals::stationary(&cfg.net.name, population, rate_per_user_hz);
+    let fleet = FleetCfg {
+        servers,
+        speeds,
+        batch: BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() },
+        horizon_s,
+        seed,
+    };
+    FleetEngine::new(cfg, fleet, policy.build(), arrivals).run()
+}
+
+pub fn run(p: &Params) -> Result<()> {
+    let mut rep = Report::new("fleet");
+    let cfg = SystemConfig::mobilenet_default();
+
+    // --- 1. Dispatch policies on a skewed fleet.
+    for &n in &p.servers {
+        // Aggregate load sits well inside the skewed fleet's capacity
+        // (~40%), but the per-server share exceeds a 0.25× server's
+        // capacity — exactly the regime where oblivious RR collapses.
+        let population = 70_000 * n / 8;
+        let mut t = FleetReport::table(&format!(
+            "fleet policy sweep — {n} servers (last quarter at 0.25×), \
+             {population} users × {} Hz, horizon {} s",
+            p.rate_per_user_hz, p.horizon_s
+        ));
+        let mut grid = Vec::new();
+        for policy in DispatchPolicy::ALL {
+            let r = run_fleet(
+                &cfg,
+                policy,
+                n,
+                skewed_speeds(n),
+                population,
+                p.rate_per_user_hz,
+                p.horizon_s,
+                p.seed,
+            );
+            let mut cells = vec![policy.name().to_string()];
+            cells.extend(r.table_cells());
+            t.row(cells);
+            grid.push((policy.name(), r));
+        }
+        rep.table(&format!("policy_n{n}"), t);
+        rep.json(
+            &format!("policy_n{n}"),
+            Json::Obj(
+                grid.iter()
+                    .map(|(name, r)| {
+                        (
+                            name.to_string(),
+                            Json::obj(vec![
+                                ("p50_s", Json::Num(r.latency_p50_s)),
+                                ("p95_s", Json::Num(r.latency_p95_s)),
+                                ("p99_s", Json::Num(r.latency_p99_s)),
+                                ("shed_rate", Json::Num(r.shed_rate())),
+                                ("completed", Json::Num(r.completed as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+    }
+
+    // --- 2. Population scaling under JSQ, homogeneous fleet.
+    let mut t = FleetReport::table(&format!(
+        "fleet population scaling — JSQ, 8 servers, {} Hz/user",
+        p.rate_per_user_hz
+    ));
+    for &users in &p.populations {
+        let r = run_fleet(
+            &cfg,
+            DispatchPolicy::ShortestQueue,
+            8,
+            Vec::new(),
+            users,
+            p.rate_per_user_hz,
+            p.horizon_s,
+            p.seed,
+        );
+        let mut cells = vec![format!("jsq U={users}")];
+        cells.extend(r.table_cells());
+        t.row(cells);
+        rep.text(format!("U={users}: {}", r.render()));
+    }
+    rep.table("scaling", t);
+    rep.save()
+}

@@ -8,6 +8,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7_tab3;
 pub mod fig8;
+pub mod fleet;
 pub mod offline;
 pub mod report;
 pub mod table5;
@@ -15,7 +16,8 @@ pub mod table5;
 use anyhow::{bail, Result};
 
 /// Experiment ids accepted by `batchedge experiment <id>` and the benches.
-pub const ALL: &[&str] = &["fig3", "fig5", "fig6", "fig7", "table3", "fig8", "table5", "ablations"];
+pub const ALL: &[&str] =
+    &["fig3", "fig5", "fig6", "fig7", "table3", "fig8", "table5", "ablations", "fleet"];
 
 /// Run an experiment by id with default (paper-scale) parameters; `quick`
 /// shrinks Monte-Carlo draws and RL schedules for smoke runs.
@@ -72,6 +74,15 @@ pub fn run(id: &str, quick: bool) -> Result<()> {
                 p.eval_slots = 400;
             }
             table5::run(&p)
+        }
+        "fleet" => {
+            let mut p = fleet::Params::default();
+            if quick {
+                p.servers = vec![8];
+                p.populations = vec![10_000, 50_000];
+                p.horizon_s = 3.0;
+            }
+            fleet::run(&p)
         }
         "all" => {
             for id in ALL {

@@ -1,0 +1,283 @@
+//! Load-balancing dispatch policies for the fleet front door.
+//!
+//! Every arriving request is routed to one server by a [`Dispatcher`]
+//! observing per-server [`ServerView`]s. The classic queueing results
+//! (Mitzenmacher's power-of-two-choices; JSQ optimality for heterogeneous
+//! pools) show up directly in the fleet bench: round-robin collapses under
+//! skewed capacity while JSQ and d=2 sampling stay close to optimal at a
+//! fraction of the state-inspection cost.
+
+use crate::util::rng::Rng;
+
+use super::Request;
+
+/// What a dispatcher may observe about one server before routing.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerView {
+    /// Requests waiting in the batch queue.
+    pub queued: usize,
+    /// Size of the in-flight batch (0 = idle).
+    pub in_flight: usize,
+    /// Absolute finish time of the in-flight batch (≤ now when idle).
+    pub busy_until_s: f64,
+    /// Relative service speed (1.0 = reference profile).
+    pub speed: f64,
+    /// Estimated seconds of queued + in-flight work.
+    pub est_backlog_s: f64,
+}
+
+impl ServerView {
+    /// Requests ahead of a new arrival (queued + in service) — the JSQ
+    /// quantity.
+    pub fn backlog(&self) -> usize {
+        self.queued + self.in_flight
+    }
+}
+
+/// `a` strictly less loaded than `b` (backlog count, then estimated time).
+fn less_loaded(a: &ServerView, b: &ServerView) -> bool {
+    a.backlog() < b.backlog()
+        || (a.backlog() == b.backlog() && a.est_backlog_s < b.est_backlog_s)
+}
+
+/// A load-balancing policy: observes the fleet, picks a server index.
+pub trait Dispatcher {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, req: &Request, servers: &[ServerView], now: f64, rng: &mut Rng) -> usize;
+}
+
+/// Named dispatch policies (CLI / bench sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    ShortestQueue,
+    PowerOfTwo,
+    DeadlineAware,
+}
+
+impl DispatchPolicy {
+    pub const ALL: [DispatchPolicy; 4] = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::ShortestQueue,
+        DispatchPolicy::PowerOfTwo,
+        DispatchPolicy::DeadlineAware,
+    ];
+
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s {
+            "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Some(DispatchPolicy::ShortestQueue),
+            "p2c" | "power-of-two" => Some(DispatchPolicy::PowerOfTwo),
+            "deadline" | "deadline-aware" => Some(DispatchPolicy::DeadlineAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::ShortestQueue => "jsq",
+            DispatchPolicy::PowerOfTwo => "p2c",
+            DispatchPolicy::DeadlineAware => "deadline",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Dispatcher> {
+        match self {
+            DispatchPolicy::RoundRobin => Box::new(RoundRobin::default()),
+            DispatchPolicy::ShortestQueue => Box::new(ShortestQueue),
+            DispatchPolicy::PowerOfTwo => Box::new(PowerOfTwo),
+            DispatchPolicy::DeadlineAware => Box::new(DeadlineAware),
+        }
+    }
+}
+
+/// Static cyclic assignment — oblivious to load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Dispatcher for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, _rng: &mut Rng) -> usize {
+        let s = self.next % servers.len();
+        self.next = (self.next + 1) % servers.len();
+        s
+    }
+}
+
+/// Join-the-shortest-queue over all servers (full state inspection).
+#[derive(Debug)]
+pub struct ShortestQueue;
+
+impl Dispatcher for ShortestQueue {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, _rng: &mut Rng) -> usize {
+        let mut best = 0;
+        for i in 1..servers.len() {
+            if less_loaded(&servers[i], &servers[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Power-of-two-choices: sample two distinct servers, join the less loaded.
+#[derive(Debug)]
+pub struct PowerOfTwo;
+
+impl Dispatcher for PowerOfTwo {
+    fn name(&self) -> &'static str {
+        "p2c"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, rng: &mut Rng) -> usize {
+        let n = servers.len();
+        if n < 2 {
+            return 0;
+        }
+        let i = rng.usize_below(n);
+        let mut j = rng.usize_below(n - 1);
+        if j >= i {
+            j += 1;
+        }
+        if less_loaded(&servers[j], &servers[i]) {
+            j
+        } else {
+            i
+        }
+    }
+}
+
+/// Deadline-aware: among servers whose estimated backlog still meets the
+/// request's deadline (after its upload), join the least loaded in *time*;
+/// when none can, fall back to the globally least-loaded server.
+#[derive(Debug)]
+pub struct DeadlineAware;
+
+impl Dispatcher for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn pick(&mut self, req: &Request, servers: &[ServerView], now: f64, _rng: &mut Rng) -> usize {
+        let feasible = |v: &ServerView| now + req.upload_s + v.est_backlog_s <= req.due_s();
+        let mut best: Option<usize> = None;
+        for (i, v) in servers.iter().enumerate() {
+            if !feasible(v) {
+                continue;
+            }
+            match best {
+                Some(b) if servers[b].est_backlog_s <= v.est_backlog_s => {}
+                _ => best = Some(i),
+            }
+        }
+        best.unwrap_or_else(|| {
+            let mut b = 0;
+            for i in 1..servers.len() {
+                if servers[i].est_backlog_s < servers[b].est_backlog_s {
+                    b = i;
+                }
+            }
+            b
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queued: usize, in_flight: usize, est: f64) -> ServerView {
+        ServerView { queued, in_flight, busy_until_s: 0.0, speed: 1.0, est_backlog_s: est }
+    }
+
+    fn req(deadline: f64) -> Request {
+        Request {
+            id: 0,
+            user: 0,
+            arrival_s: 0.0,
+            deadline_s: deadline,
+            upload_s: 0.0,
+            tx_energy_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = RoundRobin::default();
+        let views = vec![view(0, 0, 0.0); 3];
+        let mut rng = Rng::seed_from(1);
+        let picks: Vec<usize> =
+            (0..6).map(|_| rr.pick(&req(1.0), &views, 0.0, &mut rng)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_joins_minimum_backlog_with_time_tiebreak() {
+        let mut jsq = ShortestQueue;
+        let mut rng = Rng::seed_from(1);
+        let views = vec![view(3, 1, 0.1), view(1, 0, 0.2), view(1, 0, 0.1)];
+        assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 2, "count ties break on time");
+        let views = vec![view(0, 16, 0.5), view(2, 0, 0.1)];
+        assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 1, "in-flight counts as load");
+    }
+
+    #[test]
+    fn p2c_picks_the_less_loaded_of_two_samples() {
+        let mut p2c = PowerOfTwo;
+        let mut rng = Rng::seed_from(7);
+        // One idle server among loaded ones: over many draws, the idle one
+        // must win every comparison it appears in, so it gets picked more
+        // often than uniform.
+        let views = vec![view(9, 1, 1.0), view(0, 0, 0.0), view(9, 1, 1.0), view(9, 1, 1.0)];
+        let mut hits = 0;
+        for _ in 0..1000 {
+            if p2c.pick(&req(1.0), &views, 0.0, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        // P(idle in sample) = 1 - C(3,2)/C(4,2) = 1/2; uniform would be 1/4.
+        assert!(hits > 400, "idle server picked {hits}/1000");
+    }
+
+    #[test]
+    fn single_server_fleet_always_picks_zero() {
+        let views = vec![view(5, 1, 1.0)];
+        let mut rng = Rng::seed_from(3);
+        for policy in DispatchPolicy::ALL {
+            let mut d = policy.build();
+            assert_eq!(d.pick(&req(0.01), &views, 0.0, &mut rng), 0, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn deadline_aware_prefers_feasible_servers() {
+        let mut da = DeadlineAware;
+        let mut rng = Rng::seed_from(1);
+        // Server 0 is nearly idle in count but long in time; server 1 meets
+        // the deadline.
+        let views = vec![view(0, 1, 0.30), view(2, 1, 0.05)];
+        assert_eq!(da.pick(&req(0.1), &views, 0.0, &mut rng), 1);
+        // Nobody feasible: fall back to least estimated time.
+        assert_eq!(da.pick(&req(0.01), &views, 0.0, &mut rng), 1);
+        // Loose deadline: both feasible, least time wins.
+        assert_eq!(da.pick(&req(1.0), &views, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in DispatchPolicy::ALL {
+            assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+}

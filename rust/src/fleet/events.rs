@@ -1,0 +1,159 @@
+//! Generic discrete-event core for the fleet engine.
+//!
+//! A binary-heap queue of `(time, payload)` entries with a monotone
+//! simulated clock. Unlike the slotted [`OnlineEnv`](crate::rl::env) loop —
+//! O(slots · users) per run — fleet-scale simulation pops events in time
+//! order, so cost scales with the number of *requests*, making sweeps over
+//! 10⁴–10⁶ users feasible. Simultaneous events pop FIFO by insertion
+//! sequence, which (together with the seeded [`Rng`](crate::util::rng::Rng)
+//! streams) makes every fleet run deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled payload at simulated time `at`.
+#[derive(Debug, Clone)]
+struct Entry<E> {
+    at: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earliest time first, then insertion order.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-time event queue with a monotone clock, generic over the payload.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now — no past
+    /// scheduling).
+    pub fn schedule(&mut self, at: f64, payload: E) {
+        let at = at.max(self.now);
+        self.heap.push(Entry { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at >= self.now - 1e-12, "time went backwards");
+        self.now = self.now.max(e.at);
+        Some((self.now, e.payload))
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_at(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_across_payload_types() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.peek_at(), Some(1.0));
+        let order: Vec<(f64, &str)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
+        assert_eq!(q.now(), 3.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn simultaneous_events_pop_fifo() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..5 {
+            q.schedule(1.0, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn clock_is_monotone_and_clamps_past_scheduling() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.schedule(2.0, 0);
+        q.pop();
+        q.schedule(1.0, 1); // "in the past" — clamps to now
+        let (at, _) = q.pop().unwrap();
+        assert_eq!(at, 2.0);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_is_deterministic() {
+        let run = || {
+            let mut q: EventQueue<u64> = EventQueue::new();
+            let mut out = Vec::new();
+            for i in 0..100u64 {
+                q.schedule((i % 7) as f64, i);
+                if i % 3 == 0 {
+                    if let Some((at, e)) = q.pop() {
+                        out.push((at, e));
+                    }
+                }
+            }
+            while let Some((at, e)) = q.pop() {
+                out.push((at, e));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,68 @@
+//! `fleet::` — sharded, event-driven multi-server serving engine.
+//!
+//! The paper (and [`coordinator`](crate::coordinator)) schedules **one**
+//! batch-capable edge server for a handful of users. This layer scales
+//! that stack out: a large user population's request stream is sharded
+//! across N edge-server instances behind a pluggable load balancer, with
+//! per-server dynamic batch queues — the fleet-level dispatch + batching
+//! regime that queueing analyses of GPU inference serving (Inoue 2020;
+//! He et al. 2023) show dominates latency and energy at scale.
+//!
+//! Components:
+//!
+//! * [`events`] — generic binary-heap discrete-event core (arrival /
+//!   dispatch / batch-complete), replacing the O(slots · users) dense slot
+//!   loop so sweeps over 10⁴–10⁶ users are feasible;
+//! * [`dispatch`] — load-balancing policies (round-robin,
+//!   join-shortest-queue, power-of-two-choices, deadline-aware) behind the
+//!   [`Dispatcher`] trait;
+//! * [`queue`] — per-server dynamic batch queue with admission control
+//!   (max batch size, max queue delay, shed-on-deadline);
+//! * [`engine`] — the event-driven fleet simulator tying the above to the
+//!   paper's batch occupancy model `Σ_n F_n(b)` and radio substrate;
+//! * [`pool`] — a slot-driven pool of full
+//!   [`Coordinator`](crate::coordinator::Coordinator) stacks for
+//!   high-fidelity cross-checks (an N=1 pool is bit-identical to a
+//!   standalone coordinator run);
+//! * [`report`] — per-shard metric aggregation into a fleet report
+//!   (p50/p95/p99 latency, shed rate, utilization, energy).
+//!
+//! Future scaling PRs (multi-GPU pools, result caching, async backends)
+//! plug in as new `Dispatcher`/server models against the same event core.
+
+pub mod dispatch;
+pub mod engine;
+pub mod events;
+pub mod pool;
+pub mod queue;
+pub mod report;
+
+pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
+pub use engine::{FleetCfg, FleetEngine};
+pub use pool::{CoordinatorPool, PoolCfg};
+pub use queue::{BatchPolicy, BatchQueue};
+pub use report::{FleetReport, ShardStats};
+
+/// One inference request at fleet scope.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Monotone id in arrival order.
+    pub id: u64,
+    /// Population member that issued it.
+    pub user: usize,
+    /// Absolute arrival time at the dispatcher (s).
+    pub arrival_s: f64,
+    /// Latency budget relative to arrival (s).
+    pub deadline_s: f64,
+    /// Uplink transfer time of the input tensor (s).
+    pub upload_s: f64,
+    /// User-side transmit energy for the upload (J).
+    pub tx_energy_j: f64,
+}
+
+impl Request {
+    /// Absolute deadline.
+    pub fn due_s(&self) -> f64 {
+        self.arrival_s + self.deadline_s
+    }
+}

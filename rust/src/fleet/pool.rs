@@ -1,0 +1,193 @@
+//! Slot-driven pool of full [`Coordinator`] stacks — the high-fidelity
+//! shard backend.
+//!
+//! Where [`engine`](super::engine) models each shard analytically (batch
+//! occupancy `Σ_n F_n(b)`) to reach 10⁵⁺ users, this pool runs the real
+//! three-layer stack per shard — online policy, offline solvers, per-task
+//! accounting — by statically partitioning the user population across N
+//! coordinators and stepping them in lockstep through the reusable
+//! [`Coordinator::step_slots`] API. A 1-shard pool is bit-identical to a
+//! standalone [`Coordinator::run`], which is the fleet engine's
+//! conservation anchor; small multi-shard pools cross-check the analytic
+//! engine's batching behavior at scales where both are tractable.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::Coordinator;
+use crate::rl::env::SchedulerAlg;
+use crate::rl::policy::OnlinePolicy;
+use crate::scenario::ArrivalProcess;
+
+use super::report::{FleetReport, ShardStats};
+
+/// Pool topology.
+#[derive(Debug, Clone)]
+pub struct PoolCfg {
+    /// Total user population, statically partitioned across shards.
+    pub users: usize,
+    pub shards: usize,
+    /// Slot length `T` (s) of every shard's online environment.
+    pub slot_s: f64,
+    /// Base seed; shard 0 uses it verbatim (1-shard pool ≡ standalone
+    /// coordinator), later shards derive independent streams.
+    pub seed: u64,
+}
+
+/// N full serving stacks stepped in lockstep.
+pub struct CoordinatorPool {
+    shards: Vec<Coordinator>,
+    slot_s: f64,
+    slots_run: u64,
+    /// Wall-clock accumulated across `run` calls, matching the cumulative
+    /// metrics the report aggregates.
+    wall_s: f64,
+}
+
+impl CoordinatorPool {
+    /// Partition `pool.users` across `pool.shards` coordinators (earlier
+    /// shards take the remainder). `mk_policy(shard)` builds each shard's
+    /// online policy.
+    pub fn new(
+        cfg: &Arc<SystemConfig>,
+        pool: &PoolCfg,
+        arrivals: &ArrivalProcess,
+        alg: SchedulerAlg,
+        mk_policy: &dyn Fn(usize) -> Box<dyn OnlinePolicy>,
+    ) -> Result<CoordinatorPool> {
+        assert!(pool.shards > 0, "pool needs at least one shard");
+        assert!(pool.users >= pool.shards, "fewer users than shards");
+        let base = pool.users / pool.shards;
+        let extra = pool.users % pool.shards;
+        let mut shards = Vec::with_capacity(pool.shards);
+        for i in 0..pool.shards {
+            let m = base + usize::from(i < extra);
+            let seed = pool.seed.wrapping_add(i as u64 * 0x9E37_79B9_7F4A_7C15);
+            shards.push(Coordinator::new(
+                cfg,
+                m,
+                arrivals.clone(),
+                alg,
+                pool.slot_s,
+                mk_policy(i),
+                None,
+                seed,
+            )?);
+        }
+        Ok(CoordinatorPool { shards, slot_s: pool.slot_s, slots_run: 0, wall_s: 0.0 })
+    }
+
+    pub fn shards(&self) -> &[Coordinator] {
+        &self.shards
+    }
+
+    /// Total finished tasks (completed + forced) across shards.
+    pub fn served(&self) -> u64 {
+        self.shards.iter().map(Coordinator::served).sum()
+    }
+
+    /// Step every shard `slots` slots in lockstep, then aggregate all
+    /// metrics since construction into a fleet report (horizon and wall
+    /// time are cumulative across calls, like the metrics).
+    pub fn run(&mut self, slots: u64) -> Result<FleetReport> {
+        let wall0 = std::time::Instant::now();
+        for c in &mut self.shards {
+            c.step_slots(slots)?;
+        }
+        self.slots_run += slots;
+        self.wall_s += wall0.elapsed().as_secs_f64();
+        let stats: Vec<ShardStats> = self.shards.iter().map(shard_stats).collect();
+        let horizon_s = self.slots_run as f64 * self.slot_s;
+        Ok(FleetReport::from_shards(&stats, horizon_s, horizon_s, self.wall_s))
+    }
+}
+
+/// Convert one coordinator's per-request metrics into shard stats.
+///
+/// The slotted coordinator has no shedding and does not meter server busy
+/// time, so `shed` and `busy_s` stay 0 (utilization reads 0 for pool
+/// shards).
+fn shard_stats(c: &Coordinator) -> ShardStats {
+    let mut s = ShardStats::default();
+    for r in &c.metrics.records {
+        s.record_completion(r.latency_s, r.latency_s <= r.deadline_s + 1e-9, r.energy_j);
+    }
+    s.batches = c.env.stats.groups_sum;
+    s.batch_size_sum = c.env.stats.tasks_sum;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::policy::FixedTwPolicy;
+    use crate::scenario::{ArrivalKind, ArrivalProcess};
+
+    fn mk_policy(_shard: usize) -> Box<dyn OnlinePolicy> {
+        Box::new(FixedTwPolicy::new(0))
+    }
+
+    fn pool(users: usize, shards: usize, seed: u64) -> CoordinatorPool {
+        let cfg = SystemConfig::mobilenet_default();
+        let arrivals = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Bernoulli);
+        let p = PoolCfg { users, shards, slot_s: 0.025, seed };
+        CoordinatorPool::new(&cfg, &p, &arrivals, SchedulerAlg::IpSsa, &mk_policy).unwrap()
+    }
+
+    #[test]
+    fn single_shard_pool_reproduces_standalone_coordinator() {
+        let cfg = SystemConfig::mobilenet_default();
+        let arrivals = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Bernoulli);
+        let mut solo = Coordinator::new(
+            &cfg,
+            6,
+            arrivals,
+            SchedulerAlg::IpSsa,
+            0.025,
+            Box::new(FixedTwPolicy::new(0)),
+            None,
+            13,
+        )
+        .unwrap();
+        let solo_rep = solo.run(300).unwrap();
+
+        let mut p = pool(6, 1, 13);
+        let fleet_rep = p.run(300).unwrap();
+        assert_eq!(fleet_rep.completed, solo_rep.requests as u64, "request conservation");
+        assert_eq!(fleet_rep.completed, p.served());
+        assert_eq!(
+            fleet_rep.latency_p95_s.to_bits(),
+            solo_rep.latency_p95_s.to_bits(),
+            "identical seed ⇒ identical records"
+        );
+        // Welford vs sum/count mean: equal up to float associativity.
+        let rel = (fleet_rep.energy_mean_j - solo_rep.energy_mean_j).abs()
+            / solo_rep.energy_mean_j.max(1e-300);
+        assert!(rel < 1e-9, "energy means diverge: {rel}");
+        assert_eq!(fleet_rep.deadline_violations as usize, solo_rep.deadline_violations);
+    }
+
+    #[test]
+    fn sharded_pool_conserves_and_partitions_users() {
+        let mut p = pool(9, 4, 7);
+        let ms: Vec<usize> = p.shards().iter().map(|c| c.env.m()).collect();
+        assert_eq!(ms, vec![3, 2, 2, 2], "remainder goes to early shards");
+        let rep = p.run(250).unwrap();
+        assert_eq!(rep.servers, 4);
+        assert_eq!(rep.completed, p.served(), "every finished task has a record");
+        assert!(rep.completed > 0);
+        assert_eq!(rep.shed, 0, "slotted shards never shed");
+        assert!(rep.energy_mean_j > 0.0);
+    }
+
+    #[test]
+    fn repeated_run_accumulates_horizon() {
+        let mut p = pool(4, 2, 3);
+        let a = p.run(100).unwrap();
+        let b = p.run(100).unwrap();
+        assert!(b.completed >= a.completed);
+        assert!((b.horizon_s - 2.0 * a.horizon_s).abs() < 1e-12);
+    }
+}

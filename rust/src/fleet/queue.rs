@@ -1,0 +1,191 @@
+//! Per-server dynamic batch queue with admission control.
+//!
+//! The serving-side analogue of the paper's batch scheduler, in the spirit
+//! of production inference schedulers (InferSim, Triton dynamic batching):
+//! requests accumulate in FIFO order and a batch launches when either the
+//! queue reaches `max_batch` or the *oldest* waiting request has been
+//! queued for `max_delay_s` — trading a bounded queueing delay for the
+//! amortization batching buys (`F(b)` grows far slower than `b·F(1)`,
+//! paper Fig. 3). Admission control sheds requests beyond `max_queue`, and
+//! `shed_expired` drops requests whose absolute deadline already passed at
+//! launch time instead of wasting server occupancy on them.
+
+use std::collections::VecDeque;
+
+use super::Request;
+
+/// Dynamic batching / admission parameters for one server queue.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch launched at once.
+    pub max_batch: usize,
+    /// Longest the oldest request may wait before a partial batch launches
+    /// (s).
+    pub max_delay_s: f64,
+    /// Admission cap: requests arriving beyond this queue depth are shed.
+    pub max_queue: usize,
+    /// Drop requests whose absolute deadline passed before launch.
+    pub shed_expired: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_delay_s: 0.010, max_queue: 1024, shed_expired: true }
+    }
+}
+
+impl BatchPolicy {
+    fn validate(&self) {
+        assert!(self.max_batch > 0, "max_batch must be positive");
+        assert!(self.max_queue >= self.max_batch, "max_queue below max_batch");
+        assert!(self.max_delay_s >= 0.0, "negative max_delay_s");
+    }
+}
+
+/// FIFO batch queue for one server.
+#[derive(Debug)]
+pub struct BatchQueue {
+    policy: BatchPolicy,
+    /// `(enqueued_s, request)` in arrival order.
+    waiting: VecDeque<(f64, Request)>,
+}
+
+impl BatchQueue {
+    pub fn new(policy: BatchPolicy) -> BatchQueue {
+        policy.validate();
+        BatchQueue { policy, waiting: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Admission control: queue the request, or refuse it (shed) when the
+    /// queue is at capacity.
+    #[must_use]
+    pub fn admit(&mut self, req: Request, now: f64) -> bool {
+        if self.waiting.len() >= self.policy.max_queue {
+            return false;
+        }
+        self.waiting.push_back((now, req));
+        true
+    }
+
+    /// Whether a batch should launch at time `now`: the queue is full to
+    /// `max_batch`, or the oldest request has waited out `max_delay_s`.
+    pub fn ready(&self, now: f64) -> bool {
+        if self.waiting.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.waiting.front() {
+            Some((t, _)) => now - t >= self.policy.max_delay_s - 1e-12,
+            None => false,
+        }
+    }
+
+    /// Absolute time at which the oldest waiting request forces a partial
+    /// batch (None when empty).
+    pub fn launch_deadline(&self) -> Option<f64> {
+        self.waiting.front().map(|(t, _)| t + self.policy.max_delay_s)
+    }
+
+    /// Remove up to `max_batch` requests in FIFO order. Returns
+    /// `(batch, shed)`: with `shed_expired`, requests whose absolute
+    /// deadline passed before `now` are dropped rather than batched.
+    pub fn take_batch(&mut self, now: f64) -> (Vec<Request>, Vec<Request>) {
+        let mut batch = Vec::new();
+        let mut shed = Vec::new();
+        while batch.len() < self.policy.max_batch {
+            let Some((_, req)) = self.waiting.pop_front() else { break };
+            if self.policy.shed_expired && req.due_s() < now {
+                shed.push(req);
+            } else {
+                batch.push(req);
+            }
+        }
+        (batch, shed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, deadline: f64) -> Request {
+        Request {
+            id,
+            user: id as usize,
+            arrival_s: arrival,
+            deadline_s: deadline,
+            upload_s: 0.0,
+            tx_energy_j: 0.0,
+        }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 4, max_delay_s: 0.01, max_queue: 6, shed_expired: true }
+    }
+
+    #[test]
+    fn admission_sheds_beyond_max_queue() {
+        let mut q = BatchQueue::new(policy());
+        for i in 0..6 {
+            assert!(q.admit(req(i, 0.0, 1.0), 0.0));
+        }
+        assert!(!q.admit(req(6, 0.0, 1.0), 0.0), "7th request must shed");
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn ready_on_full_batch_or_elapsed_delay() {
+        let mut q = BatchQueue::new(policy());
+        assert!(!q.ready(0.0), "empty queue never ready");
+        assert!(q.admit(req(0, 0.0, 1.0), 0.0));
+        assert!(!q.ready(0.005), "partial batch within delay budget");
+        assert!(q.ready(0.010), "oldest waited out max_delay");
+        assert_eq!(q.launch_deadline(), Some(0.010));
+        for i in 1..4 {
+            assert!(q.admit(req(i, 0.0, 1.0), 0.001));
+        }
+        assert!(q.ready(0.001), "full batch launches immediately");
+    }
+
+    #[test]
+    fn take_batch_is_fifo_and_caps_at_max_batch() {
+        let mut q = BatchQueue::new(policy());
+        for i in 0..6 {
+            assert!(q.admit(req(i, 0.0, 1.0), 0.0));
+        }
+        let (batch, shed) = q.take_batch(0.0);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(shed.is_empty());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn expired_requests_shed_at_launch() {
+        let mut q = BatchQueue::new(policy());
+        assert!(q.admit(req(0, 0.0, 0.05), 0.0)); // due at 0.05
+        assert!(q.admit(req(1, 0.0, 1.0), 0.0));
+        let (batch, shed) = q.take_batch(0.1);
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn shedding_disabled_keeps_expired() {
+        let mut q = BatchQueue::new(BatchPolicy { shed_expired: false, ..policy() });
+        assert!(q.admit(req(0, 0.0, 0.05), 0.0));
+        let (batch, shed) = q.take_batch(1.0);
+        assert_eq!(batch.len(), 1);
+        assert!(shed.is_empty());
+    }
+}

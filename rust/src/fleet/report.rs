@@ -1,0 +1,259 @@
+//! Fleet-level metric aggregation: per-shard stats merged into one report.
+//!
+//! Each shard (event-driven [`engine`](super::engine) server or
+//! [`pool`](super::pool) coordinator) accumulates a [`ShardStats`]; the
+//! fleet report merges them into the numbers a serving operator watches:
+//! tail latency (p50/p95/p99), shed and deadline-violation rates, energy
+//! per request, mean batch size, and per-server utilization.
+
+use crate::util::stats::percentile_sorted;
+use crate::util::table::Table;
+
+/// Serving statistics of one shard.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Requests completed (served to the user).
+    pub completed: u64,
+    /// Requests dropped by admission control or deadline shedding.
+    pub shed: u64,
+    /// Completed requests that finished past their deadline.
+    pub violations: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Σ batch sizes (mean batch = sum / batches).
+    pub batch_size_sum: u64,
+    /// Seconds the server spent serving batches.
+    pub busy_s: f64,
+    /// User-side energy of completed requests (J).
+    pub energy_j: f64,
+    /// End-to-end latency of every completed request (s).
+    pub latencies_s: Vec<f64>,
+}
+
+impl ShardStats {
+    /// Account one completed request.
+    pub fn record_completion(&mut self, latency_s: f64, met_deadline: bool, energy_j: f64) {
+        self.completed += 1;
+        if !met_deadline {
+            self.violations += 1;
+        }
+        self.energy_j += energy_j;
+        self.latencies_s.push(latency_s);
+    }
+
+    /// Fraction of the horizon this shard's server was busy.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / horizon_s
+        }
+    }
+}
+
+/// Aggregate fleet serving report.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub servers: usize,
+    /// Completed + shed — every request that entered the system.
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_violations: u64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_p99_s: f64,
+    /// Mean user-side energy per completed request (J).
+    pub energy_mean_j: f64,
+    /// Mean launched batch size.
+    pub mean_batch: f64,
+    /// Per-server busy fraction over the horizon.
+    pub utilization: Vec<f64>,
+    /// Model-time horizon (s).
+    pub horizon_s: f64,
+    /// Wall-clock of the simulation (s).
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    /// Merge per-shard stats (percentiles over the pooled latency set).
+    /// Takes references so fleet-scale engines aggregate without cloning
+    /// the per-request latency vectors. `horizon_s` is the arrival window
+    /// (the throughput denominator); `span_s` is the full simulated time
+    /// including any post-horizon drain (the utilization denominator) —
+    /// pass the same value when they coincide.
+    pub fn from_shards<'a, I>(shards: I, horizon_s: f64, span_s: f64, wall_s: f64) -> FleetReport
+    where
+        I: IntoIterator<Item = &'a ShardStats>,
+    {
+        let mut lats: Vec<f64> = Vec::new();
+        let (mut completed, mut shed, mut violations) = (0u64, 0u64, 0u64);
+        let (mut batches, mut batch_sum) = (0u64, 0u64);
+        let mut energy = 0.0;
+        let mut utilization = Vec::new();
+        for s in shards {
+            completed += s.completed;
+            shed += s.shed;
+            violations += s.violations;
+            batches += s.batches;
+            batch_sum += s.batch_size_sum;
+            energy += s.energy_j;
+            lats.extend_from_slice(&s.latencies_s);
+            utilization.push(s.utilization(span_s.max(horizon_s)));
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
+        FleetReport {
+            servers: utilization.len(),
+            requests: completed + shed,
+            completed,
+            shed,
+            deadline_violations: violations,
+            latency_p50_s: pct(50.0),
+            latency_p95_s: pct(95.0),
+            latency_p99_s: pct(99.0),
+            energy_mean_j: if completed == 0 { 0.0 } else { energy / completed as f64 },
+            mean_batch: if batches == 0 { 0.0 } else { batch_sum as f64 / batches as f64 },
+            utilization,
+            horizon_s,
+            wall_s,
+        }
+    }
+
+    /// Fraction of offered requests shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+
+    /// Fraction of completed requests that missed their deadline.
+    pub fn violation_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.deadline_violations as f64 / self.completed as f64
+        }
+    }
+
+    /// Completed requests per second of model time.
+    pub fn throughput(&self) -> f64 {
+        if self.horizon_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.horizon_s
+        }
+    }
+
+    /// Mean utilization across servers.
+    pub fn utilization_mean(&self) -> f64 {
+        if self.utilization.is_empty() {
+            0.0
+        } else {
+            self.utilization.iter().sum::<f64>() / self.utilization.len() as f64
+        }
+    }
+
+    /// One-line summary (bench / CLI output).
+    pub fn render(&self) -> String {
+        format!(
+            "servers={} requests={} completed={} shed={:.2}% viol={:.2}% \
+             p50={:.1} ms p95={:.1} ms p99={:.1} ms batch={:.2} util={:.0}% \
+             energy/req={:.4} J thru={:.0} req/s wall={:.2} s",
+            self.servers,
+            self.requests,
+            self.completed,
+            self.shed_rate() * 100.0,
+            self.violation_rate() * 100.0,
+            self.latency_p50_s * 1e3,
+            self.latency_p95_s * 1e3,
+            self.latency_p99_s * 1e3,
+            self.mean_batch,
+            self.utilization_mean() * 100.0,
+            self.energy_mean_j,
+            self.throughput(),
+            self.wall_s,
+        )
+    }
+
+    /// Row cells for the sweep tables (aligned with [`Self::table_header`]).
+    pub fn table_cells(&self) -> Vec<String> {
+        vec![
+            format!("{}", self.requests),
+            format!("{:.1}", self.latency_p50_s * 1e3),
+            format!("{:.1}", self.latency_p95_s * 1e3),
+            format!("{:.1}", self.latency_p99_s * 1e3),
+            format!("{:.2}", self.shed_rate() * 100.0),
+            format!("{:.2}", self.violation_rate() * 100.0),
+            format!("{:.2}", self.mean_batch),
+            format!("{:.0}", self.utilization_mean() * 100.0),
+            format!("{:.0}", self.throughput()),
+        ]
+    }
+
+    /// Header matching [`Self::table_cells`].
+    pub fn table(title: &str) -> Table {
+        Table::new(title).header(&[
+            "policy",
+            "requests",
+            "p50 (ms)",
+            "p95 (ms)",
+            "p99 (ms)",
+            "shed %",
+            "viol %",
+            "batch",
+            "util %",
+            "req/s",
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_shards_and_rates() {
+        let mut a = ShardStats::default();
+        a.record_completion(0.010, true, 1.0);
+        a.record_completion(0.030, false, 3.0);
+        a.batches = 1;
+        a.batch_size_sum = 2;
+        a.busy_s = 0.5;
+        let mut b = ShardStats::default();
+        b.record_completion(0.020, true, 2.0);
+        b.shed = 1;
+        b.batches = 1;
+        b.batch_size_sum = 1;
+        b.busy_s = 1.0;
+
+        let rep = FleetReport::from_shards(&[a, b], 2.0, 2.0, 0.1);
+        assert_eq!(rep.servers, 2);
+        assert_eq!(rep.requests, 4);
+        assert_eq!(rep.completed, 3);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.deadline_violations, 1);
+        assert!((rep.shed_rate() - 0.25).abs() < 1e-12);
+        assert!((rep.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.latency_p50_s - 0.020).abs() < 1e-12);
+        assert!((rep.energy_mean_j - 2.0).abs() < 1e-12);
+        assert!((rep.mean_batch - 1.5).abs() < 1e-12);
+        assert_eq!(rep.utilization, vec![0.25, 0.5]);
+        assert!((rep.throughput() - 1.5).abs() < 1e-12);
+        assert!(rep.render().contains("requests=4"));
+        assert_eq!(rep.table_cells().len() + 1, 10, "cells align with header");
+    }
+
+    #[test]
+    fn empty_fleet_reports_zeros() {
+        let none: Vec<ShardStats> = Vec::new();
+        let rep = FleetReport::from_shards(&none, 1.0, 1.0, 0.0);
+        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.latency_p99_s, 0.0);
+        assert_eq!(rep.shed_rate(), 0.0);
+        assert_eq!(rep.violation_rate(), 0.0);
+        assert_eq!(rep.energy_mean_j, 0.0);
+    }
+}

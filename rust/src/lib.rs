@@ -10,8 +10,10 @@
 //!   ([`algo::traverse`], [`algo::ipssa`], [`algo::og`]) and baselines,
 //!   a pure-Rust DDPG agent for the online setting ([`rl`]), a
 //!   discrete-event simulation core and a real-execution serving loop
-//!   ([`coordinator`]), plus the experiment harness that regenerates every
-//!   table and figure of the paper ([`experiments`]).
+//!   ([`coordinator`]), a sharded multi-server fleet engine with load
+//!   balancing and dynamic batch queues ([`fleet`]), plus the experiment
+//!   harness that regenerates every table and figure of the paper
+//!   ([`experiments`]).
 //! * **Layer 2 (python/compile, build-time only)** — the workload DNNs
 //!   (mobilenet-v2 and 3dssd proxies) written in JAX at sub-task
 //!   granularity and AOT-lowered to HLO text per `(net, sub-task, batch)`.
@@ -47,6 +49,7 @@ pub mod algo;
 pub mod rl;
 pub mod runtime;
 pub mod coordinator;
+pub mod fleet;
 pub mod experiments;
 
 /// Convenient re-exports of the most commonly used types.
@@ -54,6 +57,7 @@ pub mod prelude {
     pub use crate::algo::{self, feasibility, ipssa, og, traverse, Plan, Solver};
     pub use crate::config::SystemConfig;
     pub use crate::dnn::{DnnModel, LatencyProfile, SubTask};
-    pub use crate::scenario::Scenario;
+    pub use crate::fleet::{DispatchPolicy, FleetCfg, FleetEngine, FleetReport};
+    pub use crate::scenario::{PopulationArrivals, Scenario};
     pub use crate::util::rng::Rng;
 }

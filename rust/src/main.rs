@@ -4,9 +4,10 @@
 //!   profile     measure F_n(b) of the AOT artifacts on CPU-PJRT (Fig. 3)
 //!   solve       solve one offline scenario and print the plan
 //!   serve       run the online serving coordinator (sim or real compute)
+//!   fleet       run the sharded multi-server fleet engine
 //!   train       train a DDPG agent and print the learning curve
 //!   experiment  regenerate a paper table/figure (fig3 fig5 fig6 fig7
-//!               table3 fig8 table5, or `all`)
+//!               table3 fig8 table5 fleet, or `all`)
 
 use std::sync::Arc;
 
@@ -16,6 +17,8 @@ use batchedge::algo::{baselines, feasibility, ipssa, og, Solver};
 use batchedge::config::SystemConfig;
 use batchedge::coordinator::Coordinator;
 use batchedge::experiments;
+use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport};
+use batchedge::scenario::PopulationArrivals;
 use batchedge::rl::env::SchedulerAlg;
 use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
 use batchedge::rl::train::{train, TrainConfig};
@@ -45,12 +48,13 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "profile" => cmd_profile(rest),
         "solve" => cmd_solve(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "train" => cmd_train(rest),
         "experiment" => cmd_experiment(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "batchedge — multi-user co-inference with a batch-capable edge server\n\n\
-                 USAGE: batchedge <profile|solve|serve|train|experiment> [options]\n\
+                 USAGE: batchedge <profile|solve|serve|fleet|train|experiment> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -224,6 +228,62 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("batchedge fleet", "run the sharded multi-server fleet engine")
+        .opt("net", Some("mobilenet_v2"), "workload net")
+        .opt("servers", Some("8"), "edge-server shards N")
+        .opt("users", Some("100000"), "population size U")
+        .opt("rate", Some("0.05"), "mean requests/s per user")
+        .opt("horizon", Some("10"), "model-time horizon (s)")
+        .opt("policy", Some("jsq"), "rr|jsq|p2c|deadline|all")
+        .opt("max-batch", Some("16"), "dynamic batching: largest batch")
+        .opt("max-delay-ms", Some("10"), "dynamic batching: partial-batch delay")
+        .opt("seed", Some("1"), "rng seed")
+        .switch("skewed", "run the last quarter of servers at 0.25x speed");
+    let args = cli.parse(argv)?;
+    let cfg = net_cfg(args.str("net").unwrap())?;
+    let servers = args.usize("servers")?;
+    let users = args.usize("users")?;
+    let policies: Vec<DispatchPolicy> = match args.str("policy").unwrap() {
+        "all" => DispatchPolicy::ALL.to_vec(),
+        p => vec![DispatchPolicy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy {p} (rr|jsq|p2c|deadline|all)"))?],
+    };
+    let speeds = if args.has("skewed") {
+        experiments::fleet::skewed_speeds(servers)
+    } else {
+        Vec::new()
+    };
+    let batch = BatchPolicy {
+        max_batch: args.usize("max-batch")?,
+        max_delay_s: args.f64("max-delay-ms")? * 1e-3,
+        ..BatchPolicy::default()
+    };
+    let mut t = FleetReport::table(&format!(
+        "fleet: {} × {servers} servers, U={users} @ {} Hz",
+        cfg.net.name,
+        args.f64("rate")?
+    ));
+    for policy in policies {
+        let arrivals =
+            PopulationArrivals::stationary(&cfg.net.name, users, args.f64("rate")?);
+        let fleet = FleetCfg {
+            servers,
+            speeds: speeds.clone(),
+            batch,
+            horizon_s: args.f64("horizon")?,
+            seed: args.u64("seed")?,
+        };
+        let rep = FleetEngine::new(&cfg, fleet, policy.build(), arrivals).run();
+        println!("{}: {}", policy.name(), rep.render());
+        let mut cells = vec![policy.name().to_string()];
+        cells.extend(rep.table_cells());
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let cli = Cli::new("batchedge train", "train a DDPG agent")
         .opt("net", Some("mobilenet_v2"), "workload net")
@@ -264,7 +324,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cli = Cli::new("batchedge experiment", "regenerate a paper table/figure")
-        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|all")
+        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|fleet|all")
         .switch("quick", "smoke-scale parameters");
     let args = cli.parse(argv)?;
     let id = args.positional.first().map(String::as_str).unwrap_or("all");

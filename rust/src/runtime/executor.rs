@@ -120,6 +120,9 @@ mod tests {
     use crate::runtime::default_artifacts_root;
 
     fn runtime() -> Option<Runtime> {
+        if !crate::runtime::pjrt_available() {
+            return None;
+        }
         let root = default_artifacts_root();
         root.join("manifest.json").exists().then(|| Runtime::open(&root).unwrap())
     }

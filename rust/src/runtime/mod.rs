@@ -130,7 +130,15 @@ impl Manifest {
     }
 }
 
+/// Whether this build can execute artifacts (compiled with the `pjrt`
+/// feature). Artifact-dependent tests and tools consult this to skip
+/// cleanly instead of failing on the stub runtime.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
 /// PJRT client + lazily compiled executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -139,6 +147,38 @@ pub struct Runtime {
     >,
 }
 
+/// Stub runtime for builds without the `pjrt` feature: manifest handling
+/// stays available, but `open()` (and hence any execution) reports the
+/// missing feature instead of linking against libxla_extension.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: this binary was built without PJRT support.
+    pub fn open(artifacts_root: &Path) -> Result<Runtime> {
+        let _ = Manifest::load(artifacts_root)
+            .with_context(|| format!("loading manifest from {}", artifacts_root.display()))?;
+        bail!(
+            "batchedge was built without the `pjrt` feature; rebuild with \
+             `cargo build --features pjrt` to execute AOT artifacts"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Unreachable in practice (`open` never succeeds); present so the
+    /// executor/profiler layers compile identically with and without PJRT.
+    pub fn run_raw(&self, net: &str, sub: &str, bucket: usize, _data: &[f32]) -> Result<Vec<f32>> {
+        bail!("{net}/{sub} b={bucket}: built without the `pjrt` feature")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// CPU-PJRT runtime over an artifacts directory.
     pub fn open(artifacts_root: &Path) -> Result<Runtime> {
@@ -254,6 +294,9 @@ mod tests {
     use super::*;
 
     fn artifacts() -> Option<PathBuf> {
+        if !pjrt_available() {
+            return None;
+        }
         let root = default_artifacts_root();
         root.join("manifest.json").exists().then_some(root)
     }
@@ -287,6 +330,7 @@ mod tests {
         assert!(err.to_string().contains("expected"));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn executes_subtask_and_caches_executable() {
         let Some(root) = artifacts() else {

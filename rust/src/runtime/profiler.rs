@@ -134,8 +134,8 @@ mod tests {
     #[test]
     fn profiles_real_artifacts() {
         let root = default_artifacts_root();
-        if !root.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
+        if !crate::runtime::pjrt_available() || !root.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built or no pjrt feature");
             return;
         }
         let rt = Runtime::open(&root).unwrap();

@@ -128,6 +128,89 @@ impl ArrivalProcess {
     }
 }
 
+/// One request emitted by a [`PopulationArrivals`] generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PopArrival {
+    /// Absolute arrival time (s).
+    pub at_s: f64,
+    /// Which member of the population issued it.
+    pub user: usize,
+    /// Latency constraint relative to `at_s` (s).
+    pub deadline_s: f64,
+}
+
+/// Open-loop, population-scale arrival generator for the fleet engine.
+///
+/// Models the aggregate request stream of a large user population as a
+/// (optionally diurnally modulated) Poisson process: the base rate is
+/// `users · rate_per_user_hz` and `rate(t)` is shaped by
+/// `1 + (peak_factor − 1) · sin²(π t / period_s)`. Unlike
+/// [`ArrivalProcess`], which the slotted [`OnlineEnv`](crate::rl::env)
+/// polls per user per slot, this generator emits the *next* arrival
+/// directly (inverse-CDF interarrivals plus thinning for the modulated
+/// case), so fleet-scale sweeps cost `O(requests · log)` rather than
+/// `O(slots · users)`.
+#[derive(Debug, Clone)]
+pub struct PopulationArrivals {
+    /// Population size; emitted requests carry a user id in `0..users`.
+    pub users: usize,
+    /// Mean request rate per user (Hz).
+    pub rate_per_user_hz: f64,
+    /// Deadline distribution `[l_low, l_high]` (s), as in Table IV.
+    pub l_low: f64,
+    pub l_high: f64,
+    /// Peak-to-trough rate ratio (`1.0` = stationary Poisson).
+    pub peak_factor: f64,
+    /// Modulation period (s); ignored when `peak_factor == 1.0`.
+    pub period_s: f64,
+}
+
+impl PopulationArrivals {
+    /// Stationary Poisson stream with the paper's deadline bounds for `net`.
+    pub fn stationary(net: &str, users: usize, rate_per_user_hz: f64) -> PopulationArrivals {
+        let ap = ArrivalProcess::paper_default(net, ArrivalKind::Bernoulli);
+        PopulationArrivals {
+            users,
+            rate_per_user_hz,
+            l_low: ap.l_low,
+            l_high: ap.l_high,
+            peak_factor: 1.0,
+            period_s: 1.0,
+        }
+    }
+
+    /// Aggregate arrival rate at time `t` (requests/s).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let base = self.users as f64 * self.rate_per_user_hz;
+        let s = (std::f64::consts::PI * t / self.period_s).sin();
+        base * (1.0 + (self.peak_factor - 1.0) * s * s)
+    }
+
+    /// Upper bound of `rate_at` (the thinning envelope).
+    pub fn max_rate(&self) -> f64 {
+        self.users as f64 * self.rate_per_user_hz * self.peak_factor.max(1.0)
+    }
+
+    /// The next arrival strictly after time `t` (Poisson thinning against
+    /// the `max_rate` envelope; exact inverse-CDF when stationary).
+    pub fn next_after(&self, t: f64, rng: &mut Rng) -> PopArrival {
+        assert!(self.users > 0 && self.rate_per_user_hz > 0.0, "empty population");
+        let envelope = self.max_rate();
+        let mut at = t;
+        loop {
+            at += rng.exponential(envelope);
+            if rng.f64() * envelope <= self.rate_at(at) {
+                break;
+            }
+        }
+        PopArrival {
+            at_s: at,
+            user: rng.usize_below(self.users),
+            deadline_s: rng.uniform(self.l_low, self.l_high),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +267,71 @@ mod tests {
         let mut rng = Rng::seed_from(6);
         assert!(ap.step(false, &mut rng).is_some());
         assert!(ap.step(true, &mut rng).is_none());
+    }
+
+    #[test]
+    fn population_arrivals_match_aggregate_rate() {
+        let pop = PopulationArrivals::stationary("mobilenet_v2", 1000, 0.5);
+        let mut rng = Rng::seed_from(21);
+        let mut t = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let a = pop.next_after(t, &mut rng);
+            assert!(a.at_s > t, "arrival times strictly increase");
+            assert!(a.user < 1000);
+            assert!((0.05..0.2).contains(&a.deadline_s));
+            t = a.at_s;
+        }
+        // 500 requests/s aggregate -> 20k arrivals span ~40 s.
+        let rate = n as f64 / t;
+        assert!((rate - 500.0).abs() < 15.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn population_arrivals_deterministic_per_seed() {
+        let pop = PopulationArrivals::stationary("dssd3", 64, 1.0);
+        let run = |seed| {
+            let mut rng = Rng::seed_from(seed);
+            let mut t = 0.0;
+            let mut out = Vec::new();
+            for _ in 0..200 {
+                let a = pop.next_after(t, &mut rng);
+                t = a.at_s;
+                out.push(a);
+            }
+            out
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn modulated_arrivals_cluster_at_peak() {
+        let pop = PopulationArrivals {
+            users: 1000,
+            rate_per_user_hz: 0.5,
+            l_low: 0.05,
+            l_high: 0.2,
+            peak_factor: 4.0,
+            period_s: 2.0,
+        };
+        let mut rng = Rng::seed_from(9);
+        let mut t = 0.0;
+        // sin²(π t / 2): trough around t≈0/2/4…, peak around t≈1/3/5…
+        let (mut near_peak, mut near_trough) = (0u64, 0u64);
+        for _ in 0..30_000 {
+            let a = pop.next_after(t, &mut rng);
+            t = a.at_s;
+            let phase = (t / 2.0).fract();
+            if (0.35..0.65).contains(&phase) {
+                near_peak += 1;
+            } else if !(0.1..0.9).contains(&phase) {
+                near_trough += 1;
+            }
+        }
+        assert!(
+            near_peak as f64 > 2.0 * near_trough as f64,
+            "peak {near_peak} vs trough {near_trough}"
+        );
     }
 }

@@ -59,6 +59,13 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an **already sorted** slice — callers taking several
+/// percentiles of one large sample sort once and index repeatedly.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    assert!(!v.is_empty(), "percentile of empty slice");
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

@@ -42,8 +42,8 @@ fn simulated_serving_full_episode_all_accounted() {
 #[test]
 fn real_execution_serving_runs_batches_through_pjrt() {
     let root = default_artifacts_root();
-    if !root.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    if !batchedge::runtime::pjrt_available() || !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`) or no pjrt feature");
         return;
     }
     let rt = Arc::new(Runtime::open(&root).unwrap());

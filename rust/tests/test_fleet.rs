@@ -1,0 +1,160 @@
+//! Fleet-layer integration tests: dispatch-policy orderings on a skewed
+//! fleet, 100k-user × 8-shard scale with bitwise determinism, and the
+//! N=1 pool-vs-coordinator conservation anchor.
+
+use std::sync::Arc;
+
+use batchedge::config::SystemConfig;
+use batchedge::coordinator::Coordinator;
+use batchedge::fleet::{
+    BatchPolicy, CoordinatorPool, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, PoolCfg,
+};
+use batchedge::rl::env::SchedulerAlg;
+use batchedge::rl::policy::{FixedTwPolicy, OnlinePolicy};
+use batchedge::scenario::{ArrivalKind, ArrivalProcess, PopulationArrivals};
+
+fn run_fleet(
+    cfg: &Arc<SystemConfig>,
+    policy: DispatchPolicy,
+    servers: usize,
+    speeds: Vec<f64>,
+    users: usize,
+    horizon_s: f64,
+    batch: BatchPolicy,
+    seed: u64,
+) -> FleetReport {
+    let arrivals = PopulationArrivals::stationary(&cfg.net.name, users, 0.05);
+    let fleet = FleetCfg { servers, speeds, batch, horizon_s, seed };
+    FleetEngine::new(cfg, fleet, policy.build(), arrivals).run()
+}
+
+/// 8 servers, the last two at quarter speed: round-robin keeps feeding the
+/// slow pair past its capacity while load-aware policies route around it.
+fn skewed() -> Vec<f64> {
+    vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.25, 0.25]
+}
+
+#[test]
+fn jsq_and_p2c_beat_round_robin_on_skewed_fleet() {
+    let cfg = SystemConfig::mobilenet_default();
+    // Keep every request's latency observable: no shedding.
+    let batch = BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() };
+    let run = |p: DispatchPolicy| run_fleet(&cfg, p, 8, skewed(), 70_000, 5.0, batch, 33);
+
+    let rr = run(DispatchPolicy::RoundRobin);
+    let jsq = run(DispatchPolicy::ShortestQueue);
+    let p2c = run(DispatchPolicy::PowerOfTwo);
+
+    // The workload stream is policy-invariant at a fixed seed.
+    assert_eq!(rr.requests, jsq.requests);
+    assert_eq!(rr.requests, p2c.requests);
+    assert_eq!(rr.completed, rr.requests, "no shedding configured");
+
+    assert!(
+        jsq.latency_p95_s < 0.5 * rr.latency_p95_s,
+        "JSQ must beat RR on skewed load: jsq p95 {:.1} ms vs rr p95 {:.1} ms",
+        jsq.latency_p95_s * 1e3,
+        rr.latency_p95_s * 1e3
+    );
+    assert!(
+        p2c.latency_p95_s < 0.5 * rr.latency_p95_s,
+        "P2C must beat RR on skewed load: p2c p95 {:.1} ms vs rr p95 {:.1} ms",
+        p2c.latency_p95_s * 1e3,
+        rr.latency_p95_s * 1e3
+    );
+    // Two choices get close to full state inspection (Mitzenmacher).
+    assert!(
+        p2c.latency_p95_s < 5.0 * jsq.latency_p95_s,
+        "P2C should sit near JSQ: p2c p95 {:.1} ms vs jsq p95 {:.1} ms",
+        p2c.latency_p95_s * 1e3,
+        jsq.latency_p95_s * 1e3
+    );
+}
+
+#[test]
+fn fleet_serves_100k_users_across_8_shards_deterministically() {
+    let cfg = SystemConfig::mobilenet_default();
+    let run = || {
+        run_fleet(
+            &cfg,
+            DispatchPolicy::ShortestQueue,
+            8,
+            Vec::new(),
+            100_000,
+            22.0,
+            BatchPolicy::default(),
+            7,
+        )
+    };
+    let a = run();
+    assert_eq!(a.servers, 8);
+    assert!(a.requests > 100_000, "offered load: {} requests", a.requests);
+    assert_eq!(a.completed + a.shed, a.requests, "every request accounted");
+    assert!(a.shed_rate() < 0.01, "{}", a.render());
+    assert!(a.violation_rate() < 0.05, "{}", a.render());
+    assert!(a.latency_p95_s < 0.1, "p95 {:.1} ms", a.latency_p95_s * 1e3);
+    assert!(a.mean_batch > 1.5, "fleet load must exercise batching: {}", a.mean_batch);
+    assert!(a.utilization.iter().all(|&u| u > 0.05), "all shards carry load: {:?}", a.utilization);
+
+    // Bitwise-identical replay under the same seed.
+    let b = run();
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.deadline_violations, b.deadline_violations);
+    assert_eq!(a.latency_p50_s.to_bits(), b.latency_p50_s.to_bits());
+    assert_eq!(a.latency_p95_s.to_bits(), b.latency_p95_s.to_bits());
+    assert_eq!(a.latency_p99_s.to_bits(), b.latency_p99_s.to_bits());
+    assert_eq!(a.energy_mean_j.to_bits(), b.energy_mean_j.to_bits());
+}
+
+#[test]
+fn deadline_aware_policy_is_competitive_on_skewed_fleet() {
+    let cfg = SystemConfig::mobilenet_default();
+    let batch = BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() };
+    let rr = run_fleet(&cfg, DispatchPolicy::RoundRobin, 8, skewed(), 70_000, 5.0, batch, 21);
+    let da = run_fleet(&cfg, DispatchPolicy::DeadlineAware, 8, skewed(), 70_000, 5.0, batch, 21);
+    assert!(
+        da.latency_p95_s < 0.5 * rr.latency_p95_s,
+        "deadline-aware routes around overloaded servers: {:.1} ms vs {:.1} ms",
+        da.latency_p95_s * 1e3,
+        rr.latency_p95_s * 1e3
+    );
+    assert!(da.violation_rate() < rr.violation_rate() + 1e-12);
+}
+
+#[test]
+fn n1_coordinator_pool_conserves_coordinator_run() {
+    let cfg = SystemConfig::mobilenet_default();
+    let arrivals = ArrivalProcess::paper_default("mobilenet_v2", ArrivalKind::Bernoulli);
+
+    let mut solo = Coordinator::new(
+        &cfg,
+        5,
+        arrivals.clone(),
+        SchedulerAlg::IpSsa,
+        0.025,
+        Box::new(FixedTwPolicy::new(0)),
+        None,
+        29,
+    )
+    .unwrap();
+    let solo_rep = solo.run(400).unwrap();
+
+    let mk = |_shard: usize| -> Box<dyn OnlinePolicy> { Box::new(FixedTwPolicy::new(0)) };
+    let pool_cfg = PoolCfg { users: 5, shards: 1, slot_s: 0.025, seed: 29 };
+    let mut pool =
+        CoordinatorPool::new(&cfg, &pool_cfg, &arrivals, SchedulerAlg::IpSsa, &mk).unwrap();
+    let fleet_rep = pool.run(400).unwrap();
+
+    assert_eq!(fleet_rep.completed, solo_rep.requests as u64, "request conservation");
+    assert_eq!(fleet_rep.completed, pool.served());
+    assert_eq!(fleet_rep.deadline_violations as usize, solo_rep.deadline_violations);
+    assert_eq!(fleet_rep.latency_p50_s.to_bits(), solo_rep.latency_p50_s.to_bits());
+    assert_eq!(fleet_rep.latency_p95_s.to_bits(), solo_rep.latency_p95_s.to_bits());
+    // Mean energy: Welford (coordinator) vs sum/count (fleet) — equal up
+    // to float associativity, not bitwise.
+    let rel = (fleet_rep.energy_mean_j - solo_rep.energy_mean_j).abs()
+        / solo_rep.energy_mean_j.max(1e-300);
+    assert!(rel < 1e-9, "energy means diverge: {rel}");
+}

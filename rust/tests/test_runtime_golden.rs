@@ -11,6 +11,9 @@ use batchedge::runtime::{default_artifacts_root, Manifest, Runtime};
 use batchedge::util::json::Json;
 
 fn artifacts() -> Option<PathBuf> {
+    if !batchedge::runtime::pjrt_available() {
+        return None;
+    }
     let root = default_artifacts_root();
     root.join("manifest.json").exists().then_some(root)
 }
@@ -103,6 +106,7 @@ fn bucket_padding_does_not_change_golden_numerics() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn every_manifest_artifact_compiles() {
     // Compile-coverage: all (net, sub-task, bucket) HLO programs parse and
