@@ -32,7 +32,8 @@ fn main() -> anyhow::Result<()> {
     let runtime = Arc::new(Runtime::open(&default_artifacts_root())?);
 
     // --- Train the DDPG-OG agent (CPU-scaled schedule; see EXPERIMENTS.md).
-    let tc = TrainConfig { episodes: 15, slots_per_episode: 300, log_every: 5, ..Default::default() };
+    let tc =
+        TrainConfig { episodes: 15, slots_per_episode: 300, log_every: 5, ..Default::default() };
     let mut rng = Rng::seed_from(42);
     println!("training DDPG-OG ({} episodes x {} slots)...", tc.episodes, tc.slots_per_episode);
     let (agent, curve) = train(&cfg, m, &arrivals, SchedulerAlg::Og, &tc, &mut rng);

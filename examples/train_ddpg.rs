@@ -18,7 +18,8 @@ fn main() {
     let cfg = SystemConfig::dssd3_default();
     let arrivals = ArrivalProcess::paper_default(&cfg.net.name, ArrivalKind::Bernoulli);
 
-    let tc = TrainConfig { episodes: 20, slots_per_episode: 300, log_every: 2, ..Default::default() };
+    let tc =
+        TrainConfig { episodes: 20, slots_per_episode: 300, log_every: 2, ..Default::default() };
 
     let eval = |name: &str, alg: SchedulerAlg, policy: &mut dyn OnlinePolicy| {
         let mut acc = 0.0;

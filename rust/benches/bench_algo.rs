@@ -1,6 +1,11 @@
 //! Solver micro-benchmarks: empirical complexity of Alg. 1 / IP-SSA / OG
 //! (paper: O(MN), O(M²N), O(M⁴N)) and the Table-V execution-latency regime.
 //! This is also the L3 perf-pass workload (EXPERIMENTS.md §Perf).
+//!
+//! `alg3/og` points run the context-backed fast path (`O(M³N)`,
+//! `algo::ctx`); `alg3/og-ref` points run the naive reference — the pair
+//! at the same `M` is the headline speedup of the solver fast path.
+//! Results are persisted to `BENCH_algo.json` at the repo root.
 
 mod common;
 
@@ -12,39 +17,54 @@ use batchedge::util::rng::Rng;
 fn main() {
     let reps = if common::quick() { 5 } else { 30 };
     let cfg = SystemConfig::dssd3_default();
+    let mut recs = Vec::new();
 
     for &m in &[2usize, 4, 8, 14, 32, 64] {
         let s = Scenario::draw(&cfg, m, &mut Rng::seed_from(1));
-        common::bench(&format!("alg1/traverse M={m}"), 2, reps, || {
+        recs.push(common::bench(&format!("alg1/traverse M={m}"), 2, reps, || {
             let p = traverse::solve_with_batch(&s, cfg.deadline_s, 1).unwrap();
             std::hint::black_box(p.total_energy());
-        });
+        }));
     }
 
     for &m in &[2usize, 4, 8, 14, 32, 64] {
         let s = Scenario::draw(&cfg, m, &mut Rng::seed_from(2));
-        common::bench(&format!("alg2/ip-ssa M={m}"), 2, reps, || {
+        recs.push(common::bench(&format!("alg2/ip-ssa M={m}"), 2, reps, || {
             std::hint::black_box(ipssa::solve(&s).total_energy());
-        });
+        }));
     }
 
-    // OG (Table V: the expensive one — grows ~M^4).
+    // OG (Table V: the expensive one — the reference grows ~M^4, the
+    // context-backed path ~M^3). Fixed seed 3 so the fast/ref pairs and
+    // the cross-PR trajectory compare like for like.
+    for &m in &[2usize, 4, 8, 14, 20, 32, 64] {
+        let s = Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(3));
+        let r = if m > 14 { reps / 3 + 1 } else { reps };
+        recs.push(common::bench(&format!("alg3/og M={m}"), 1, r, || {
+            std::hint::black_box(og::solve(&s).total_energy());
+        }));
+    }
+
+    // Naive reference points (the oracle): capped at M=20 — the O(M⁴N)
+    // path grows another ~(64/20)⁴ ≈ 100× by M=64.
     for &m in &[2usize, 4, 8, 14, 20] {
         let s = Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(3));
         let r = if m > 14 { reps / 3 + 1 } else { reps };
-        common::bench(&format!("alg3/og M={m}"), 1, r, || {
-            std::hint::black_box(og::solve(&s).total_energy());
-        });
+        recs.push(common::bench(&format!("alg3/og-ref M={m}"), 1, r, || {
+            std::hint::black_box(og::solve_reference(&s).total_energy());
+        }));
     }
 
     // Mobilenet flavour at the Table-V operating point.
     let cfg = SystemConfig::mobilenet_default();
     let s = Scenario::draw_mixed_deadlines(&cfg, 14, 0.05, 0.2, &mut Rng::seed_from(4));
-    common::bench("alg3/og mobilenet M=14 (Table V)", 1, reps, || {
+    recs.push(common::bench("alg3/og mobilenet M=14 (Table V)", 1, reps, || {
         std::hint::black_box(og::solve(&s).total_energy());
-    });
+    }));
     let s2 = Scenario::draw(&cfg, 14, &mut Rng::seed_from(5));
-    common::bench("alg2/ip-ssa mobilenet M=14 (Table V)", 2, reps, || {
+    recs.push(common::bench("alg2/ip-ssa mobilenet M=14 (Table V)", 2, reps, || {
         std::hint::black_box(ipssa::solve(&s2).total_energy());
-    });
+    }));
+
+    common::save_suite("algo", &recs);
 }

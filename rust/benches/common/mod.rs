@@ -1,16 +1,41 @@
 //! Tiny bench harness shared by all `harness = false` bench binaries
 //! (criterion is not available in the offline registry).
 //!
-//! Measures wall-clock over `reps` runs after `warmup` runs and prints
-//! mean / min / throughput lines in a stable, grep-friendly format.
+//! Measures wall-clock over `reps` runs after `warmup` runs, prints
+//! mean / min / throughput lines in a stable, grep-friendly format, and
+//! returns a [`Record`] so a suite can persist machine-readable results
+//! with [`save_suite`] (`BENCH_<suite>.json` at the repo root — the perf
+//! trajectory the roadmap tracks across PRs).
 
 // Not every bench binary uses every helper.
 #![allow(dead_code)]
 
 use std::time::Instant;
 
+use batchedge::util::json::Json;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub reps: usize,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", Json::Num(self.mean_s * 1e9)),
+            ("min_ns", Json::Num(self.min_s * 1e9)),
+            ("reps", Json::Num(self.reps as f64)),
+        ])
+    }
+}
+
 /// Run `f` and report timing under `name`.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Record {
     for _ in 0..warmup {
         f();
     }
@@ -22,7 +47,29 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
     }
     let mean = times.iter().sum::<f64>() / reps as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    println!("bench {name:<48} mean {:>10.3} ms  min {:>10.3} ms  reps {reps}", mean * 1e3, min * 1e3);
+    println!(
+        "bench {name:<48} mean {:>10.3} ms  min {:>10.3} ms  reps {reps}",
+        mean * 1e3,
+        min * 1e3
+    );
+    Record { name: name.to_string(), mean_s: mean, min_s: min, reps }
+}
+
+/// Persist a suite's records as `BENCH_<suite>.json` at the repository
+/// root (next to ROADMAP.md), alongside the text table on stdout.
+pub fn save_suite(suite: &str, records: &[Record]) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join(format!("BENCH_{suite}.json"));
+    let json = Json::obj(vec![
+        ("suite", Json::Str(suite.to_string())),
+        ("results", Json::Arr(records.iter().map(Record::to_json).collect())),
+    ]);
+    match json.write_file(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
 }
 
 /// `quick` mode for CI-ish runs: `BATCHEDGE_BENCH_QUICK=1`.

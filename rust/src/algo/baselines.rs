@@ -1,5 +1,7 @@
 //! Benchmark policies from §V-C: LC, PS, FIFO and IP-SSA-NP.
 
+use std::borrow::Cow;
+
 use crate::scenario::Scenario;
 
 use super::ipssa;
@@ -14,11 +16,11 @@ impl Solver for LocalOnly {
         "LC"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
         let members: Vec<usize> = (0..scenario.m()).collect();
         let deadline = min_deadline(scenario);
         let plan = ipssa::all_local_fallback(scenario, &members, deadline).plan;
-        SolveResult { plan, scenario: scenario.clone() }
+        SolveResult { plan, scenario: Cow::Borrowed(scenario) }
     }
 }
 
@@ -32,7 +34,7 @@ impl Solver for ProcessorSharing {
         "PS"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
         let cfg = &scenario.cfg;
         let n = cfg.net.n();
         let m = scenario.m().max(1);
@@ -81,7 +83,7 @@ impl Solver for ProcessorSharing {
                     })
                 };
                 if let Some(c) = cand {
-                    if best.as_ref().map_or(true, |b| c.energy < b.energy - 1e-15) {
+                    if best.as_ref().is_none_or(|b| c.energy < b.energy - 1e-15) {
                         best = Some(c);
                     }
                 }
@@ -108,7 +110,7 @@ impl Solver for ProcessorSharing {
                 discipline: Discipline::ProcessorSharing,
                 assumed_batch: 1,
             },
-            scenario: scenario.clone(),
+            scenario: Cow::Borrowed(scenario),
         }
     }
 }
@@ -124,7 +126,7 @@ impl Solver for Fifo {
         "FIFO"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
         let cfg = &scenario.cfg;
         let n = cfg.net.n();
         let dev = &cfg.device;
@@ -168,7 +170,7 @@ impl Solver for Fifo {
                     upload_end,
                     finish,
                 };
-                if best.as_ref().map_or(true, |(b, _)| plan.energy < b.energy - 1e-15) {
+                if best.as_ref().is_none_or(|(b, _)| plan.energy < b.energy - 1e-15) {
                     best = Some((plan, finish));
                 }
             }
@@ -198,7 +200,7 @@ impl Solver for Fifo {
                 discipline: Discipline::Sequential,
                 assumed_batch: 1,
             },
-            scenario: scenario.clone(),
+            scenario: Cow::Borrowed(scenario),
         }
     }
 }
@@ -212,11 +214,11 @@ impl Solver for IpSsaNp {
         "IP-SSA-NP"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
         let np_cfg = std::sync::Arc::new(scenario.cfg.unpartitioned());
         let np_scenario = Scenario { cfg: np_cfg, users: scenario.users.clone() };
         let plan = ipssa::solve(&np_scenario);
-        SolveResult { plan, scenario: np_scenario }
+        SolveResult { plan, scenario: Cow::Owned(np_scenario) }
     }
 }
 
@@ -300,8 +302,14 @@ mod tests {
         let fastest = (0..s.m())
             .max_by(|&a, &b| s.users[a].rate_up.partial_cmp(&s.users[b].rate_up).unwrap())
             .unwrap();
-        let offloaders: Vec<usize> =
-            r.plan.users.iter().enumerate().filter(|(_, u)| u.partition < 5).map(|(i, _)| i).collect();
+        let offloaders: Vec<usize> = r
+            .plan
+            .users
+            .iter()
+            .enumerate()
+            .filter(|(_, u)| u.partition < 5)
+            .map(|(i, _)| i)
+            .collect();
         if !offloaders.is_empty() {
             assert!(offloaders.contains(&fastest));
         }

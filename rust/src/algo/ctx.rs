@@ -1,0 +1,526 @@
+//! Shared solve context: precomputed profile/device tables and the
+//! memoized group solver behind the fast OG path.
+//!
+//! # Why this layer exists
+//!
+//! The naive OG implementation ([`og::solve_reference`](super::og)) calls
+//! [`ipssa::solve_group`](super::ipssa) from scratch for all `O(M²)`
+//! contiguous groups of the deadline-sorted users. Each call sweeps the
+//! assumed batch size `b` and runs a per-user partition search
+//! ([`traverse::best_partition`](super::traverse)) that is `O(N)` — in
+//! total `O(M⁴N)` partition searches, the dominant cost the paper's
+//! Table V reports for OG.
+//!
+//! Almost all of that work is redundant: every group `{i..=j}` anchored at
+//! deadline index `i` solves against the *same* group deadline `l_i`, so
+//! the eq.-17 batch-start schedule for an assumption `b` — and therefore
+//! the per-user partition search against it — depends only on the triple
+//! **(user, deadline anchor `i`, assumed batch `b`)**, not on `j`. That
+//! triple is the memoization key of this module.
+//!
+//! # How the memo is realized
+//!
+//! [`group_energy_row`] computes one anchor's row `G_{i,i..M}` in a single
+//! left-to-right pass: for each assumption `b` it keeps a fold accumulator
+//! (running energy sum, offloader count, minimum partition point,
+//! feasibility flag) and extends it by exactly one partition search when
+//! user `j` joins. Every `(user, i, b)` search therefore runs **exactly
+//! once** — the memo cache degenerates into an incremental fold with no
+//! lookups at all — cutting OG's partition-search cost to `O(M³N)`, plus
+//! an `O(M³)` scan of `O(1)` accumulator reads for the per-group minima.
+//!
+//! # Why this preserves exactness
+//!
+//! The fold replays [`ipssa::solve_group`](super::ipssa) operation for
+//! operation in the same order:
+//!
+//! * per-user plans come from [`ProfileTables::best_partition`], whose
+//!   prefix tables are built with the same left fold as the incremental
+//!   accumulation inside [`traverse::best_partition`](super::traverse) —
+//!   identical values, not merely close ones;
+//! * group energy is accumulated user-by-user in member order — the same
+//!   summation order as `plans.iter().map(|u| u.energy).sum()`;
+//! * the consistency check (`b_max ≤ b`), the serialized-start check and
+//!   the `1e-15` strict-improvement tie-break over `b = |G|..1` are
+//!   byte-for-byte the reference's.
+//!
+//! Because no floating-point operation is reordered, the fast path is
+//! bitwise equal to the reference, and the DP over the resulting `G` table
+//! picks identical groupings (`tests/test_algo_fast.rs` asserts this
+//! across seeds, configs and the `par` feature).
+//!
+//! [`ProfileTables`] additionally densifies `F_n(b)`, the whole-task
+//! occupancy `Σ_n F_n(b)` (eq. 20), the `f_max` prefix latency/energy and
+//! the boundary upload sizes, so the DP transition loops and the online
+//! environment stop re-deriving them per call.
+
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::scenario::{Scenario, User};
+
+use super::ipssa::{self, GroupSolution};
+use super::traverse;
+use super::types::{Discipline, Plan, UserPlan};
+
+/// Dense profile/device tables for one [`SystemConfig`] and a maximum
+/// batch size `b_cap` (usually the scenario's `M`). Build once, share
+/// across every solver call on the same config — the online environment
+/// keeps one for its whole episode.
+#[derive(Debug, Clone)]
+pub struct ProfileTables {
+    cfg: Arc<SystemConfig>,
+    /// `f[(sub-1) * (b_cap+1) + b] = F_sub(b)`, `b = 0..=b_cap`.
+    f: Vec<f64>,
+    /// `occupancy[b] = Σ_n F_n(b)` (eq. 20), `b = 0..=b_cap`.
+    occupancy: Vec<f64>,
+    /// `prefix_t_fmax[p] = α Σ_{n≤p} F_n(1)` (eq. 22), `p = 0..=N`.
+    prefix_t_fmax: Vec<f64>,
+    /// `prefix_e_fmax[p] = Σ_{n≤p} e_n(f_max)` (eq. 21), `p = 0..=N`.
+    prefix_e_fmax: Vec<f64>,
+    /// `boundary_bits[p] = B_p`, `p = 0..=N`.
+    boundary_bits: Vec<f64>,
+    n: usize,
+    b_cap: usize,
+}
+
+impl ProfileTables {
+    /// Tabulate `cfg` up to batch size `b_cap`.
+    ///
+    /// Every entry is produced by the same fold the naive solvers use
+    /// (`BatchCurve::eval`, incremental prefix sums), so table lookups are
+    /// bitwise equal to the values they replace.
+    pub fn new(cfg: &Arc<SystemConfig>, b_cap: usize) -> ProfileTables {
+        let n = cfg.net.n();
+        let mut f = Vec::with_capacity(n * (b_cap + 1));
+        for sub in 1..=n {
+            for b in 0..=b_cap {
+                f.push(cfg.profile.f(sub, b));
+            }
+        }
+        let occupancy = (0..=b_cap).map(|b| cfg.profile.total(b)).collect();
+        let mut prefix_t_fmax = vec![0.0; n + 1];
+        let mut prefix_e_fmax = vec![0.0; n + 1];
+        for p in 1..=n {
+            prefix_t_fmax[p] =
+                prefix_t_fmax[p - 1] + cfg.device.local_latency_fmax(&cfg.profile, p);
+            prefix_e_fmax[p] =
+                prefix_e_fmax[p - 1] + cfg.device.local_energy_fmax(&cfg.profile, p);
+        }
+        let boundary_bits = (0..=n).map(|p| cfg.net.boundary_bits(p)).collect();
+        ProfileTables {
+            cfg: Arc::clone(cfg),
+            f,
+            occupancy,
+            prefix_t_fmax,
+            prefix_e_fmax,
+            boundary_bits,
+            n,
+            b_cap,
+        }
+    }
+
+    /// The config these tables were built from.
+    pub fn cfg(&self) -> &Arc<SystemConfig> {
+        &self.cfg
+    }
+
+    /// Number of sub-tasks `N`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Largest tabulated batch size.
+    pub fn b_cap(&self) -> usize {
+        self.b_cap
+    }
+
+    /// `F_n(b)` — table-backed [`LatencyProfile::f`](crate::dnn::LatencyProfile::f).
+    #[inline]
+    pub fn f(&self, sub: usize, b: usize) -> f64 {
+        debug_assert!((1..=self.n).contains(&sub), "sub-task index {sub}");
+        debug_assert!(b <= self.b_cap, "batch {b} beyond table cap {}", self.b_cap);
+        self.f[(sub - 1) * (self.b_cap + 1) + b]
+    }
+
+    /// `Σ_n F_n(b)` — table-backed [`LatencyProfile::total`](crate::dnn::LatencyProfile::total).
+    #[inline]
+    pub fn occupancy(&self, b: usize) -> f64 {
+        debug_assert!(b <= self.b_cap, "batch {b} beyond table cap {}", self.b_cap);
+        self.occupancy[b]
+    }
+
+    /// Eq.-17 batch starts into a caller-provided buffer (alloc-free
+    /// [`traverse::batch_starts`]): `s_N = l̃ - F_N(b)`,
+    /// `s_{n-1} = s_n - F_{n-1}(b)`.
+    pub fn batch_starts_into(&self, deadline: f64, b: usize, starts: &mut [f64]) {
+        debug_assert_eq!(starts.len(), self.n);
+        let mut t = deadline;
+        for sub in (1..=self.n).rev() {
+            t -= self.f(sub, b);
+            starts[sub - 1] = t;
+        }
+    }
+
+    /// Table-backed [`traverse::best_partition`]: identical candidate set,
+    /// identical arithmetic, with the `f_max` prefix aggregates read from
+    /// the precomputed arrays instead of re-accumulated per call.
+    pub fn best_partition(&self, user: &User, starts: &[f64], deadline: f64) -> Option<UserPlan> {
+        let n = self.n;
+        debug_assert_eq!(starts.len(), n);
+        let dev = &self.cfg.device;
+        let mut best: Option<UserPlan> = None;
+
+        for p in 0..=n {
+            let t_fmax = self.prefix_t_fmax[p];
+            let e_fmax = self.prefix_e_fmax[p];
+            let cand = if p == n {
+                let avail = deadline - user.arrival;
+                dev.frequency_for(t_fmax, avail).map(|phi| {
+                    let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                    let finish = user.arrival + run;
+                    UserPlan {
+                        partition: p,
+                        phi,
+                        energy: dev.energy_at(e_fmax, phi),
+                        local_finish: finish,
+                        upload_end: finish,
+                        finish,
+                    }
+                })
+            } else {
+                let upload_t = self.boundary_bits[p] / user.rate_up;
+                let avail = starts[p] - upload_t - user.arrival;
+                dev.frequency_for(t_fmax, avail).map(|phi| {
+                    let run = if t_fmax > 0.0 { t_fmax / phi } else { 0.0 };
+                    let local_finish = user.arrival + run;
+                    UserPlan {
+                        partition: p,
+                        phi,
+                        energy: dev.energy_at(e_fmax, phi) + upload_t * self.cfg.radio.tx_circuit_w,
+                        local_finish,
+                        upload_end: local_finish + upload_t,
+                        finish: deadline,
+                    }
+                })
+            };
+            if let Some(c) = cand {
+                let better = match &best {
+                    None => true,
+                    Some(b) => c.energy < b.energy - 1e-15,
+                };
+                if better {
+                    best = Some(c);
+                }
+            }
+        }
+        best
+    }
+
+    /// Energy of the forced full-local plan for one user under group
+    /// deadline `l̃` — the per-user term of
+    /// [`ipssa::all_local_fallback`], read off the prefix tables.
+    pub fn local_fallback_energy(&self, user: &User, deadline: f64) -> f64 {
+        let dev = &self.cfg.device;
+        let t_fmax = self.prefix_t_fmax[self.n];
+        let e_fmax = self.prefix_e_fmax[self.n];
+        let avail = (user.deadline.max(deadline) - user.arrival).max(t_fmax);
+        let phi = dev.frequency_for(t_fmax, avail).unwrap_or(1.0);
+        dev.energy_at(e_fmax, phi)
+    }
+}
+
+/// Per-assumption fold state for one `(anchor, b)` column: the collapsed
+/// memo entry described in the module docs.
+#[derive(Clone, Copy)]
+struct ColumnFold {
+    /// Every folded user had a feasible partition point.
+    feasible: bool,
+    /// Running `Σ energy` in member order.
+    energy: f64,
+    /// Users with `partition < N` (the realized `b_max`, Theorem 1.1).
+    offloaders: usize,
+    /// Minimum partition point — `starts[min_partition]` is the first
+    /// realized batch start.
+    min_partition: usize,
+}
+
+impl ColumnFold {
+    fn new() -> ColumnFold {
+        ColumnFold { feasible: true, energy: 0.0, offloaders: 0, min_partition: usize::MAX }
+    }
+
+    /// Fold one user's partition search into the column.
+    fn push(&mut self, tables: &ProfileTables, user: &User, starts: &[f64], deadline: f64) {
+        match tables.best_partition(user, starts, deadline) {
+            Some(up) => {
+                self.energy += up.energy;
+                if up.partition < tables.n() {
+                    self.offloaders += 1;
+                }
+                self.min_partition = self.min_partition.min(up.partition);
+            }
+            None => self.feasible = false,
+        }
+    }
+}
+
+/// Fill one row of OG's `G` table: `row[j] = G_{i,j}` for `j = i..M-1`,
+/// the IP-SSA energy of the standalone group `{i..=j}` under deadline
+/// `l_i`. Bitwise equal to
+/// `ipssa::solve_group(sorted, &(i..=j).collect::<Vec<_>>(), l[i], 0.0).energy`
+/// for every `j`, at one partition search per `(user, b)` instead of one
+/// per `(user, b, j)`.
+///
+/// Rows are independent — the `par` feature computes them on a rayon pool.
+pub fn group_energy_row(
+    tables: &ProfileTables,
+    sorted: &Scenario,
+    l: &[f64],
+    i: usize,
+    row: &mut [f64],
+) {
+    let m = sorted.m();
+    let n = tables.n();
+    debug_assert_eq!(row.len(), m);
+    debug_assert!(tables.b_cap() >= m - i, "tables tabulate fewer batches than the group needs");
+    let deadline = l[i];
+    let max_b = m - i;
+    // Eq.-17 schedules per assumption, flattened: column b occupies
+    // `starts[(b-1)*n..b*n]`.
+    let mut starts = vec![0.0f64; max_b * n];
+    let mut cols: Vec<ColumnFold> = Vec::with_capacity(max_b);
+    // All-local fallback energy is b-independent; folded alongside.
+    let mut fallback = 0.0f64;
+
+    for j in i..m {
+        let s = j - i + 1;
+        // Open assumption b = s: derive its schedule, fold users i..=j.
+        {
+            let col = &mut starts[(s - 1) * n..s * n];
+            tables.batch_starts_into(deadline, s, col);
+            let mut fold = ColumnFold::new();
+            for user in &sorted.users[i..=j] {
+                if !fold.feasible {
+                    break;
+                }
+                fold.push(tables, user, col, deadline);
+            }
+            cols.push(fold);
+        }
+        // Fold the new user j into every already-open assumption b < s.
+        for b in 1..s {
+            let fold = &mut cols[b - 1];
+            if fold.feasible {
+                fold.push(tables, &sorted.users[j], &starts[(b - 1) * n..b * n], deadline);
+            }
+        }
+        fallback += tables.local_fallback_energy(&sorted.users[j], deadline);
+
+        // Reference b-sweep (paper step 2): b = |G|..1, consistency
+        // b_max ≤ b, serialized-start gate, 1e-15 strict improvement.
+        let mut best: Option<f64> = None;
+        for b in (1..=s).rev() {
+            let fold = &cols[b - 1];
+            if !fold.feasible || fold.offloaders > b {
+                continue;
+            }
+            if fold.offloaders > 0 && starts[(b - 1) * n + fold.min_partition] < -1e-12 {
+                // First realized batch would start before t = 0
+                // (standalone groups serialize against `earliest = 0`).
+                continue;
+            }
+            if best.is_none_or(|e| fold.energy < e - 1e-15) {
+                best = Some(fold.energy);
+            }
+        }
+        row[j] = best.unwrap_or(fallback);
+    }
+}
+
+/// Context-backed [`ipssa::solve_group`]: identical semantics and bitwise
+/// identical output, with the batch-start and partition searches served
+/// from `tables`, scratch buffers reused across the `b` sweep, and batch
+/// assembly deferred to the winning assumption (the reference assembles on
+/// every improvement and discards all but the last).
+pub fn solve_group(
+    scenario: &Scenario,
+    tables: &ProfileTables,
+    members: &[usize],
+    deadline: f64,
+    earliest_start: f64,
+) -> GroupSolution {
+    debug_assert!(
+        Arc::ptr_eq(tables.cfg(), &scenario.cfg),
+        "tables built from a different SystemConfig"
+    );
+    let cfg = &scenario.cfg;
+    let n = tables.n();
+    let m = members.len();
+    assert!(m > 0, "empty group");
+    assert!(tables.b_cap() >= m, "tables tabulate fewer batches than the group size");
+
+    let mut starts = vec![0.0f64; n];
+    let mut cur: Vec<UserPlan> = Vec::with_capacity(m);
+    let mut winner: Vec<UserPlan> = Vec::new();
+    let mut best: Option<(usize, f64)> = None; // (assumed b, energy)
+
+    for b in (1..=m).rev() {
+        tables.batch_starts_into(deadline, b, &mut starts);
+        cur.clear();
+        let mut ok = true;
+        for &mi in members {
+            match tables.best_partition(&scenario.users[mi], &starts, deadline) {
+                Some(up) => cur.push(up),
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let b_max = cur.iter().filter(|u| u.partition < n).count();
+        if b_max > b {
+            continue;
+        }
+        if b_max > 0 {
+            let first_sub = cur.iter().map(|u| u.partition + 1).min().unwrap();
+            if starts[first_sub - 1] < earliest_start - 1e-12 {
+                continue;
+            }
+        }
+        let energy: f64 = cur.iter().map(|u| u.energy).sum();
+        if best.is_none_or(|(_, e)| energy < e - 1e-15) {
+            best = Some((b, energy));
+            std::mem::swap(&mut winner, &mut cur);
+        }
+    }
+
+    match best {
+        Some((b, energy)) => {
+            tables.batch_starts_into(deadline, b, &mut starts);
+            let batches = traverse::assemble_batches(cfg, &mut winner, members, &starts);
+            GroupSolution {
+                plan: Plan {
+                    users: winner,
+                    batches,
+                    groups: vec![members.to_vec()],
+                    discipline: Discipline::Batched,
+                    assumed_batch: b,
+                },
+                energy,
+            }
+        }
+        None => ipssa::all_local_fallback(scenario, members, deadline),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::util::rng::Rng;
+
+    fn mixed(m: usize, seed: u64) -> Scenario {
+        let cfg = SystemConfig::dssd3_default();
+        Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(seed))
+    }
+
+    #[test]
+    fn tables_match_profile_and_device() {
+        let cfg = SystemConfig::mobilenet_default();
+        let t = ProfileTables::new(&cfg, 12);
+        for sub in 1..=cfg.net.n() {
+            for b in 0..=12 {
+                assert_eq!(t.f(sub, b), cfg.profile.f(sub, b));
+            }
+        }
+        for b in 0..=12 {
+            assert_eq!(t.occupancy(b), cfg.profile.total(b));
+        }
+        for p in 0..=cfg.net.n() {
+            assert_eq!(t.boundary_bits[p], cfg.net.boundary_bits(p));
+        }
+    }
+
+    #[test]
+    fn batch_starts_into_matches_traverse() {
+        let cfg = SystemConfig::dssd3_default();
+        let t = ProfileTables::new(&cfg, 8);
+        let mut buf = vec![0.0; cfg.net.n()];
+        for b in 1..=8 {
+            t.batch_starts_into(0.25, b, &mut buf);
+            assert_eq!(buf, traverse::batch_starts(&cfg, 0.25, b));
+        }
+    }
+
+    #[test]
+    fn best_partition_matches_traverse_exactly() {
+        for seed in 0..10 {
+            let s = mixed(8, seed);
+            let t = ProfileTables::new(&s.cfg, 8);
+            for b in 1..=8 {
+                let starts = traverse::batch_starts(&s.cfg, 0.3, b);
+                for u in &s.users {
+                    let fast = t.best_partition(u, &starts, 0.3);
+                    let slow = traverse::best_partition(&s.cfg, u, &starts, 0.3).map(|c| c.plan);
+                    assert_eq!(fast, slow, "seed {seed} b {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_energy_row_matches_solve_group() {
+        for seed in 0..10 {
+            let (sorted, _) = mixed(9, 700 + seed).sorted_by_deadline();
+            let l: Vec<f64> = sorted.users.iter().map(|u| u.deadline).collect();
+            let t = ProfileTables::new(&sorted.cfg, sorted.m());
+            for i in 0..sorted.m() {
+                let mut row = vec![f64::INFINITY; sorted.m()];
+                group_energy_row(&t, &sorted, &l, i, &mut row);
+                for j in i..sorted.m() {
+                    let members: Vec<usize> = (i..=j).collect();
+                    let want = ipssa::solve_group(&sorted, &members, l[i], 0.0).energy;
+                    assert_eq!(row[j], want, "seed {seed} group ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_solve_group_matches_reference_plan() {
+        for seed in 0..10 {
+            let s = mixed(7, 900 + seed);
+            let t = ProfileTables::new(&s.cfg, s.m());
+            let members: Vec<usize> = (0..s.m()).collect();
+            for earliest in [0.0, 0.1] {
+                let fast = solve_group(&s, &t, &members, 0.4, earliest);
+                let slow = ipssa::solve_group(&s, &members, 0.4, earliest);
+                assert_eq!(fast.energy, slow.energy, "seed {seed}");
+                assert_eq!(fast.plan.users, slow.plan.users, "seed {seed}");
+                assert_eq!(fast.plan.batches, slow.plan.batches, "seed {seed}");
+                assert_eq!(fast.plan.assumed_batch, slow.plan.assumed_batch, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_energy_matches_all_local() {
+        // Deadline far below the full-local fmax latency forces the
+        // emergency path for every user.
+        let cfg = SystemConfig::mobilenet_default();
+        let s = Scenario::draw(&cfg, 5, &mut Rng::seed_from(3));
+        let t = ProfileTables::new(&cfg, 5);
+        let members: Vec<usize> = (0..5).collect();
+        let deadline = 1e-4;
+        let want = ipssa::all_local_fallback(&s, &members, deadline).energy;
+        let mut got = 0.0;
+        for &mi in &members {
+            got += t.local_fallback_energy(&s.users[mi], deadline);
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -46,7 +46,11 @@ pub fn check(scenario: &Scenario, plan: &Plan) -> Result<(), Violation> {
     for (ui, (user, up)) in scenario.users.iter().zip(&plan.users).enumerate() {
         // (14) latency constraint, against the user's own deadline.
         if up.finish > user.deadline + EPS {
-            return Err(Violation::Deadline { user: ui, finish: up.finish, deadline: user.deadline });
+            return Err(Violation::Deadline {
+                user: ui,
+                finish: up.finish,
+                deadline: user.deadline,
+            });
         }
         // (15) frequency bounds. Emergency plans may pin φ = 1.
         if !(cfg.device.f_min_ratio - EPS..=1.0 + EPS).contains(&up.phi) {

@@ -10,6 +10,7 @@
 
 use crate::scenario::Scenario;
 
+use super::ctx::{self, ProfileTables};
 use super::traverse;
 use super::types::{Discipline, Plan, SolveResult, Solver, UserPlan};
 
@@ -72,7 +73,7 @@ pub fn solve_group(
             }
         }
         let energy: f64 = plans.iter().map(|u| u.energy).sum();
-        if best.as_ref().map_or(true, |s| energy < s.energy - 1e-15) {
+        if best.as_ref().is_none_or(|s| energy < s.energy - 1e-15) {
             let mut plans = plans;
             let batches = traverse::assemble_batches(cfg, &mut plans, members, &starts);
             best = Some(GroupSolution {
@@ -130,8 +131,28 @@ pub fn all_local_fallback(scenario: &Scenario, members: &[usize], deadline: f64)
 
 /// IP-SSA over a whole scenario. The group deadline is the minimum user
 /// deadline (with equal deadlines — the intended IP-SSA setting — this is
-/// just `l`).
+/// just `l`). Context-backed (table lookups + scratch reuse, see
+/// [`ctx`]); bitwise equal to [`solve_reference`].
 pub fn solve(scenario: &Scenario) -> Plan {
+    let tables = ProfileTables::new(&scenario.cfg, scenario.m());
+    solve_with_tables(scenario, &tables)
+}
+
+/// [`solve`] against a caller-provided solve context (the online
+/// environment builds [`ProfileTables`] once per episode).
+pub fn solve_with_tables(scenario: &Scenario, tables: &ProfileTables) -> Plan {
+    let members: Vec<usize> = (0..scenario.m()).collect();
+    let deadline = scenario
+        .users
+        .iter()
+        .map(|u| u.deadline)
+        .fold(f64::INFINITY, f64::min);
+    ctx::solve_group(scenario, tables, &members, deadline, 0.0).plan
+}
+
+/// The original per-call implementation — kept as the fast path's
+/// equivalence oracle (`tests/test_algo_fast.rs`).
+pub fn solve_reference(scenario: &Scenario) -> Plan {
     let members: Vec<usize> = (0..scenario.m()).collect();
     let deadline = scenario
         .users
@@ -149,8 +170,8 @@ impl Solver for IpSsa {
         "IP-SSA"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
-        SolveResult { plan: solve(scenario), scenario: scenario.clone() }
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
+        SolveResult { plan: solve(scenario), scenario: std::borrow::Cow::Borrowed(scenario) }
     }
 }
 
@@ -218,6 +239,20 @@ mod tests {
         assert!(squeezed.energy >= free.energy - 1e-12);
         if let Some((first, _)) = squeezed.plan.busy_window() {
             assert!(first >= 0.249 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn fast_solve_matches_reference() {
+        for cfg in [SystemConfig::dssd3_default(), SystemConfig::mobilenet_default()] {
+            for seed in 0..8 {
+                let s = Scenario::draw(&cfg, 9, &mut Rng::seed_from(1000 + seed));
+                let fast = solve(&s);
+                let slow = solve_reference(&s);
+                assert_eq!(fast.users, slow.users, "{} seed {seed}", cfg.net.name);
+                assert_eq!(fast.batches, slow.batches, "{} seed {seed}", cfg.net.name);
+                assert_eq!(fast.assumed_batch, slow.assumed_batch);
+            }
         }
     }
 

@@ -9,9 +9,11 @@
 //! | LC / PS / FIFO / IP-SSA-NP baselines | [`baselines`] |
 //! | exhaustive optimality oracles | [`brute`] |
 //! | P1 constraint validator | [`feasibility`] |
+//! | shared solve context (fast OG/IP-SSA path) | [`ctx`] |
 
 pub mod baselines;
 pub mod brute;
+pub mod ctx;
 pub mod feasibility;
 pub mod ipssa;
 pub mod multigpu;
@@ -19,4 +21,5 @@ pub mod og;
 pub mod traverse;
 pub mod types;
 
+pub use ctx::ProfileTables;
 pub use types::{Batch, Discipline, Plan, SolveResult, Solver, UserPlan};

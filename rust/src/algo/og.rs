@@ -21,9 +21,21 @@
 //! deadlines never overlap). The printed variant is kept as
 //! [`dp_grouping_paper`] for comparison. Assembly still threads
 //! `earliest_start` as a defense-in-depth backstop.
+//!
+//! **Fast path** ([`solve`], [`dp_grouping`]): the `G` table is computed
+//! through the [`ctx`](super::ctx) solve context, which shares the
+//! per-(user, deadline-anchor, assumed-batch) partition searches across
+//! all groups of an anchor row — `O(M³N)` instead of the reference's
+//! `O(M⁴N)` — and the DP transition reads the whole-task occupancy
+//! `Σ_n F_n(b)` off a precomputed table. The original implementation is
+//! kept verbatim as [`solve_reference`] / [`dp_grouping_reference`]: the
+//! equivalence oracle (`tests/test_algo_fast.rs` asserts identical
+//! groupings and energies). With the off-by-default `par` feature the
+//! independent `G` rows are computed on a rayon pool.
 
 use crate::scenario::Scenario;
 
+use super::ctx::{self, ProfileTables};
 use super::ipssa;
 use super::types::{Discipline, Plan, SolveResult, Solver};
 
@@ -37,8 +49,29 @@ pub struct Grouping {
 }
 
 /// `G_{i,j}` table: IP-SSA energy for each contiguous group `{i..=j}` with
-/// deadline `l_i` (standalone). `O(M⁴N)` total — the dominant cost of OG.
-fn g_table(sorted: &Scenario, l: &[f64]) -> Vec<Vec<f64>> {
+/// deadline `l_i` (standalone), computed row-by-row through the solve
+/// context (`O(M³N)`; see [`ctx::group_energy_row`]). Rows are
+/// independent, so the `par` feature fans them out over rayon.
+fn g_table(sorted: &Scenario, l: &[f64], tables: &ProfileTables) -> Vec<Vec<f64>> {
+    let m = sorted.m();
+    let mut g = vec![vec![f64::INFINITY; m]; m];
+    #[cfg(feature = "par")]
+    {
+        use rayon::prelude::*;
+        g.par_iter_mut()
+            .enumerate()
+            .for_each(|(i, row)| ctx::group_energy_row(tables, sorted, l, i, row));
+    }
+    #[cfg(not(feature = "par"))]
+    for (i, row) in g.iter_mut().enumerate() {
+        ctx::group_energy_row(tables, sorted, l, i, row);
+    }
+    g
+}
+
+/// The naive `G` table: one from-scratch [`ipssa::solve_group`] per
+/// contiguous group, `O(M⁴N)` total. Kept as the fast path's oracle.
+fn g_table_reference(sorted: &Scenario, l: &[f64]) -> Vec<Vec<f64>> {
     let m = sorted.m();
     let mut g = vec![vec![f64::INFINITY; m]; m];
     for i in 0..m {
@@ -55,11 +88,42 @@ fn g_table(sorted: &Scenario, l: &[f64]) -> Vec<Vec<f64>> {
 /// ending at `i-1` starting at `i'` is feasible iff
 /// `l_{i'} + Σ_n F_n(j-i+1) ≤ l_i` (eq. 20 with the *next* group's size).
 pub fn dp_grouping(sorted: &Scenario) -> Grouping {
+    let tables = ProfileTables::new(&sorted.cfg, sorted.m());
+    dp_grouping_with_tables(sorted, &tables)
+}
+
+/// [`dp_grouping`] against a caller-provided solve context (so repeated
+/// calls on one config — the online environment, sweeps — build the
+/// tables once).
+pub fn dp_grouping_with_tables(sorted: &Scenario, tables: &ProfileTables) -> Grouping {
+    let m = sorted.m();
+    assert!(m > 0);
+    assert!(tables.b_cap() >= m, "tables tabulate fewer batches than M");
+    let l: Vec<f64> = sorted.users.iter().map(|u| u.deadline).collect();
+    let g = g_table(sorted, &l, tables);
+    dp_over(sorted, &l, &g, |b| tables.occupancy(b))
+}
+
+/// The original corrected-condition DP over the naive `G` table —
+/// byte-for-byte the pre-context implementation, kept as the oracle.
+pub fn dp_grouping_reference(sorted: &Scenario) -> Grouping {
     let m = sorted.m();
     assert!(m > 0);
     let l: Vec<f64> = sorted.users.iter().map(|u| u.deadline).collect();
-    let g = g_table(sorted, &l);
+    let g = g_table_reference(sorted, &l);
+    dp_over(sorted, &l, &g, |b| sorted.cfg.profile.total(b))
+}
 
+/// Shared corrected-condition DP body; `occupancy(b)` abstracts the
+/// `Σ_n F_n(b)` source (table lookup on the fast path, `profile.total`
+/// on the reference) — both produce identical values.
+fn dp_over(
+    sorted: &Scenario,
+    l: &[f64],
+    g: &[Vec<f64>],
+    occupancy: impl Fn(usize) -> f64,
+) -> Grouping {
+    let m = sorted.m();
     let mut dp = vec![vec![f64::INFINITY; m]; m];
     // parent[i][j] = first index of the previous group, if any.
     let mut parent = vec![vec![None::<usize>; m]; m];
@@ -71,12 +135,12 @@ pub fn dp_grouping(sorted: &Scenario) -> Grouping {
             }
             // Previous group ends at i-1, starts at i'. Feasible i' must
             // satisfy l_{i'} ≤ l_i - total(next group size).
-            let bound = l[i] - sorted.cfg.profile.total(j - i + 1) + 1e-12;
+            let bound = l[i] - occupancy(j - i + 1) + 1e-12;
             let mut best: Option<(f64, usize)> = None;
             for ip in 0..i {
                 if l[ip] <= bound && dp[ip][i - 1].is_finite() {
                     let cand = dp[ip][i - 1];
-                    if best.map_or(true, |(b, _)| cand < b) {
+                    if best.is_none_or(|(b, _)| cand < b) {
                         best = Some((cand, ip));
                     }
                 }
@@ -113,12 +177,14 @@ pub fn dp_grouping(sorted: &Scenario) -> Grouping {
 
 /// The DP exactly as printed in the paper's Alg. 3 (step-6 condition uses
 /// the previous group's size). Kept for fidelity comparisons; its estimate
-/// can be optimistic (see module docs).
+/// can be optimistic (see module docs). Uses the fast `G` table — the
+/// table values are the same, only the transition condition differs.
 pub fn dp_grouping_paper(sorted: &Scenario) -> Grouping {
     let m = sorted.m();
     assert!(m > 0);
+    let tables = ProfileTables::new(&sorted.cfg, m);
     let l: Vec<f64> = sorted.users.iter().map(|u| u.deadline).collect();
-    let g = g_table(sorted, &l);
+    let g = g_table(sorted, &l, &tables);
 
     let mut s = vec![vec![f64::INFINITY; m]; m];
     let mut parent: Vec<Option<usize>> = vec![None; m];
@@ -136,10 +202,10 @@ pub fn dp_grouping_paper(sorted: &Scenario) -> Grouping {
                 if !s[ip][i].is_finite() {
                     continue;
                 }
-                let occupancy = sorted.cfg.profile.total(i - ip + 1);
+                let occupancy = tables.occupancy(i - ip + 1);
                 if l[ip] + occupancy <= l[i + 1] + 1e-12 {
                     let cand = s[ip][i];
-                    if best.map_or(true, |(b, _)| cand < b) {
+                    if best.is_none_or(|(b, _)| cand < b) {
                         best = Some((cand, ip));
                     }
                 }
@@ -170,13 +236,34 @@ pub fn dp_grouping_paper(sorted: &Scenario) -> Grouping {
 }
 
 /// Full OG: sort by deadline, DP, then assemble groups left-to-right with
-/// serialized edge occupancy.
+/// serialized edge occupancy. Context-backed (`O(M³N)`); bitwise equal to
+/// [`solve_reference`].
 pub fn solve(scenario: &Scenario) -> Plan {
+    let tables = ProfileTables::new(&scenario.cfg, scenario.m());
+    solve_with_tables(scenario, &tables)
+}
+
+/// [`solve`] against a caller-provided solve context. The online
+/// environment and sweep loops build [`ProfileTables`] once per config
+/// and amortize it over every scheduler call.
+pub fn solve_with_tables(scenario: &Scenario, tables: &ProfileTables) -> Plan {
     let m = scenario.m();
     assert!(m > 0, "OG over empty scenario");
     let (sorted, order) = scenario.sorted_by_deadline();
-    let grouping = dp_grouping(&sorted);
+    let grouping = dp_grouping_with_tables(&sorted, tables);
+    assemble(scenario, tables, &sorted, &order, &grouping)
+}
 
+/// Assemble the grouped plan: one context-backed IP-SSA solve per selected
+/// group, serialized through `earliest_start`.
+fn assemble(
+    scenario: &Scenario,
+    tables: &ProfileTables,
+    sorted: &Scenario,
+    order: &[usize],
+    grouping: &Grouping,
+) -> Plan {
+    let m = scenario.m();
     let mut users = vec![None; m];
     let mut batches = Vec::new();
     let mut groups_orig = Vec::new();
@@ -184,6 +271,43 @@ pub fn solve(scenario: &Scenario) -> Plan {
     let mut assumed = 0usize;
     for &(a, b) in &grouping.groups {
         // Map sorted indices back to scenario indices.
+        let members: Vec<usize> = (a..=b).map(|k| order[k]).collect();
+        let deadline = sorted.users[a].deadline;
+        let sol = ctx::solve_group(scenario, tables, &members, deadline, earliest);
+        if let Some((_, end)) = sol.plan.busy_window() {
+            earliest = earliest.max(end);
+        }
+        assumed = assumed.max(sol.plan.assumed_batch);
+        for (slot, up) in members.iter().zip(sol.plan.users.into_iter()) {
+            users[*slot] = Some(up);
+        }
+        batches.extend(sol.plan.batches);
+        groups_orig.push(members);
+    }
+    batches.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+    Plan {
+        users: users.into_iter().map(Option::unwrap).collect(),
+        batches,
+        groups: groups_orig,
+        discipline: Discipline::Batched,
+        assumed_batch: assumed,
+    }
+}
+
+/// The original OG implementation — naive `G` table, from-scratch group
+/// assembly. The fast path's equivalence oracle.
+pub fn solve_reference(scenario: &Scenario) -> Plan {
+    let m = scenario.m();
+    assert!(m > 0, "OG over empty scenario");
+    let (sorted, order) = scenario.sorted_by_deadline();
+    let grouping = dp_grouping_reference(&sorted);
+
+    let mut users = vec![None; m];
+    let mut batches = Vec::new();
+    let mut groups_orig = Vec::new();
+    let mut earliest = 0.0f64;
+    let mut assumed = 0usize;
+    for &(a, b) in &grouping.groups {
         let members: Vec<usize> = (a..=b).map(|k| order[k]).collect();
         let deadline = sorted.users[a].deadline;
         let sol = ipssa::solve_group(scenario, &members, deadline, earliest);
@@ -215,8 +339,8 @@ impl Solver for Og {
         "OG"
     }
 
-    fn solve(&self, scenario: &Scenario) -> SolveResult {
-        SolveResult { plan: solve(scenario), scenario: scenario.clone() }
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a> {
+        SolveResult { plan: solve(scenario), scenario: std::borrow::Cow::Borrowed(scenario) }
     }
 }
 
@@ -347,6 +471,29 @@ mod tests {
                 expect = b + 1;
             }
             assert_eq!(expect, 8);
+        }
+    }
+
+    #[test]
+    fn fast_dp_matches_reference_dp() {
+        for seed in 0..8 {
+            let (sorted, _) = mixed(9, 600 + seed).sorted_by_deadline();
+            let fast = dp_grouping(&sorted);
+            let slow = dp_grouping_reference(&sorted);
+            assert_eq!(fast.groups, slow.groups, "seed {seed}");
+            assert_eq!(fast.dp_energy, slow.dp_energy, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn fast_solve_matches_reference_solve() {
+        for seed in 0..8 {
+            let s = mixed(9, 800 + seed);
+            let fast = solve(&s);
+            let slow = solve_reference(&s);
+            assert_eq!(fast.groups, slow.groups, "seed {seed}");
+            assert_eq!(fast.users, slow.users, "seed {seed}");
+            assert_eq!(fast.batches, slow.batches, "seed {seed}");
         }
     }
 }

@@ -23,14 +23,22 @@ use super::types::{Batch, Discipline, Plan, UserPlan};
 /// `starts[n-1]` is `s_n`. Values may be negative when `Σ F_n(b) > l̃`;
 /// the per-user traverse then finds those upload deadlines unreachable.
 pub fn batch_starts(cfg: &SystemConfig, deadline: f64, b: usize) -> Vec<f64> {
+    let mut starts = vec![0.0; cfg.net.n()];
+    batch_starts_into(cfg, deadline, b, &mut starts);
+    starts
+}
+
+/// [`batch_starts`] into a caller-provided buffer — the solve context
+/// ([`ctx`](super::ctx)) reuses one buffer across its whole `b` sweep
+/// instead of allocating per assumption.
+pub fn batch_starts_into(cfg: &SystemConfig, deadline: f64, b: usize, starts: &mut [f64]) {
     let n = cfg.net.n();
-    let mut starts = vec![0.0; n];
+    debug_assert_eq!(starts.len(), n);
     let mut t = deadline;
     for sub in (1..=n).rev() {
         t -= cfg.profile.f(sub, b);
         starts[sub - 1] = t;
     }
-    starts
 }
 
 /// Outcome of the per-user traverse for one user.
@@ -45,7 +53,12 @@ pub struct Choice {
 /// `user.arrival` is the footnote-3 arrival offset `t_{m,0}`.
 /// Returns `None` when no partition point is feasible (can only happen when
 /// `l̃ - arrival < α Σ F_n(1)`, i.e. even full-local at `f_max` misses).
-pub fn best_partition(cfg: &SystemConfig, user: &User, starts: &[f64], deadline: f64) -> Option<Choice> {
+pub fn best_partition(
+    cfg: &SystemConfig,
+    user: &User,
+    starts: &[f64],
+    deadline: f64,
+) -> Option<Choice> {
     let n = cfg.net.n();
     debug_assert_eq!(starts.len(), n);
     let dev = &cfg.device;

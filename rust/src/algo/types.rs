@@ -6,6 +6,8 @@
 //! description of `x_{m,n,k}`: sub-tasks `1..=p` run locally, `p+1..=N` are
 //! offloaded; the batch for sub-task `n` contains every user with `p < n`.
 
+use std::borrow::Cow;
+
 use crate::scenario::Scenario;
 
 /// One user's offloading decision and realized timeline.
@@ -116,22 +118,27 @@ impl Plan {
 }
 
 /// Solver result: the plan plus the (possibly transformed) scenario it is a
-/// plan *for* — IP-SSA-NP plans against the unpartitioned model view.
-pub struct SolveResult {
+/// plan *for*. Most solvers plan against the input scenario and borrow it
+/// (`Cow::Borrowed` — no `M`-sized clone on the benchmarking path);
+/// IP-SSA-NP plans against the unpartitioned model view and owns it.
+pub struct SolveResult<'a> {
     pub plan: Plan,
-    pub scenario: Scenario,
+    pub scenario: Cow<'a, Scenario>,
 }
 
-impl SolveResult {
+impl SolveResult<'_> {
     pub fn per_user_energy(&self) -> Vec<f64> {
         self.plan.users.iter().map(|u| u.energy).collect()
     }
 }
 
 /// Common interface for every offline algorithm and baseline.
-pub trait Solver {
+///
+/// `Send + Sync` so solver suites can be shared across the `par` feature's
+/// rayon sweeps — every implementation is a stateless unit struct.
+pub trait Solver: Send + Sync {
     fn name(&self) -> &'static str;
-    fn solve(&self, scenario: &Scenario) -> SolveResult;
+    fn solve<'a>(&self, scenario: &'a Scenario) -> SolveResult<'a>;
 }
 
 #[cfg(test)]
@@ -143,7 +150,14 @@ mod tests {
     }
 
     fn up(e: f64) -> UserPlan {
-        UserPlan { partition: 0, phi: 0.1, energy: e, local_finish: 0.0, upload_end: 0.0, finish: 0.0 }
+        UserPlan {
+            partition: 0,
+            phi: 0.1,
+            energy: e,
+            local_finish: 0.0,
+            upload_end: 0.0,
+            finish: 0.0,
+        }
     }
 
     #[test]
@@ -159,7 +173,10 @@ mod tests {
         let b = Batch { sub: 2, start: 1.0, duration: 0.5, members: vec![0, 3] };
         assert_eq!(b.end(), 1.5);
         assert_eq!(b.size(), 2);
-        let p = plan_with(vec![], vec![b.clone(), Batch { sub: 2, start: 2.0, duration: 0.1, members: vec![1] }]);
+        let p = plan_with(
+            vec![],
+            vec![b.clone(), Batch { sub: 2, start: 2.0, duration: 0.1, members: vec![1] }],
+        );
         assert_eq!(p.batch_size_of_sub(2), 3);
         assert_eq!(p.batch_size_of_sub(1), 0);
         let (s, e) = p.busy_window().unwrap();

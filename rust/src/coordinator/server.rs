@@ -2,11 +2,14 @@
 //! discrete-event queue and run the *real* batched sub-task inference via
 //! PJRT.
 //!
-//! The offline solvers decide *when* each batch starts and who is in it;
-//! this module is the part that actually computes: local prefixes run
-//! per-user (the device side), offloaded suffixes run as aggregated batches
-//! (the GPU side). Output tensors are returned per user so the coordinator
-//! can hand results back to requests.
+//! The offline solvers decide *when* each batch starts and who is in it —
+//! on the serving path these are the context-backed fast solvers
+//! ([`algo::ctx`](crate::algo::ctx)), with the per-episode
+//! [`ProfileTables`](crate::algo::ProfileTables) owned by the online
+//! environment. This module is the part that actually computes: local
+//! prefixes run per-user (the device side), offloaded suffixes run as
+//! aggregated batches (the GPU side). Output tensors are returned per user
+//! so the coordinator can hand results back to requests.
 
 use std::collections::HashMap;
 

@@ -45,7 +45,9 @@ pub fn run(p: &Params) -> Result<()> {
         p.m, p.draws
     ))
     .header(&["policy", "G=1", "G=2", "G=3", "G=4"]);
-    for (name, assign) in [("round-robin", Assign::RoundRobin), ("greedy-energy", Assign::GreedyEnergy)] {
+    for (name, assign) in
+        [("round-robin", Assign::RoundRobin), ("greedy-energy", Assign::GreedyEnergy)]
+    {
         let mut row = Vec::new();
         for &g in &gpu_counts {
             let mut acc = Accumulator::new();

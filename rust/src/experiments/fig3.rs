@@ -15,7 +15,13 @@ use crate::util::table::{line_chart, Table};
 
 use super::report::Report;
 
-fn profile_tables(rep: &mut Report, tag: &str, profile: &LatencyProfile, names: &[String], batches: &[usize]) {
+fn profile_tables(
+    rep: &mut Report,
+    tag: &str,
+    profile: &LatencyProfile,
+    names: &[String],
+    batches: &[usize],
+) {
     let mut header: Vec<String> = vec!["sub-task".into()];
     header.extend(batches.iter().map(|b| format!("b={b}")));
     let mut t = Table::new(&format!("Fig.3 [{tag}] F_n(b) (ms)"))

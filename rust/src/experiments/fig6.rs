@@ -51,8 +51,9 @@ pub fn run(p: &Params) -> Result<()> {
 
     let mut header: Vec<String> = vec!["variant".into()];
     header.extend(p.m_list.iter().map(|m| format!("M={m}")));
-    let mut t = Table::new(&format!("Fig.6(a) 3dssd IP-SSA energy/user (J) vs M, {} draws", p.draws))
-        .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    let mut t =
+        Table::new(&format!("Fig.6(a) 3dssd IP-SSA energy/user (J) vs M, {} draws", p.draws))
+            .header(&header.iter().map(String::as_str).collect::<Vec<_>>());
     for ((name, _), row) in variants.iter().zip(&grid) {
         t.row_f64(name, row, 4);
     }

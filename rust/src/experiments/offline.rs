@@ -10,6 +10,22 @@ use crate::scenario::Scenario;
 use crate::util::rng::Rng;
 use crate::util::stats::Accumulator;
 
+/// Run the per-draw closure for `draws` Monte-Carlo draws, in parallel
+/// under the `par` feature. Results come back in draw order either way, so
+/// the downstream accumulator folds are bitwise identical serial vs
+/// parallel (each draw seeds its own [`Rng`]).
+pub(crate) fn map_draws<T: Send>(draws: usize, f: impl Fn(usize) -> T + Send + Sync) -> Vec<T> {
+    #[cfg(feature = "par")]
+    {
+        use rayon::prelude::*;
+        (0..draws).into_par_iter().map(f).collect()
+    }
+    #[cfg(not(feature = "par"))]
+    {
+        (0..draws).map(f).collect()
+    }
+}
+
 /// Result grid: `energy[solver][m_index]` = mean energy per user (J).
 pub struct Sweep {
     pub solver_names: Vec<&'static str>,
@@ -33,12 +49,15 @@ pub fn sweep_users(
 
     for (mi, &m) in m_list.iter().enumerate() {
         let mut accs: Vec<Accumulator> = (0..solvers.len()).map(|_| Accumulator::new()).collect();
-        for d in 0..draws {
+        let per_draw: Vec<Vec<f64>> = map_draws(draws, |d| {
             // Common random numbers: same channel draw for every solver.
             let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
             let scenario = Scenario::draw(cfg, m, &mut rng);
-            for (si, solver) in solvers.iter().enumerate() {
-                accs[si].push(solver.solve(&scenario).plan.mean_energy());
+            solvers.iter().map(|solver| solver.solve(&scenario).plan.mean_energy()).collect()
+        });
+        for energies in per_draw {
+            for (si, e) in energies.into_iter().enumerate() {
+                accs[si].push(e);
             }
         }
         for (si, acc) in accs.iter().enumerate() {
@@ -62,10 +81,13 @@ pub fn sweep_variants(
     for (vi, (_, cfg)) in variants.iter().enumerate() {
         for (mi, &m) in m_list.iter().enumerate() {
             let mut acc = Accumulator::new();
-            for d in 0..draws {
+            let per_draw = map_draws(draws, |d| {
                 let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
                 let scenario = Scenario::draw(cfg, m, &mut rng);
-                acc.push(solver.solve(&scenario).plan.mean_energy());
+                solver.solve(&scenario).plan.mean_energy()
+            });
+            for e in per_draw {
+                acc.push(e);
             }
             out[vi][mi] = acc.mean();
         }
@@ -82,10 +104,13 @@ pub fn pooled_user_energies(
     seed: u64,
 ) -> Vec<f64> {
     let mut out = Vec::with_capacity(m * draws);
-    for d in 0..draws {
+    let per_draw = map_draws(draws, |d| {
         let mut rng = Rng::seed_from(seed ^ (d as u64) << 20 | m as u64);
         let scenario = Scenario::draw(cfg, m, &mut rng);
-        out.extend(solver.solve(&scenario).per_user_energy());
+        solver.solve(&scenario).per_user_energy()
+    });
+    for xs in per_draw {
+        out.extend(xs);
     }
     out
 }

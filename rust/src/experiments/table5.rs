@@ -63,7 +63,11 @@ fn eval_policy(
         ddpg_ms: f64::NAN,
         alg_ms: env.stats.mean_latency_ms(),
         tasks_per_call: env.stats.mean_tasks(),
-        tasks_per_group: if alg == SchedulerAlg::Og { env.stats.mean_tasks_per_group() } else { f64::NAN },
+        tasks_per_group: if alg == SchedulerAlg::Og {
+            env.stats.mean_tasks_per_group()
+        } else {
+            f64::NAN
+        },
     }
 }
 

@@ -76,7 +76,8 @@ fn cmd_profile(argv: &[String]) -> Result<()> {
     let root = args.str("artifacts").map(Into::into).unwrap_or_else(default_artifacts_root);
     let rt = Runtime::open(&root)?;
     for net in ["mobilenet_v2", "dssd3"] {
-        let settings = profiler::ProfileSettings { reps: args.usize("reps")?, ..Default::default() };
+        let settings =
+            profiler::ProfileSettings { reps: args.usize("reps")?, ..Default::default() };
         let (profile, _raw) = profiler::profile_net(&rt, net, &settings)?;
         let mut t = Table::new(&format!("measured F_n(b) — {net} (ms)"))
             .header(&["sub-task", "b=1", "b=2", "b=4", "b=8", "b=16"]);
@@ -144,8 +145,15 @@ fn cmd_solve(argv: &[String]) -> Result<()> {
         took,
         r.plan.assumed_batch
     );
-    let mut t = Table::new("per-user plan")
-        .header(&["user", "rate_up (Mbps)", "deadline (ms)", "partition", "phi", "energy (J)", "finish (ms)"]);
+    let mut t = Table::new("per-user plan").header(&[
+        "user",
+        "rate_up (Mbps)",
+        "deadline (ms)",
+        "partition",
+        "phi",
+        "energy (J)",
+        "finish (ms)",
+    ]);
     for (i, (u, p)) in r.scenario.users.iter().zip(&r.plan.users).enumerate() {
         t.row(vec![
             format!("{i}"),

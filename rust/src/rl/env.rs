@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use crate::algo::{ipssa, og};
+use crate::algo::{ipssa, og, ProfileTables};
 use crate::config::SystemConfig;
 use crate::scenario::{ArrivalProcess, Scenario, User};
 use crate::util::rng::Rng;
@@ -132,6 +132,9 @@ pub struct OnlineEnv {
     // Cached model constants.
     lcp_fmax: f64,
     e_fmax: f64,
+    /// Shared solve context: profile/device tables built once per episode
+    /// and reused by every scheduler call (`algo::ctx`).
+    tables: ProfileTables,
 }
 
 impl OnlineEnv {
@@ -153,6 +156,7 @@ impl OnlineEnv {
         let n = cfg.net.n();
         let lcp_fmax = cfg.device.prefix_latency_fmax(&cfg.profile, n);
         let e_fmax = cfg.device.prefix_energy_fmax(&cfg.profile, n);
+        let tables = ProfileTables::new(cfg, m);
         OnlineEnv {
             cfg: Arc::clone(cfg),
             users,
@@ -171,6 +175,7 @@ impl OnlineEnv {
             step_events: Vec::new(),
             lcp_fmax,
             e_fmax,
+            tables,
         }
     }
 
@@ -293,8 +298,8 @@ impl OnlineEnv {
         let scenario = Scenario { cfg: Arc::clone(&self.cfg), users };
         let t0 = std::time::Instant::now();
         let plan = match self.alg {
-            SchedulerAlg::Og => og::solve(&scenario),
-            SchedulerAlg::IpSsa => ipssa::solve(&scenario),
+            SchedulerAlg::Og => og::solve_with_tables(&scenario, &self.tables),
+            SchedulerAlg::IpSsa => ipssa::solve_with_tables(&scenario, &self.tables),
         };
         let elapsed = t0.elapsed().as_secs_f64();
 

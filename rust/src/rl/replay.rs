@@ -56,7 +56,13 @@ mod tests {
     use super::*;
 
     fn t(r: f64) -> Transition {
-        Transition { state: vec![r], action: vec![0.0], reward: r, next_state: vec![r], done: false }
+        Transition {
+            state: vec![r],
+            action: vec![0.0],
+            reward: r,
+            next_state: vec![r],
+            done: false,
+        }
     }
 
     #[test]

@@ -36,7 +36,13 @@ impl Scenario {
         let users = (0..m)
             .map(|_| {
                 let (d, up, dn) = cfg.radio.draw_user(rng);
-                User { distance_m: d, rate_up: up, rate_dn: dn, deadline: cfg.deadline_s, arrival: 0.0 }
+                User {
+                    distance_m: d,
+                    rate_up: up,
+                    rate_dn: dn,
+                    deadline: cfg.deadline_s,
+                    arrival: 0.0,
+                }
             })
             .collect();
         Scenario { cfg: Arc::clone(cfg), users }

@@ -49,7 +49,12 @@ impl Cli {
     }
 
     /// Declare `--name <value>` with an optional default.
-    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
         self.opts.push(OptSpec { name, help, default, is_switch: false });
         self
     }
@@ -67,7 +72,8 @@ impl Cli {
     }
 
     pub fn usage(&self) -> String {
-        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [options]", self.program, self.about, self.program);
+        let mut s =
+            format!("{} — {}\n\nUSAGE:\n  {} [options]", self.program, self.about, self.program);
         for (p, _) in &self.positional {
             s.push_str(&format!(" <{p}>"));
         }

@@ -95,7 +95,11 @@ impl Table {
         };
         let mut out = String::new();
         if !self.header.is_empty() {
-            let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+            let _ = writeln!(
+                out,
+                "{}",
+                self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(",")
+            );
         }
         for row in &self.rows {
             let _ = writeln!(out, "{}", row.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
@@ -118,7 +122,12 @@ pub fn format_sig(x: f64, prec: usize) -> String {
 }
 
 /// Multi-series unicode line chart (rows = value buckets, cols = x points).
-pub fn line_chart(title: &str, x_labels: &[String], series: &[(&str, Vec<f64>)], height: usize) -> String {
+pub fn line_chart(
+    title: &str,
+    x_labels: &[String],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
     let glyphs = ['o', '*', '+', 'x', '#', '@', '%', '&'];
     let mut lo = f64::INFINITY;
     let mut hi = f64::NEG_INFINITY;

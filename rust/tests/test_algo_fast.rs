@@ -1,0 +1,159 @@
+//! Equivalence property suite for the solver fast path (`algo::ctx`).
+//!
+//! The context-backed OG and IP-SSA must match the naive reference
+//! solvers *exactly*: identical groupings and per-user decisions, total
+//! energy within 1e-9 (the fold orders are identical, so in practice the
+//! energies are bitwise equal — the tolerance only guards against future
+//! refactors). Runs ≥20 mixed-deadline seeds per config family, both
+//! workload configs, equal-deadline draws, and pathologically tight
+//! deadlines that force the all-local fallback. Compiled with
+//! `--features par` the same assertions exercise the rayon-parallel
+//! G-table rows (`par_rows_match_reference` marks the leg explicitly).
+
+use std::sync::Arc;
+
+use batchedge::algo::{feasibility, ipssa, og, ProfileTables};
+use batchedge::config::SystemConfig;
+use batchedge::scenario::Scenario;
+use batchedge::util::rng::Rng;
+
+const SEEDS: u64 = 24;
+
+/// The two Table-II configs with their OG mixed-deadline families.
+fn families() -> Vec<(Arc<SystemConfig>, f64, f64)> {
+    vec![
+        (SystemConfig::dssd3_default(), 0.25, 1.0),
+        (SystemConfig::mobilenet_default(), 0.05, 0.2),
+    ]
+}
+
+fn assert_plans_match(fast: &batchedge::algo::Plan, slow: &batchedge::algo::Plan, what: &str) {
+    assert_eq!(fast.groups, slow.groups, "{what}: groupings differ");
+    assert_eq!(fast.users.len(), slow.users.len(), "{what}: arity");
+    for (i, (f, s)) in fast.users.iter().zip(&slow.users).enumerate() {
+        assert_eq!(f.partition, s.partition, "{what}: user {i} partition");
+        assert!(
+            (f.energy - s.energy).abs() <= 1e-9,
+            "{what}: user {i} energy {} vs {}",
+            f.energy,
+            s.energy
+        );
+    }
+    assert!(
+        (fast.total_energy() - slow.total_energy()).abs() <= 1e-9,
+        "{what}: total energy {} vs {}",
+        fast.total_energy(),
+        slow.total_energy()
+    );
+    assert_eq!(fast.batches.len(), slow.batches.len(), "{what}: batch count");
+    for (f, s) in fast.batches.iter().zip(&slow.batches) {
+        assert_eq!(f.sub, s.sub, "{what}: batch sub-task");
+        assert_eq!(f.members, s.members, "{what}: batch members");
+        assert!((f.start - s.start).abs() <= 1e-12, "{what}: batch start");
+    }
+}
+
+#[test]
+fn og_fast_matches_reference_across_seeds_and_configs() {
+    for (cfg, lo, hi) in families() {
+        for seed in 0..SEEDS {
+            let m = 1 + (seed as usize % 11);
+            let s = Scenario::draw_mixed_deadlines(&cfg, m, lo, hi, &mut Rng::seed_from(seed));
+            let fast = og::solve(&s);
+            let slow = og::solve_reference(&s);
+            assert_plans_match(&fast, &slow, &format!("OG {} seed {seed} M={m}", cfg.net.name));
+            feasibility::check(&s, &fast)
+                .unwrap_or_else(|v| panic!("{} seed {seed}: infeasible: {v}", cfg.net.name));
+        }
+    }
+}
+
+#[test]
+fn og_dp_fast_matches_reference_dp() {
+    for (cfg, lo, hi) in families() {
+        for seed in 0..SEEDS {
+            let m = 2 + (seed as usize % 9);
+            let s = Scenario::draw_mixed_deadlines(&cfg, m, lo, hi, &mut Rng::seed_from(77 + seed));
+            let (sorted, _) = s.sorted_by_deadline();
+            let fast = og::dp_grouping(&sorted);
+            let slow = og::dp_grouping_reference(&sorted);
+            assert_eq!(fast.groups, slow.groups, "{} seed {seed}", cfg.net.name);
+            assert!(
+                (fast.dp_energy - slow.dp_energy).abs() <= 1e-9,
+                "{} seed {seed}: dp energy {} vs {}",
+                cfg.net.name,
+                fast.dp_energy,
+                slow.dp_energy
+            );
+        }
+    }
+}
+
+#[test]
+fn ipssa_fast_matches_reference_equal_deadlines() {
+    for (cfg, _, _) in families() {
+        for seed in 0..SEEDS {
+            let m = 1 + (seed as usize % 12);
+            let s = Scenario::draw(&cfg, m, &mut Rng::seed_from(300 + seed));
+            let fast = ipssa::solve(&s);
+            let slow = ipssa::solve_reference(&s);
+            assert_plans_match(&fast, &slow, &format!("IP-SSA {} seed {seed}", cfg.net.name));
+        }
+    }
+}
+
+#[test]
+fn tight_deadlines_hit_identical_fallbacks() {
+    // Deadlines far below the full-local fmax latency force the emergency
+    // all-local path through both implementations.
+    for (cfg, lo, _) in families() {
+        for seed in 0..SEEDS {
+            let m = 2 + (seed as usize % 6);
+            let (tight_lo, tight_hi) = (lo * 0.02, lo * 0.3);
+            let s = Scenario::draw_mixed_deadlines(
+                &cfg,
+                m,
+                tight_lo,
+                tight_hi,
+                &mut Rng::seed_from(500 + seed),
+            );
+            let fast = og::solve(&s);
+            let slow = og::solve_reference(&s);
+            assert_plans_match(&fast, &slow, &format!("tight {} seed {seed}", cfg.net.name));
+        }
+    }
+}
+
+#[test]
+fn shared_tables_match_per_call_tables() {
+    // The online environment reuses one ProfileTables across scheduler
+    // calls with varying member subsets and deadlines — must equal
+    // building fresh tables per call.
+    let cfg = SystemConfig::dssd3_default();
+    let tables = ProfileTables::new(&cfg, 12);
+    for seed in 0..SEEDS {
+        let m = 1 + (seed as usize % 12);
+        let s = Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(900 + seed));
+        let shared = og::solve_with_tables(&s, &tables);
+        let fresh = og::solve(&s);
+        assert_plans_match(&shared, &fresh, &format!("shared-tables seed {seed}"));
+        let shared_ip = ipssa::solve_with_tables(&s, &tables);
+        let fresh_ip = ipssa::solve(&s);
+        assert_plans_match(&shared_ip, &fresh_ip, &format!("shared-tables ipssa seed {seed}"));
+    }
+}
+
+/// Marker leg for the `par` feature: the same equivalence holds when the
+/// G-table rows are computed on the rayon pool (rows are independent and
+/// written to disjoint slots, so parallelism cannot reorder any float op).
+#[cfg(feature = "par")]
+#[test]
+fn par_rows_match_reference() {
+    let cfg = SystemConfig::dssd3_default();
+    for seed in 0..8 {
+        let s = Scenario::draw_mixed_deadlines(&cfg, 10, 0.25, 1.0, &mut Rng::seed_from(seed));
+        let fast = og::solve(&s);
+        let slow = og::solve_reference(&s);
+        assert_plans_match(&fast, &slow, &format!("par seed {seed}"));
+    }
+}
