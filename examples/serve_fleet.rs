@@ -1,26 +1,29 @@
 //! Fleet-scale serving demo: 100k users sharded across 8 batch-capable
-//! edge servers behind each dispatch policy.
+//! edge servers behind each dispatch policy, then a heterogeneous tiered
+//! pool (1× fast GPU + memory-capped slow GPUs).
 //!
 //! The single-coordinator examples (`serve_online`) drive one edge server
 //! for a handful of users; this one exercises the `fleet::` layer — a
 //! discrete-event engine where a population-scale Poisson request stream
 //! is load-balanced across server shards, each running a dynamic batch
-//! queue over the paper's batch occupancy model `Σ_n F_n(b)`. The fleet
-//! is capacity-skewed (two of the eight servers at quarter speed), which
-//! is where the dispatch policy starts to matter: round-robin drowns the
-//! slow servers while JSQ / power-of-two-choices hold the p95 tail.
+//! queue over **its own** latency profile `Σ_n F_n(b)`. On the skewed
+//! fleet (two of eight servers at quarter speed) the dispatch policy
+//! matters: round-robin drowns the slow servers while JSQ and
+//! power-of-two-choices — routing on expected completion time, not raw
+//! queue counts — hold the p95 tail. The tiered run shows the per-server
+//! breakdown: which hardware generation carried the load.
 //!
 //! ```sh
 //! cargo run --release --example serve_fleet
 //! ```
 
-use batchedge::config::SystemConfig;
-use batchedge::experiments::fleet::{run_fleet, skewed_speeds};
-use batchedge::fleet::{DispatchPolicy, FleetReport};
+use batchedge::experiments::fleet::{run_fleet, run_fleet_cfg, serving_cfg, skewed_speeds};
+use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetReport, ServerProfile};
+use batchedge::scenario::mixed_gpu_tiers;
 
 fn main() {
     batchedge::util::logging::init();
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
     let (servers, users, rate_hz, horizon_s) = (8, 100_000, 0.05, 10.0);
 
     println!(
@@ -43,7 +46,7 @@ fn main() {
             horizon_s,
             42,
         );
-        println!("{:>8}: {}", policy.name(), rep.render());
+        println!("{:>10}: {}", policy.name(), rep.render());
         let mut cells = vec![policy.name().to_string()];
         cells.extend(rep.table_cells());
         table.row(cells);
@@ -51,11 +54,31 @@ fn main() {
             baseline_p95 = Some(rep.latency_p95_s);
         } else if let Some(rr) = baseline_p95 {
             println!(
-                "          p95 = {:.1}% of round-robin",
+                "            p95 = {:.1}% of round-robin",
                 rep.latency_p95_s / rr * 100.0
             );
         }
     }
     println!();
     print!("{}", table.render());
+
+    // Heterogeneous tiers: one current-generation GPU (4× faster curves)
+    // plus three memory-capped older ones behind the same front door.
+    let tiers = mixed_gpu_tiers(4);
+    println!("\nheterogeneous pool: {:?}", tiers.iter().map(|t| &t.name).collect::<Vec<_>>());
+    let fleet = FleetCfg {
+        servers: 4,
+        profiles: ServerProfile::from_tiers(&cfg, &tiers),
+        batch: BatchPolicy { shed_expired: false, max_queue: 64, ..Default::default() },
+        horizon_s: 5.0,
+        seed: 11,
+        ..FleetCfg::default()
+    };
+    for policy in [DispatchPolicy::ShortestQueue, DispatchPolicy::ShortestQueueCount] {
+        let rep = run_fleet_cfg(&cfg, policy, fleet.clone(), 120_000, rate_hz);
+        println!("{:>10}: {}", policy.name(), rep.render());
+        if policy == DispatchPolicy::ShortestQueue {
+            print!("{}", rep.server_table("per-server breakdown (jsq)").render());
+        }
+    }
 }

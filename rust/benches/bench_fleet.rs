@@ -1,8 +1,12 @@
 //! Fleet engine benchmarks: servers × population × dispatch policy.
 //!
-//! Two views:
+//! Three views:
 //!  * the serving table — p50/p95/p99, shed and utilization per policy on
-//!    a capacity-skewed fleet (the JSQ/P2C-vs-RR headline), and
+//!    capacity-skewed **and** homogeneous fleets (time-based JSQ/P2C vs the
+//!    count-based baselines: the comparators separate sharply when
+//!    capacity is skewed and stay close on homogeneous pools),
+//!  * a tiered-profile pool (1× fast profile + memory-capped slow servers)
+//!    with its per-server breakdown, and
 //!  * engine wall-clock — events/s of the discrete-event core at 10⁵⁺
 //!    users, the number that makes fleet sweeps tractable.
 //!
@@ -10,44 +14,71 @@
 
 mod common;
 
-use batchedge::config::SystemConfig;
-use batchedge::experiments::fleet::{run_fleet, skewed_speeds};
-use batchedge::fleet::DispatchPolicy;
+use batchedge::experiments::fleet::{run_fleet, run_fleet_cfg, serving_cfg, skewed_speeds};
+use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, ServerProfile};
+use batchedge::scenario::mixed_gpu_tiers;
 
 fn main() {
     let quick = common::quick();
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
     let horizon = if quick { 2.0 } else { 10.0 };
 
-    // --- Serving quality: policy sweep on skewed fleets.
+    // --- Serving quality: policy sweep, skewed vs homogeneous pools.
     for &servers in if quick { &[8usize][..] } else { &[4usize, 8, 16][..] } {
         let users = 70_000 * servers / 8;
-        println!(
-            "\n== {servers} servers (last quarter at 0.25x), U={users} @ 0.05 Hz, \
-             horizon {horizon} s =="
-        );
-        let mut p95 = Vec::new();
-        for policy in DispatchPolicy::ALL {
-            let rep = run_fleet(
-                &cfg,
-                policy,
-                servers,
-                skewed_speeds(servers),
-                users,
-                0.05,
-                horizon,
-                42,
+        for (pool, speeds) in
+            [("skewed", skewed_speeds(servers)), ("homogeneous", Vec::new())]
+        {
+            println!("\n== {pool}: {servers} servers, U={users} @ 0.05 Hz, horizon {horizon} s ==");
+            let mut p95 = Vec::new();
+            for policy in DispatchPolicy::ALL {
+                let rep = run_fleet(
+                    &cfg,
+                    policy,
+                    servers,
+                    speeds.clone(),
+                    users,
+                    0.05,
+                    horizon,
+                    42,
+                );
+                println!("{:>10}: {}", policy.name(), rep.render());
+                p95.push((policy.name(), rep.latency_p95_s));
+            }
+            let get = |n: &str| p95.iter().find(|(p, _)| *p == n).unwrap().1;
+            println!(
+                "p95 vs rr: jsq {:.3}x p2c {:.3}x deadline {:.3}x | \
+                 time vs count: jsq {:.3}x p2c {:.3}x",
+                get("jsq") / get("rr"),
+                get("p2c") / get("rr"),
+                get("deadline") / get("rr"),
+                get("jsq") / get("jsq-count"),
+                get("p2c") / get("p2c-count"),
             );
-            println!("{:>8}: {}", policy.name(), rep.render());
-            p95.push((policy.name(), rep.latency_p95_s));
         }
-        let get = |n: &str| p95.iter().find(|(p, _)| *p == n).unwrap().1;
-        println!(
-            "p95 ratio vs rr: jsq {:.3}x  p2c {:.3}x  deadline {:.3}x",
-            get("jsq") / get("rr"),
-            get("p2c") / get("rr"),
-            get("deadline") / get("rr"),
-        );
+    }
+
+    // --- Tiered profiles: mixed GPU generations behind one front door.
+    {
+        let servers = 4;
+        let users = if quick { 48_000 } else { 120_000 };
+        let profiles = ServerProfile::from_tiers(&cfg, &mixed_gpu_tiers(servers));
+        println!("\n== tiered 1×fast + 3×slow(mem-capped): U={users} @ 0.05 Hz ==");
+        for policy in DispatchPolicy::ALL {
+            let fleet = FleetCfg {
+                servers,
+                profiles: profiles.clone(),
+                batch: BatchPolicy { shed_expired: false, max_queue: 64, ..Default::default() },
+                horizon_s: if quick { 2.0 } else { 5.0 },
+                seed: 11,
+                ..FleetCfg::default()
+            };
+            let rep = run_fleet_cfg(&cfg, policy, fleet, users, 0.05);
+            println!("{:>10}: {}", policy.name(), rep.render());
+            if policy == DispatchPolicy::ShortestQueue {
+                print!("{}", rep.server_table("per-server breakdown (jsq)").render());
+            }
+        }
     }
 
     // --- Engine throughput: how fast the event core chews requests.

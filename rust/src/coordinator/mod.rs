@@ -54,8 +54,27 @@ impl Coordinator {
         runtime: Option<Arc<Runtime>>,
         seed: u64,
     ) -> Result<Coordinator> {
+        let tables = Arc::new(crate::algo::ProfileTables::new(cfg, m));
+        Self::with_tables(cfg, m, arrivals, alg, slot_s, policy, runtime, seed, tables)
+    }
+
+    /// [`Self::new`] with a caller-provided solve context — fleet pools
+    /// share one [`ProfileTables`](crate::algo::ProfileTables) across all
+    /// same-config shards instead of rebuilding it per shard.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_tables(
+        cfg: &Arc<SystemConfig>,
+        m: usize,
+        arrivals: ArrivalProcess,
+        alg: SchedulerAlg,
+        slot_s: f64,
+        policy: Box<dyn OnlinePolicy>,
+        runtime: Option<Arc<Runtime>>,
+        seed: u64,
+        tables: Arc<crate::algo::ProfileTables>,
+    ) -> Result<Coordinator> {
         let mut rng = Rng::seed_from(seed);
-        let env = OnlineEnv::new(cfg, m, arrivals, alg, slot_s, &mut rng);
+        let env = OnlineEnv::with_tables(cfg, m, arrivals, alg, slot_s, &mut rng, tables);
         let net = cfg.net.name.clone();
         let input_elems = match &runtime {
             Some(rt) => rt.manifest().net(&net)?.subtasks[0].in_elems(),

@@ -107,6 +107,29 @@ impl LatencyProfile {
         }
     }
 
+    /// Rescale every curve into a different hardware tier: the `b = 1`
+    /// latency scales by `fixed_scale` and the marginal latency above
+    /// `F_n(1)` by `marginal_scale`. With distinct scales the *shape* of
+    /// the batching trade-off changes — something a scalar speed factor
+    /// cannot express (heterogeneous fleets, `fleet::ServerProfile`).
+    pub fn rescaled(&self, fixed_scale: f64, marginal_scale: f64) -> LatencyProfile {
+        assert!(fixed_scale > 0.0 && marginal_scale > 0.0, "scales must be positive");
+        let curves = self
+            .curves
+            .iter()
+            .map(|c| {
+                let f1 = c.lat[0];
+                BatchCurve::from_points(
+                    c.lat.iter().map(|&x| f1 * fixed_scale + (x - f1) * marginal_scale).collect(),
+                )
+            })
+            .collect();
+        LatencyProfile::new(
+            &format!("{}_x{fixed_scale:.2}+{marginal_scale:.2}", self.name),
+            curves,
+        )
+    }
+
     /// Collapse to a single-sub-task profile (IP-SSA-NP view): the whole
     /// task is one batchable unit with `F(b) = Σ_n F_n(b)`.
     pub fn unpartitioned(&self, k: usize) -> LatencyProfile {
@@ -199,6 +222,23 @@ mod tests {
         assert!((p.total(2) - 2.5).abs() < 1e-12);
         assert!((p.throughput(2) - 0.8).abs() < 1e-12);
         assert_eq!(p.throughput(0), 0.0);
+    }
+
+    #[test]
+    fn rescaled_changes_shape_not_just_rate() {
+        let p = profile();
+        // Quarter the fixed share, keep the marginal: F(1) shrinks 4x but
+        // the growth above F(1) is untouched.
+        let r = p.rescaled(0.25, 1.0);
+        assert!((r.f(2, 1) - 0.25).abs() < 1e-12);
+        assert!((r.f(2, 4) - (0.25 + 1.5)).abs() < 1e-12);
+        // Equal scales reduce to a plain speed factor.
+        let half = p.rescaled(0.5, 0.5);
+        for sub in 1..=p.n() {
+            for b in 1..=4 {
+                assert!((half.f(sub, b) - 0.5 * p.f(sub, b)).abs() < 1e-15);
+            }
+        }
     }
 
     #[test]

@@ -1,24 +1,32 @@
-//! Fleet scaling experiment: servers × population × dispatch policy.
+//! Fleet scaling experiments: servers × population × dispatch policy.
 //!
 //! Not a paper figure — the scaling study the ROADMAP's production north
-//! star calls for. Two sweeps:
+//! star calls for. Sweeps:
 //!
-//! 1. **Policy sweep on a skewed fleet** — heterogeneous server speeds
-//!    (a fraction of the pool runs at quarter capacity, the "mixed
+//! 1. **Policy sweep on a skewed fleet** (`fleet`) — heterogeneous server
+//!    speeds (a fraction of the pool runs at quarter capacity, the "mixed
 //!    generation" deployment). Round-robin collapses in p95/shed while
 //!    JSQ and power-of-two-choices stay near the homogeneous tail — the
 //!    fleet-level headline.
-//! 2. **Population scaling under JSQ** — offered load grows with the
-//!    population at fixed per-server headroom, demonstrating the
+//! 2. **Population scaling under JSQ** (`fleet`) — offered load grows with
+//!    the population at fixed per-server headroom, demonstrating the
 //!    event-driven core sweeps 10⁴–10⁵⁺ users in seconds.
+//! 3. **Heterogeneous profiles** (`fleet-hetero`) — homogeneous vs
+//!    speed-skewed vs tiered-profile pools × every dispatch policy,
+//!    including the legacy count-based JSQ/P2C baselines: on skewed pools
+//!    expected-completion-time routing strictly beats count-based routing
+//!    in p95 and shed, and the per-server breakdown shows which tier
+//!    carried the load.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::SystemConfig;
-use crate::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport};
-use crate::scenario::PopulationArrivals;
+use crate::fleet::{
+    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, ServerProfile,
+};
+use crate::scenario::{mixed_gpu_tiers, PopulationArrivals};
 use crate::util::json::Json;
 
 use super::report::Report;
@@ -47,6 +55,25 @@ impl Default for Params {
     }
 }
 
+/// The serving-fleet system config: paper parameters with the full-carrier
+/// uplink.
+///
+/// Table II allocates `W = 1 MHz` *per user* for the offline co-inference
+/// problem, where M ≤ 20 users share the cell. At that bandwidth a single
+/// mobilenet input upload takes 0.1–0.4 s — longer than every deadline the
+/// Table IV serving workload draws (0.05–0.2 s), so each request of a
+/// fleet run would expire mid-upload and every dispatch policy would
+/// degenerate to ~100 % shed (the seed's fleet tests silently ran in that
+/// regime). A serving fleet fronts its cell with the full 20 MHz carrier;
+/// uploads take ~10–30 ms and the batching/dispatch dynamics the fleet
+/// layer studies actually materialize.
+pub fn serving_cfg(net: &str) -> Option<Arc<SystemConfig>> {
+    let cfg = SystemConfig::by_name(net)?;
+    let mut cfg = (*cfg).clone();
+    cfg.radio.bandwidth_hz = 20e6;
+    Some(Arc::new(cfg))
+}
+
 /// Speeds for a skewed fleet: the last quarter of servers at 1/4 capacity.
 pub fn skewed_speeds(servers: usize) -> Vec<f64> {
     (0..servers)
@@ -66,21 +93,52 @@ pub fn run_fleet(
     horizon_s: f64,
     seed: u64,
 ) -> FleetReport {
-    let arrivals =
-        PopulationArrivals::stationary(&cfg.net.name, population, rate_per_user_hz);
     let fleet = FleetCfg {
         servers,
         speeds,
         batch: BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() },
         horizon_s,
         seed,
+        ..FleetCfg::default()
     };
+    run_fleet_cfg(cfg, policy, fleet, population, rate_per_user_hz)
+}
+
+/// One fleet run from an explicit [`FleetCfg`] (per-server profiles,
+/// batching overrides).
+pub fn run_fleet_cfg(
+    cfg: &Arc<SystemConfig>,
+    policy: DispatchPolicy,
+    fleet: FleetCfg,
+    population: usize,
+    rate_per_user_hz: f64,
+) -> FleetReport {
+    let arrivals = PopulationArrivals::stationary(&cfg.net.name, population, rate_per_user_hz);
     FleetEngine::new(cfg, fleet, policy.build(), arrivals).run()
+}
+
+fn policy_grid_json(grid: &[(&'static str, FleetReport)]) -> Json {
+    Json::Obj(
+        grid.iter()
+            .map(|(name, r)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("p50_s", Json::Num(r.latency_p50_s)),
+                        ("p95_s", Json::Num(r.latency_p95_s)),
+                        ("p99_s", Json::Num(r.latency_p99_s)),
+                        ("shed_rate", Json::Num(r.shed_rate())),
+                        ("completed", Json::Num(r.completed as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
 }
 
 pub fn run(p: &Params) -> Result<()> {
     let mut rep = Report::new("fleet");
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
 
     // --- 1. Dispatch policies on a skewed fleet.
     for &n in &p.servers {
@@ -111,25 +169,7 @@ pub fn run(p: &Params) -> Result<()> {
             grid.push((policy.name(), r));
         }
         rep.table(&format!("policy_n{n}"), t);
-        rep.json(
-            &format!("policy_n{n}"),
-            Json::Obj(
-                grid.iter()
-                    .map(|(name, r)| {
-                        (
-                            name.to_string(),
-                            Json::obj(vec![
-                                ("p50_s", Json::Num(r.latency_p50_s)),
-                                ("p95_s", Json::Num(r.latency_p95_s)),
-                                ("p99_s", Json::Num(r.latency_p99_s)),
-                                ("shed_rate", Json::Num(r.shed_rate())),
-                                ("completed", Json::Num(r.completed as f64)),
-                            ]),
-                        )
-                    })
-                    .collect(),
-            ),
-        );
+        rep.json(&format!("policy_n{n}"), policy_grid_json(&grid));
     }
 
     // --- 2. Population scaling under JSQ, homogeneous fleet.
@@ -154,5 +194,88 @@ pub fn run(p: &Params) -> Result<()> {
         rep.text(format!("U={users}: {}", r.render()));
     }
     rep.table("scaling", t);
+    rep.save()
+}
+
+/// Parameters of the heterogeneous-profile sweep.
+pub struct HeteroParams {
+    pub servers: usize,
+    pub population: usize,
+    pub rate_per_user_hz: f64,
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+impl Default for HeteroParams {
+    fn default() -> Self {
+        HeteroParams {
+            servers: 4,
+            population: 120_000,
+            rate_per_user_hz: 0.05,
+            horizon_s: 5.0,
+            seed: 11,
+        }
+    }
+}
+
+/// `fleet-hetero`: homogeneous vs speed-skewed vs tiered-profile pools ×
+/// every dispatch policy, plus the tiered pool's per-server breakdown.
+pub fn run_hetero(p: &HeteroParams) -> Result<()> {
+    let mut rep = Report::new("fleet-hetero");
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let batch = BatchPolicy { shed_expired: false, max_queue: 64, ..BatchPolicy::default() };
+    let tiers = mixed_gpu_tiers(p.servers);
+    let pools: [(&str, Vec<f64>, Vec<ServerProfile>); 3] = [
+        ("homogeneous", Vec::new(), Vec::new()),
+        ("speed-skewed", skewed_speeds(p.servers), Vec::new()),
+        ("tiered", Vec::new(), ServerProfile::from_tiers(&cfg, &tiers)),
+    ];
+
+    for (pool_name, speeds, profiles) in pools {
+        let mut t = FleetReport::table(&format!(
+            "fleet-hetero — {pool_name} pool, {} servers, {} users × {} Hz, horizon {} s",
+            p.servers, p.population, p.rate_per_user_hz, p.horizon_s
+        ));
+        let mut grid = Vec::new();
+        let mut tiered_jsq: Option<FleetReport> = None;
+        for policy in DispatchPolicy::ALL {
+            let fleet = FleetCfg {
+                servers: p.servers,
+                speeds: speeds.clone(),
+                profiles: profiles.clone(),
+                batch,
+                horizon_s: p.horizon_s,
+                seed: p.seed,
+            };
+            let r = run_fleet_cfg(&cfg, policy, fleet, p.population, p.rate_per_user_hz);
+            let mut cells = vec![policy.name().to_string()];
+            cells.extend(r.table_cells());
+            t.row(cells);
+            if pool_name == "tiered" && policy == DispatchPolicy::ShortestQueue {
+                tiered_jsq = Some(r.clone());
+            }
+            grid.push((policy.name(), r));
+        }
+        rep.table(&format!("hetero_{pool_name}"), t);
+        rep.json(&format!("hetero_{pool_name}"), policy_grid_json(&grid));
+        if let Some(r) = tiered_jsq {
+            rep.table(
+                "hetero_tiered_breakdown",
+                r.server_table("tiered pool per-server breakdown (JSQ)"),
+            );
+        }
+        // The headline: time-based routing vs the count baseline.
+        let get = |n: &str| grid.iter().find(|(p, _)| *p == n).map(|(_, r)| r).unwrap();
+        rep.text(format!(
+            "{pool_name}: jsq p95 {:.1} ms (count {:.1} ms), shed {:.2}% (count {:.2}%); \
+             p2c p95 {:.1} ms (count {:.1} ms)",
+            get("jsq").latency_p95_s * 1e3,
+            get("jsq-count").latency_p95_s * 1e3,
+            get("jsq").shed_rate() * 100.0,
+            get("jsq-count").shed_rate() * 100.0,
+            get("p2c").latency_p95_s * 1e3,
+            get("p2c-count").latency_p95_s * 1e3,
+        ));
+    }
     rep.save()
 }

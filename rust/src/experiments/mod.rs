@@ -16,8 +16,18 @@ pub mod table5;
 use anyhow::{bail, Result};
 
 /// Experiment ids accepted by `batchedge experiment <id>` and the benches.
-pub const ALL: &[&str] =
-    &["fig3", "fig5", "fig6", "fig7", "table3", "fig8", "table5", "ablations", "fleet"];
+pub const ALL: &[&str] = &[
+    "fig3",
+    "fig5",
+    "fig6",
+    "fig7",
+    "table3",
+    "fig8",
+    "table5",
+    "ablations",
+    "fleet",
+    "fleet-hetero",
+];
 
 /// Run an experiment by id with default (paper-scale) parameters; `quick`
 /// shrinks Monte-Carlo draws and RL schedules for smoke runs.
@@ -83,6 +93,14 @@ pub fn run(id: &str, quick: bool) -> Result<()> {
                 p.horizon_s = 3.0;
             }
             fleet::run(&p)
+        }
+        "fleet-hetero" => {
+            let mut p = fleet::HeteroParams::default();
+            if quick {
+                p.population = 48_000;
+                p.horizon_s = 2.0;
+            }
+            fleet::run_hetero(&p)
         }
         "all" => {
             for id in ALL {

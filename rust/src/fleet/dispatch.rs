@@ -2,10 +2,18 @@
 //!
 //! Every arriving request is routed to one server by a [`Dispatcher`]
 //! observing per-server [`ServerView`]s. The classic queueing results
-//! (Mitzenmacher's power-of-two-choices; JSQ optimality for heterogeneous
-//! pools) show up directly in the fleet bench: round-robin collapses under
-//! skewed capacity while JSQ and d=2 sampling stay close to optimal at a
-//! fraction of the state-inspection cost.
+//! (Mitzenmacher's power-of-two-choices; JSQ optimality) assume servers
+//! are exchangeable — on a heterogeneous pool they are not, and a raw
+//! queue *count* lies: a 4×-faster server at depth 8 finishes long before
+//! a slow one at depth 8. JSQ and P2C therefore compare servers on
+//! **expected completion time** ([`ServerView::expected_completion_s`]),
+//! computed from each server's own latency profile. The legacy
+//! count-first comparator survives bit-for-bit as the `jsq-count` /
+//! `p2c-count` baselines (the exact pre-refactor `jsq`/`p2c` behavior);
+//! the fleet bench shows time-based routing strictly beating them on
+//! capability-skewed pools and tracking them closely on homogeneous ones
+//! (the comparators can still differ there — time weighs a mid-batch
+//! residual, a count weighs its in-flight size).
 
 use crate::util::rng::Rng;
 
@@ -22,25 +30,48 @@ pub struct ServerView {
     pub busy_until_s: f64,
     /// Relative service speed (1.0 = reference profile).
     pub speed: f64,
-    /// Estimated seconds of queued + in-flight work.
+    /// Estimated seconds of queued + in-flight work, priced off this
+    /// server's *own* latency profile.
     pub est_backlog_s: f64,
+    /// Marginal service estimate for one more request on this server
+    /// (`Σ_n F_n(b_eff) / b_eff / speed` of its own profile).
+    pub est_service_s: f64,
 }
 
 impl ServerView {
-    /// Requests ahead of a new arrival (queued + in service) — the JSQ
-    /// quantity.
+    /// Requests ahead of a new arrival (queued + in service) — the
+    /// classic JSQ quantity.
     pub fn backlog(&self) -> usize {
         self.queued + self.in_flight
     }
+
+    /// Expected completion time of one more request joining this server:
+    /// drain the backlog, then serve the request itself. The quantity
+    /// load-aware policies route on.
+    pub fn expected_completion_s(&self) -> f64 {
+        self.est_backlog_s + self.est_service_s
+    }
 }
 
-/// `a` strictly less loaded than `b` (backlog count, then estimated time).
+/// `a` strictly less loaded than `b` in expected completion time (count
+/// breaks exact ties for determinism).
 fn less_loaded(a: &ServerView, b: &ServerView) -> bool {
+    let (ta, tb) = (a.expected_completion_s(), b.expected_completion_s());
+    ta < tb || (ta == tb && a.backlog() < b.backlog())
+}
+
+/// The legacy count-first comparator (backlog count, then estimated
+/// time). On skewed pools this treats a fast and a slow server at equal
+/// depth as equally loaded — kept only as the `*-count` baselines.
+fn less_loaded_count(a: &ServerView, b: &ServerView) -> bool {
     a.backlog() < b.backlog()
         || (a.backlog() == b.backlog() && a.est_backlog_s < b.est_backlog_s)
 }
 
 /// A load-balancing policy: observes the fleet, picks a server index.
+///
+/// Contract: `pick` must return an index `< servers.len()`; the engine
+/// panics on violations instead of silently redirecting traffic.
 pub trait Dispatcher {
     fn name(&self) -> &'static str;
     fn pick(&mut self, req: &Request, servers: &[ServerView], now: f64, rng: &mut Rng) -> usize;
@@ -50,17 +81,25 @@ pub trait Dispatcher {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchPolicy {
     RoundRobin,
+    /// JSQ on expected completion time.
     ShortestQueue,
+    /// P2C on expected completion time.
     PowerOfTwo,
     DeadlineAware,
+    /// Legacy JSQ on raw backlog counts (baseline).
+    ShortestQueueCount,
+    /// Legacy P2C on raw backlog counts (baseline).
+    PowerOfTwoCount,
 }
 
 impl DispatchPolicy {
-    pub const ALL: [DispatchPolicy; 4] = [
+    pub const ALL: [DispatchPolicy; 6] = [
         DispatchPolicy::RoundRobin,
         DispatchPolicy::ShortestQueue,
         DispatchPolicy::PowerOfTwo,
         DispatchPolicy::DeadlineAware,
+        DispatchPolicy::ShortestQueueCount,
+        DispatchPolicy::PowerOfTwoCount,
     ];
 
     pub fn parse(s: &str) -> Option<DispatchPolicy> {
@@ -69,6 +108,8 @@ impl DispatchPolicy {
             "jsq" | "shortest-queue" => Some(DispatchPolicy::ShortestQueue),
             "p2c" | "power-of-two" => Some(DispatchPolicy::PowerOfTwo),
             "deadline" | "deadline-aware" => Some(DispatchPolicy::DeadlineAware),
+            "jsq-count" => Some(DispatchPolicy::ShortestQueueCount),
+            "p2c-count" => Some(DispatchPolicy::PowerOfTwoCount),
             _ => None,
         }
     }
@@ -79,6 +120,8 @@ impl DispatchPolicy {
             DispatchPolicy::ShortestQueue => "jsq",
             DispatchPolicy::PowerOfTwo => "p2c",
             DispatchPolicy::DeadlineAware => "deadline",
+            DispatchPolicy::ShortestQueueCount => "jsq-count",
+            DispatchPolicy::PowerOfTwoCount => "p2c-count",
         }
     }
 
@@ -88,6 +131,8 @@ impl DispatchPolicy {
             DispatchPolicy::ShortestQueue => Box::new(ShortestQueue),
             DispatchPolicy::PowerOfTwo => Box::new(PowerOfTwo),
             DispatchPolicy::DeadlineAware => Box::new(DeadlineAware),
+            DispatchPolicy::ShortestQueueCount => Box::new(ShortestQueueCount),
+            DispatchPolicy::PowerOfTwoCount => Box::new(PowerOfTwoCount),
         }
     }
 }
@@ -110,7 +155,39 @@ impl Dispatcher for RoundRobin {
     }
 }
 
-/// Join-the-shortest-queue over all servers (full state inspection).
+fn argmin_by(servers: &[ServerView], less: impl Fn(&ServerView, &ServerView) -> bool) -> usize {
+    let mut best = 0;
+    for i in 1..servers.len() {
+        if less(&servers[i], &servers[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+fn two_choices(
+    servers: &[ServerView],
+    rng: &mut Rng,
+    less: impl Fn(&ServerView, &ServerView) -> bool,
+) -> usize {
+    let n = servers.len();
+    if n < 2 {
+        return 0;
+    }
+    let i = rng.usize_below(n);
+    let mut j = rng.usize_below(n - 1);
+    if j >= i {
+        j += 1;
+    }
+    if less(&servers[j], &servers[i]) {
+        j
+    } else {
+        i
+    }
+}
+
+/// Join the server with the least expected completion time (full state
+/// inspection).
 #[derive(Debug)]
 pub struct ShortestQueue;
 
@@ -120,17 +197,26 @@ impl Dispatcher for ShortestQueue {
     }
 
     fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, _rng: &mut Rng) -> usize {
-        let mut best = 0;
-        for i in 1..servers.len() {
-            if less_loaded(&servers[i], &servers[best]) {
-                best = i;
-            }
-        }
-        best
+        argmin_by(servers, less_loaded)
     }
 }
 
-/// Power-of-two-choices: sample two distinct servers, join the less loaded.
+/// Legacy JSQ joining the minimum backlog *count* (baseline).
+#[derive(Debug)]
+pub struct ShortestQueueCount;
+
+impl Dispatcher for ShortestQueueCount {
+    fn name(&self) -> &'static str {
+        "jsq-count"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, _rng: &mut Rng) -> usize {
+        argmin_by(servers, less_loaded_count)
+    }
+}
+
+/// Power-of-two-choices: sample two distinct servers, join the one with
+/// the smaller expected completion time.
 #[derive(Debug)]
 pub struct PowerOfTwo;
 
@@ -140,26 +226,28 @@ impl Dispatcher for PowerOfTwo {
     }
 
     fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, rng: &mut Rng) -> usize {
-        let n = servers.len();
-        if n < 2 {
-            return 0;
-        }
-        let i = rng.usize_below(n);
-        let mut j = rng.usize_below(n - 1);
-        if j >= i {
-            j += 1;
-        }
-        if less_loaded(&servers[j], &servers[i]) {
-            j
-        } else {
-            i
-        }
+        two_choices(servers, rng, less_loaded)
     }
 }
 
-/// Deadline-aware: among servers whose estimated backlog still meets the
-/// request's deadline (after its upload), join the least loaded in *time*;
-/// when none can, fall back to the globally least-loaded server.
+/// Legacy P2C on backlog counts (baseline).
+#[derive(Debug)]
+pub struct PowerOfTwoCount;
+
+impl Dispatcher for PowerOfTwoCount {
+    fn name(&self) -> &'static str {
+        "p2c-count"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, rng: &mut Rng) -> usize {
+        two_choices(servers, rng, less_loaded_count)
+    }
+}
+
+/// Deadline-aware: among servers whose expected completion time (backlog
+/// plus the request's own service, after its upload) still meets the
+/// request's deadline, join the earliest-finishing one; when none can,
+/// fall back to the globally least-loaded server in expected time.
 #[derive(Debug)]
 pub struct DeadlineAware;
 
@@ -169,26 +257,23 @@ impl Dispatcher for DeadlineAware {
     }
 
     fn pick(&mut self, req: &Request, servers: &[ServerView], now: f64, _rng: &mut Rng) -> usize {
-        let feasible = |v: &ServerView| now + req.upload_s + v.est_backlog_s <= req.due_s();
+        // Feasibility includes the request's own service: a server whose
+        // backlog drains in time but whose batch then finishes late is not
+        // a server that meets the deadline.
+        let feasible =
+            |v: &ServerView| now + req.upload_s + v.expected_completion_s() <= req.due_s();
         let mut best: Option<usize> = None;
         for (i, v) in servers.iter().enumerate() {
             if !feasible(v) {
                 continue;
             }
             match best {
-                Some(b) if servers[b].est_backlog_s <= v.est_backlog_s => {}
+                Some(b)
+                    if servers[b].expected_completion_s() <= v.expected_completion_s() => {}
                 _ => best = Some(i),
             }
         }
-        best.unwrap_or_else(|| {
-            let mut b = 0;
-            for i in 1..servers.len() {
-                if servers[i].est_backlog_s < servers[b].est_backlog_s {
-                    b = i;
-                }
-            }
-            b
-        })
+        best.unwrap_or_else(|| argmin_by(servers, less_loaded))
     }
 }
 
@@ -197,7 +282,18 @@ mod tests {
     use super::*;
 
     fn view(queued: usize, in_flight: usize, est: f64) -> ServerView {
-        ServerView { queued, in_flight, busy_until_s: 0.0, speed: 1.0, est_backlog_s: est }
+        view_srv(queued, in_flight, est, 0.01)
+    }
+
+    fn view_srv(queued: usize, in_flight: usize, est: f64, service: f64) -> ServerView {
+        ServerView {
+            queued,
+            in_flight,
+            busy_until_s: 0.0,
+            speed: 1.0,
+            est_backlog_s: est,
+            est_service_s: service,
+        }
     }
 
     fn req(deadline: f64) -> Request {
@@ -222,31 +318,53 @@ mod tests {
     }
 
     #[test]
-    fn jsq_joins_minimum_backlog_with_time_tiebreak() {
+    fn jsq_joins_least_expected_completion_time() {
         let mut jsq = ShortestQueue;
+        let mut rng = Rng::seed_from(1);
+        // The fast server (tiny per-request service) wins despite a deeper
+        // queue — the skewed-pool case the count comparator gets wrong.
+        let views = vec![view_srv(8, 0, 0.08, 0.01), view_srv(2, 0, 0.20, 0.10)];
+        assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 0);
+        // Exact time ties break on backlog count.
+        let views = vec![view_srv(3, 1, 0.1, 0.01), view_srv(1, 0, 0.1, 0.01)];
+        assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn count_baseline_keeps_the_legacy_ordering() {
+        let mut jsq = ShortestQueueCount;
         let mut rng = Rng::seed_from(1);
         let views = vec![view(3, 1, 0.1), view(1, 0, 0.2), view(1, 0, 0.1)];
         assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 2, "count ties break on time");
         let views = vec![view(0, 16, 0.5), view(2, 0, 0.1)];
         assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 1, "in-flight counts as load");
+        // …and on the skewed case it picks the slow shallow queue — the
+        // documented lie the time comparator fixes.
+        let views = vec![view_srv(8, 0, 0.08, 0.01), view_srv(2, 0, 0.20, 0.10)];
+        assert_eq!(jsq.pick(&req(1.0), &views, 0.0, &mut rng), 1);
     }
 
     #[test]
     fn p2c_picks_the_less_loaded_of_two_samples() {
-        let mut p2c = PowerOfTwo;
         let mut rng = Rng::seed_from(7);
         // One idle server among loaded ones: over many draws, the idle one
         // must win every comparison it appears in, so it gets picked more
         // often than uniform.
         let views = vec![view(9, 1, 1.0), view(0, 0, 0.0), view(9, 1, 1.0), view(9, 1, 1.0)];
-        let mut hits = 0;
-        for _ in 0..1000 {
-            if p2c.pick(&req(1.0), &views, 0.0, &mut rng) == 1 {
-                hits += 1;
+        for mk in [
+            || Box::new(PowerOfTwo) as Box<dyn Dispatcher>,
+            || Box::new(PowerOfTwoCount) as Box<dyn Dispatcher>,
+        ] {
+            let mut p2c = mk();
+            let mut hits = 0;
+            for _ in 0..1000 {
+                if p2c.pick(&req(1.0), &views, 0.0, &mut rng) == 1 {
+                    hits += 1;
+                }
             }
+            // P(idle in sample) = 1 - C(3,2)/C(4,2) = 1/2; uniform is 1/4.
+            assert!(hits > 400, "{}: idle server picked {hits}/1000", p2c.name());
         }
-        // P(idle in sample) = 1 - C(3,2)/C(4,2) = 1/2; uniform would be 1/4.
-        assert!(hits > 400, "idle server picked {hits}/1000");
     }
 
     #[test]

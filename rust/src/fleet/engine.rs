@@ -6,11 +6,15 @@
 //! [`Dispatcher`](super::dispatch::Dispatcher). Each server runs a dynamic
 //! [`BatchQueue`](super::queue::BatchQueue) and serves a launched batch of
 //! size `b` in `Σ_n F_n(b) / speed` seconds — the paper's batch occupancy
-//! (eq. 20) scaled by the server's relative capacity. Everything advances
-//! through the binary-heap [`EventQueue`](super::events::EventQueue), so a
-//! run costs `O(requests · (log E + N))` regardless of how much model time
-//! it spans — this is what makes 10⁵–10⁶-user sweeps tractable where the
-//! slotted coordinator loop is not.
+//! (eq. 20) evaluated on **that server's own**
+//! [`ServerProfile`](super::profile::ServerProfile): heterogeneous pools
+//! mix latency curves, memory caps and batching policies per server, and
+//! every load signal the dispatcher sees is priced off the profile of the
+//! server it describes. Everything advances through the binary-heap
+//! [`EventQueue`](super::events::EventQueue), so a run costs
+//! `O(requests · (log E + N))` regardless of how much model time it spans
+//! — this is what makes 10⁵–10⁶-user sweeps tractable where the slotted
+//! coordinator loop is not.
 //!
 //! Request lifecycle: `Arrival` (dispatcher routes, upload begins) →
 //! `Enqueue` (admission control at the chosen server) → batch launch
@@ -29,6 +33,7 @@ use crate::util::rng::Rng;
 
 use super::dispatch::{Dispatcher, ServerView};
 use super::events::EventQueue;
+use super::profile::{self, ServerProfile};
 use super::queue::{BatchPolicy, BatchQueue};
 use super::report::{FleetReport, ShardStats};
 use super::Request;
@@ -39,8 +44,14 @@ pub struct FleetCfg {
     /// Number of edge-server shards.
     pub servers: usize,
     /// Relative service speed per server (empty = homogeneous 1.0).
+    /// Shorthand for uniform-profile pools; mutually exclusive with
+    /// `profiles`.
     pub speeds: Vec<f64>,
-    /// Dynamic batching / admission parameters (shared by all servers).
+    /// Per-server capability profiles (empty = every server runs the
+    /// shared config profile at `speeds`/1.0).
+    pub profiles: Vec<ServerProfile>,
+    /// Dynamic batching / admission parameters (shared default; a
+    /// [`ServerProfile`] may override or memory-cap it per server).
     pub batch: BatchPolicy,
     /// Model time during which arrivals are generated (s); in-flight work
     /// is drained to completion afterwards.
@@ -54,6 +65,7 @@ impl Default for FleetCfg {
         FleetCfg {
             servers: 8,
             speeds: Vec::new(),
+            profiles: Vec::new(),
             batch: BatchPolicy::default(),
             horizon_s: 10.0,
             seed: 1,
@@ -75,7 +87,9 @@ enum Ev {
 
 struct Server {
     queue: BatchQueue,
-    speed: f64,
+    /// Resolved capability: own occupancy table, speed, effective batch
+    /// policy and per-item estimate.
+    cap: profile::ResolvedServer,
     busy_until: f64,
     in_flight: usize,
     timer_gen: u64,
@@ -87,14 +101,15 @@ struct Server {
 }
 
 impl Server {
-    fn view(&self, now: f64, per_item_s: f64) -> ServerView {
+    fn view(&self, now: f64) -> ServerView {
         ServerView {
             queued: self.queue.len(),
             in_flight: self.in_flight,
             busy_until_s: self.busy_until,
-            speed: self.speed,
+            speed: self.cap.speed,
             est_backlog_s: (self.busy_until - now).max(0.0)
-                + self.queue.len() as f64 * per_item_s / self.speed,
+                + self.queue.len() as f64 * self.cap.per_item_s / self.cap.speed,
+            est_service_s: self.cap.per_item_s / self.cap.speed,
         }
     }
 }
@@ -112,9 +127,6 @@ pub struct FleetEngine {
     /// Dispatch stream: sampling policies (p2c).
     disp_rng: Rng,
     next_id: u64,
-    /// Marginal per-request service estimate at the largest batch —
-    /// `Σ_n F_n(max_batch) / max_batch` — for backlog-time views.
-    per_item_s: f64,
 }
 
 impl FleetEngine {
@@ -130,13 +142,29 @@ impl FleetEngine {
             "speeds must be empty or one per server"
         );
         assert!(fleet.speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
+        assert!(
+            fleet.profiles.is_empty() || fleet.profiles.len() == fleet.servers,
+            "profiles must be empty or one per server"
+        );
+        assert!(
+            fleet.profiles.is_empty() || fleet.speeds.is_empty(),
+            "give speeds or profiles, not both"
+        );
         let mut seed_rng = Rng::seed_from(fleet.seed);
         let work_rng = seed_rng.fork(0x0A11);
         let disp_rng = seed_rng.fork(0xD15);
-        let servers = (0..fleet.servers)
-            .map(|i| Server {
-                queue: BatchQueue::new(fleet.batch),
-                speed: fleet.speeds.get(i).copied().unwrap_or(1.0),
+        let profiles: Vec<ServerProfile> = if fleet.profiles.is_empty() {
+            (0..fleet.servers)
+                .map(|i| ServerProfile::at_speed(fleet.speeds.get(i).copied().unwrap_or(1.0)))
+                .collect()
+        } else {
+            fleet.profiles.clone()
+        };
+        let servers = profile::resolve(cfg, &profiles, fleet.batch)
+            .into_iter()
+            .map(|cap| Server {
+                queue: BatchQueue::new(cap.batch),
+                cap,
                 busy_until: 0.0,
                 in_flight: 0,
                 timer_gen: 0,
@@ -144,7 +172,6 @@ impl FleetEngine {
                 stats: ShardStats::default(),
             })
             .collect();
-        let per_item_s = cfg.profile.total(fleet.batch.max_batch) / fleet.batch.max_batch as f64;
         FleetEngine {
             cfg: Arc::clone(cfg),
             fleet,
@@ -155,7 +182,6 @@ impl FleetEngine {
             work_rng,
             disp_rng,
             next_id: 0,
-            per_item_s,
         }
     }
 
@@ -202,8 +228,8 @@ impl FleetEngine {
         // The event clock ends at the last drain completion; utilization
         // is measured over that full span so it cannot exceed 100%.
         let span_s = self.events.now();
-        FleetReport::from_shards(
-            self.servers.iter().map(|s| &s.stats),
+        FleetReport::from_named_shards(
+            self.servers.iter().map(|s| (s.cap.name.as_str(), &s.stats)),
             self.fleet.horizon_s,
             span_s,
             wall0.elapsed().as_secs_f64(),
@@ -218,12 +244,17 @@ impl FleetEngine {
             self.events.schedule(next.at_s, Ev::Arrival(next));
         }
         let req = self.make_request(a);
-        let views: Vec<ServerView> =
-            self.servers.iter().map(|s| s.view(now, self.per_item_s)).collect();
-        let sid = self
-            .dispatcher
-            .pick(&req, &views, now, &mut self.disp_rng)
-            .min(self.servers.len() - 1);
+        let views: Vec<ServerView> = self.servers.iter().map(|s| s.view(now)).collect();
+        let sid = self.dispatcher.pick(&req, &views, now, &mut self.disp_rng);
+        // Dispatcher contract: an in-fleet index. The old `.min(N-1)`
+        // clamp silently redirected every out-of-range pick to the last
+        // server, hiding dispatcher bugs behind skewed load; fail loudly.
+        assert!(
+            sid < self.servers.len(),
+            "dispatcher '{}' picked server {sid} of a {}-server fleet",
+            self.dispatcher.name(),
+            self.servers.len()
+        );
         self.events.schedule(now + req.upload_s, Ev::Enqueue { server: sid, req });
     }
 
@@ -271,8 +302,8 @@ impl FleetEngine {
                 // re-examine what is left.
                 continue;
             }
-            let service_s = self.cfg.profile.total(batch.len()) / self.servers[sid].speed;
             let s = &mut self.servers[sid];
+            let service_s = s.cap.occupancy.total(batch.len()) / s.cap.speed;
             s.busy_until = now + service_s;
             s.in_flight = batch.len();
             // Launching consumed the timer's queue front; invalidate any
@@ -286,6 +317,12 @@ impl FleetEngine {
             return;
         }
     }
+
+    /// Current per-server views (tests: backlog pricing).
+    #[cfg(test)]
+    pub(crate) fn server_views(&self, now: f64) -> Vec<ServerView> {
+        self.servers.iter().map(|s| s.view(now)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -293,8 +330,14 @@ mod tests {
     use super::*;
     use crate::fleet::dispatch::DispatchPolicy;
 
+    /// The fleet tests run on the serving-grade uplink; see
+    /// `experiments::fleet::serving_cfg` for why 1 MHz starves them.
+    fn serving_cfg() -> Arc<SystemConfig> {
+        crate::experiments::fleet::serving_cfg("mobilenet_v2").unwrap()
+    }
+
     fn engine(policy: DispatchPolicy, servers: usize, seed: u64) -> FleetEngine {
-        let cfg = SystemConfig::mobilenet_default();
+        let cfg = serving_cfg();
         let arrivals = PopulationArrivals::stationary("mobilenet_v2", 2000, 0.5);
         let fleet = FleetCfg { servers, horizon_s: 2.0, seed, ..FleetCfg::default() };
         FleetEngine::new(&cfg, fleet, policy.build(), arrivals)
@@ -344,5 +387,75 @@ mod tests {
         // One server at ~1000 req/s vs capacity ~1400 req/s at b=16:
         // stays up but heavily utilized.
         assert!(rep.utilization_mean() > 0.3, "{}", rep.render());
+    }
+
+    #[test]
+    fn views_price_backlog_off_each_servers_own_profile() {
+        // Satellite regression for the engine-wide `per_item_s` bug: the
+        // fast-profile server must report a proportionally smaller
+        // backlog estimate for the same queue depth.
+        let cfg = serving_cfg();
+        let fast = Arc::new(cfg.profile.rescaled(0.25, 0.25));
+        let fleet = FleetCfg {
+            servers: 2,
+            profiles: vec![
+                ServerProfile::default(),
+                ServerProfile {
+                    name: "fast".into(),
+                    profile: Some(fast),
+                    ..ServerProfile::default()
+                },
+            ],
+            horizon_s: 1.0,
+            seed: 1,
+            ..FleetCfg::default()
+        };
+        let mut eng = FleetEngine::new(
+            &cfg,
+            fleet,
+            DispatchPolicy::RoundRobin.build(),
+            PopulationArrivals::stationary("mobilenet_v2", 10, 0.1),
+        );
+        // Same queue depth on both servers.
+        for sid in 0..2 {
+            for i in 0..5 {
+                let req = Request {
+                    id: i,
+                    user: 0,
+                    arrival_s: 0.0,
+                    deadline_s: 1.0,
+                    upload_s: 0.0,
+                    tx_energy_j: 0.0,
+                };
+                assert!(eng.servers[sid].queue.admit(req, 0.0));
+            }
+        }
+        let views = eng.server_views(0.0);
+        assert_eq!(views[0].queued, views[1].queued);
+        let ratio = views[1].est_backlog_s / views[0].est_backlog_s;
+        assert!((ratio - 0.25).abs() < 1e-9, "fast backlog ratio {ratio}");
+        assert!(views[1].expected_completion_s() < views[0].expected_completion_s());
+    }
+
+    /// A dispatcher that violates the index contract.
+    struct OutOfRange;
+
+    impl Dispatcher for OutOfRange {
+        fn name(&self) -> &'static str {
+            "broken"
+        }
+
+        fn pick(&mut self, _r: &Request, servers: &[ServerView], _n: f64, _g: &mut Rng) -> usize {
+            servers.len() + 3
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "picked server")]
+    fn out_of_range_dispatcher_panics_instead_of_silently_clamping() {
+        let cfg = serving_cfg();
+        let fleet = FleetCfg { servers: 2, horizon_s: 1.0, seed: 1, ..FleetCfg::default() };
+        let arrivals = PopulationArrivals::stationary("mobilenet_v2", 100, 1.0);
+        FleetEngine::new(&cfg, fleet, Box::new(OutOfRange), arrivals).run();
     }
 }

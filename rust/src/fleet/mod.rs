@@ -18,6 +18,10 @@
 //!   [`Dispatcher`] trait;
 //! * [`queue`] — per-server dynamic batch queue with admission control
 //!   (max batch size, max queue delay, shed-on-deadline);
+//! * [`profile`] — per-server capability profiles for heterogeneous pools
+//!   (own `F_n(b)` latency table, memory-capped batches, per-server
+//!   batching overrides), with one shared occupancy table per distinct
+//!   profile;
 //! * [`engine`] — the event-driven fleet simulator tying the above to the
 //!   paper's batch occupancy model `Σ_n F_n(b)` and radio substrate;
 //! * [`pool`] — a slot-driven pool of full
@@ -34,14 +38,16 @@ pub mod dispatch;
 pub mod engine;
 pub mod events;
 pub mod pool;
+pub mod profile;
 pub mod queue;
 pub mod report;
 
 pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
 pub use engine::{FleetCfg, FleetEngine};
 pub use pool::{CoordinatorPool, PoolCfg};
+pub use profile::ServerProfile;
 pub use queue::{BatchPolicy, BatchQueue};
-pub use report::{FleetReport, ShardStats};
+pub use report::{FleetReport, ServerBreakdown, ShardStats};
 
 /// One inference request at fleet scope.
 #[derive(Debug, Clone, Copy, PartialEq)]

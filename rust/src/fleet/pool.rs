@@ -61,11 +61,16 @@ impl CoordinatorPool {
         assert!(pool.users >= pool.shards, "fewer users than shards");
         let base = pool.users / pool.shards;
         let extra = pool.users % pool.shards;
+        // One solve context for the whole same-config pool: shards share
+        // the dense profile/device tables instead of rebuilding them per
+        // shard (sized for the largest shard).
+        let m_max = base + usize::from(extra > 0);
+        let tables = Arc::new(crate::algo::ProfileTables::new(cfg, m_max));
         let mut shards = Vec::with_capacity(pool.shards);
         for i in 0..pool.shards {
             let m = base + usize::from(i < extra);
             let seed = pool.seed.wrapping_add(i as u64 * 0x9E37_79B9_7F4A_7C15);
-            shards.push(Coordinator::new(
+            shards.push(Coordinator::with_tables(
                 cfg,
                 m,
                 arrivals.clone(),
@@ -74,6 +79,7 @@ impl CoordinatorPool {
                 mk_policy(i),
                 None,
                 seed,
+                Arc::clone(&tables),
             )?);
         }
         Ok(CoordinatorPool { shards, slot_s: pool.slot_s, slots_run: 0, wall_s: 0.0 })

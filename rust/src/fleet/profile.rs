@@ -1,0 +1,270 @@
+//! Per-server capability profiles for heterogeneous fleets.
+//!
+//! The paper's §VI and footnote 1 extend the single-GPU batch model to
+//! multiple GPUs; real pools are rarely uniform — mixed hardware
+//! generations serve the same traffic with different `F_n(b)` curves and
+//! different memory headroom. A [`ServerProfile`] captures what one server
+//! can do:
+//!
+//! * its **own batch latency table** `F_n(b)` (a [`LatencyProfile`], not a
+//!   scalar on the fleet-shared one — the service-time *curve*, not a rate,
+//!   governs dynamic-batching behavior; cf. Inoue 2020),
+//! * a residual **speed** scalar on top of that curve,
+//! * a **memory limit** in resident batch items that caps the effective
+//!   `max_batch` (a GPU that cannot hold 16 inputs never launches 16), and
+//! * an optional per-server [`BatchPolicy`] override.
+//!
+//! [`resolve`] turns the fleet configuration into per-server serving state.
+//! Servers of the same tier share one dense [`OccupancyTable`]
+//! (`Σ_n F_n(b)`, eq. 20) — the fleet-side analogue of
+//! [`algo::ctx::ProfileTables`](crate::algo::ProfileTables): one table per
+//! *distinct* profile, shared across every shard of that tier, never
+//! rebuilt per server.
+
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::dnn::LatencyProfile;
+use crate::scenario::GpuTierSpec;
+
+use super::queue::BatchPolicy;
+
+/// Capability profile of one fleet server.
+#[derive(Debug, Clone)]
+pub struct ServerProfile {
+    /// Tier label shown in per-server report rows ("fast", "slow", …).
+    pub name: String,
+    /// This server's own `F_n(b)` table; `None` = serve with the
+    /// fleet-shared `cfg.profile`.
+    pub profile: Option<Arc<LatencyProfile>>,
+    /// Residual relative speed on top of the latency curve (1.0 = the
+    /// curve as-is).
+    pub speed: f64,
+    /// Memory limit in resident batch items; caps the effective
+    /// `max_batch` below the batching policy's value.
+    pub mem_items: Option<usize>,
+    /// Per-server batching/admission override; `None` = fleet-shared
+    /// [`BatchPolicy`].
+    pub batch: Option<BatchPolicy>,
+}
+
+impl Default for ServerProfile {
+    fn default() -> Self {
+        ServerProfile {
+            name: "base".to_string(),
+            profile: None,
+            speed: 1.0,
+            mem_items: None,
+            batch: None,
+        }
+    }
+}
+
+impl ServerProfile {
+    /// Shared-profile server at a relative speed (the legacy
+    /// `FleetCfg::speeds` model).
+    pub fn at_speed(speed: f64) -> ServerProfile {
+        ServerProfile { name: format!("x{speed}"), speed, ..ServerProfile::default() }
+    }
+
+    /// Expand [`GpuTierSpec`]s into one `ServerProfile` per server. Every
+    /// server of a tier shares one rescaled [`LatencyProfile`] `Arc`, so
+    /// [`resolve`] builds exactly one occupancy table per tier.
+    pub fn from_tiers(cfg: &SystemConfig, tiers: &[GpuTierSpec]) -> Vec<ServerProfile> {
+        let mut out = Vec::new();
+        for t in tiers {
+            let profile = if t.fixed_scale == 1.0 && t.marginal_scale == 1.0 {
+                None
+            } else {
+                Some(Arc::new(cfg.profile.rescaled(t.fixed_scale, t.marginal_scale)))
+            };
+            for _ in 0..t.count {
+                out.push(ServerProfile {
+                    name: t.name.clone(),
+                    profile: profile.clone(),
+                    speed: t.speed,
+                    mem_items: t.mem_items,
+                    batch: None,
+                });
+            }
+        }
+        out
+    }
+
+    /// The batching policy this server actually runs: its override (or the
+    /// fleet-shared policy) with `max_batch` capped by the memory limit.
+    pub fn effective_batch(&self, shared: BatchPolicy) -> BatchPolicy {
+        let mut p = self.batch.unwrap_or(shared);
+        if let Some(m) = self.mem_items {
+            assert!(m > 0, "mem_items must hold at least one batch item");
+            p.max_batch = p.max_batch.min(m);
+        }
+        p
+    }
+}
+
+/// Dense `occupancy[b] = Σ_n F_n(b)` for one distinct latency profile,
+/// shared by every server of that tier.
+#[derive(Debug)]
+pub struct OccupancyTable {
+    total: Vec<f64>,
+}
+
+impl OccupancyTable {
+    fn new(profile: &LatencyProfile, b_cap: usize) -> OccupancyTable {
+        OccupancyTable { total: (0..=b_cap).map(|b| profile.total(b)).collect() }
+    }
+
+    /// `Σ_n F_n(b)` — table-backed
+    /// [`LatencyProfile::total`](crate::dnn::LatencyProfile::total).
+    #[inline]
+    pub fn total(&self, b: usize) -> f64 {
+        self.total[b]
+    }
+}
+
+/// One server's fully resolved serving state.
+#[derive(Debug, Clone)]
+pub struct ResolvedServer {
+    pub name: String,
+    /// Shared per-tier occupancy table.
+    pub occupancy: Arc<OccupancyTable>,
+    pub speed: f64,
+    /// Effective batching policy (override + memory cap applied).
+    pub batch: BatchPolicy,
+    /// Marginal per-request service estimate at this server's largest
+    /// batch — `Σ_n F_n(b_eff) / b_eff` off its *own* profile (backlog
+    /// views; the engine divides by `speed` exactly like the legacy
+    /// scalar path did, so homogeneous fleets are bitwise unchanged).
+    pub per_item_s: f64,
+}
+
+/// Resolve per-server profiles against the fleet-shared config and batch
+/// policy, building one [`OccupancyTable`] per distinct profile.
+pub fn resolve(
+    cfg: &SystemConfig,
+    profiles: &[ServerProfile],
+    shared_batch: BatchPolicy,
+) -> Vec<ResolvedServer> {
+    assert!(profiles.iter().all(|p| p.speed > 0.0), "server speeds must be positive");
+    let eff: Vec<BatchPolicy> = profiles.iter().map(|p| p.effective_batch(shared_batch)).collect();
+    // Group servers by profile identity (None = fleet-shared profile,
+    // Some = a tier's own Arc); each group's table spans the largest
+    // effective batch any member launches.
+    let same = |a: &Option<Arc<LatencyProfile>>, b: &Option<Arc<LatencyProfile>>| match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    };
+    let mut groups: Vec<(Option<Arc<LatencyProfile>>, usize)> = Vec::new();
+    for (p, e) in profiles.iter().zip(&eff) {
+        match groups.iter().position(|(k, _)| same(k, &p.profile)) {
+            Some(gi) => groups[gi].1 = groups[gi].1.max(e.max_batch),
+            None => groups.push((p.profile.clone(), e.max_batch)),
+        }
+    }
+    let tables: Vec<Arc<OccupancyTable>> = groups
+        .iter()
+        .map(|(key, cap)| {
+            let profile = key.as_deref().unwrap_or(&cfg.profile);
+            Arc::new(OccupancyTable::new(profile, *cap))
+        })
+        .collect();
+    profiles
+        .iter()
+        .zip(eff)
+        .map(|(p, batch)| {
+            let gi = groups.iter().position(|(k, _)| same(k, &p.profile)).unwrap();
+            let occupancy = Arc::clone(&tables[gi]);
+            let per_item_s = occupancy.total(batch.max_batch) / batch.max_batch as f64;
+            ResolvedServer { name: p.name.clone(), occupancy, speed: p.speed, batch, per_item_s }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::mixed_gpu_tiers;
+
+    fn cfg() -> Arc<SystemConfig> {
+        SystemConfig::mobilenet_default()
+    }
+
+    #[test]
+    fn shared_profile_matches_legacy_scalar_path() {
+        let cfg = cfg();
+        let shared = BatchPolicy::default();
+        let profiles = vec![ServerProfile::default(), ServerProfile::at_speed(0.25)];
+        let rs = resolve(&cfg, &profiles, shared);
+        // Same occupancy table object for both (one distinct profile)…
+        assert!(Arc::ptr_eq(&rs[0].occupancy, &rs[1].occupancy));
+        // …with byte-for-byte the legacy per-item estimate.
+        let legacy = cfg.profile.total(shared.max_batch) / shared.max_batch as f64;
+        assert_eq!(rs[0].per_item_s.to_bits(), legacy.to_bits());
+        assert_eq!(rs[1].per_item_s.to_bits(), legacy.to_bits());
+        for b in 0..=shared.max_batch {
+            assert_eq!(rs[0].occupancy.total(b).to_bits(), cfg.profile.total(b).to_bits());
+        }
+    }
+
+    #[test]
+    fn own_profile_scales_backlog_estimates() {
+        // Satellite regression: a fast-profile server's view must price the
+        // same queue depth proportionally cheaper. rescaled(0.25, 0.25)
+        // quarters every F_n(b), so per_item_s quarters too.
+        let cfg = cfg();
+        let fast = Arc::new(cfg.profile.rescaled(0.25, 0.25));
+        let profiles = vec![
+            ServerProfile::default(),
+            ServerProfile { name: "fast".into(), profile: Some(fast), ..ServerProfile::default() },
+        ];
+        let rs = resolve(&cfg, &profiles, BatchPolicy::default());
+        assert!(!Arc::ptr_eq(&rs[0].occupancy, &rs[1].occupancy), "distinct tables per tier");
+        let ratio = rs[1].per_item_s / rs[0].per_item_s;
+        assert!((ratio - 0.25).abs() < 1e-12, "fast per-item ratio {ratio}");
+        // Same queue depth → proportionally smaller estimated backlog.
+        let q = 10.0;
+        assert!((q * rs[1].per_item_s) < 0.26 * (q * rs[0].per_item_s));
+    }
+
+    #[test]
+    fn mem_limit_caps_effective_batch() {
+        let cfg = cfg();
+        let profiles = vec![ServerProfile {
+            mem_items: Some(8),
+            ..ServerProfile::default()
+        }];
+        let rs = resolve(&cfg, &profiles, BatchPolicy::default());
+        assert_eq!(rs[0].batch.max_batch, 8);
+        let want = cfg.profile.total(8) / 8.0;
+        assert_eq!(rs[0].per_item_s.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn batch_override_wins_over_shared() {
+        let cfg = cfg();
+        let over = BatchPolicy { max_batch: 4, max_queue: 32, ..BatchPolicy::default() };
+        let profiles = vec![ServerProfile { batch: Some(over), ..ServerProfile::default() }];
+        let rs = resolve(&cfg, &profiles, BatchPolicy::default());
+        assert_eq!(rs[0].batch.max_batch, 4);
+        assert_eq!(rs[0].batch.max_queue, 32);
+    }
+
+    #[test]
+    fn tiers_share_one_table_per_tier() {
+        let cfg = cfg();
+        let tiers = mixed_gpu_tiers(4);
+        let profiles = ServerProfile::from_tiers(&cfg, &tiers);
+        assert_eq!(profiles.len(), 4);
+        let rs = resolve(&cfg, &profiles, BatchPolicy::default());
+        // 1×fast + 3×slow: the three slow servers share one table.
+        assert!(Arc::ptr_eq(&rs[1].occupancy, &rs[2].occupancy));
+        assert!(Arc::ptr_eq(&rs[1].occupancy, &rs[3].occupancy));
+        assert!(!Arc::ptr_eq(&rs[0].occupancy, &rs[1].occupancy));
+        // The fast tier serves any batch strictly faster.
+        for b in 1..=8 {
+            assert!(rs[0].occupancy.total(b) < rs[1].occupancy.total(b));
+        }
+    }
+}

@@ -51,6 +51,24 @@ impl ShardStats {
     }
 }
 
+/// Per-server breakdown row of a fleet report — which tier carried what.
+#[derive(Debug, Clone)]
+pub struct ServerBreakdown {
+    /// Server/tier label ([`ServerProfile`](super::profile::ServerProfile)
+    /// name; `s<i>` when unnamed).
+    pub name: String,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_violations: u64,
+    /// Mean launched batch size on this server.
+    pub mean_batch: f64,
+    /// This server's own completion-latency percentiles (s).
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    /// Busy fraction over the simulated span.
+    pub utilization: f64,
+}
+
 /// Aggregate fleet serving report.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -69,6 +87,8 @@ pub struct FleetReport {
     pub mean_batch: f64,
     /// Per-server busy fraction over the horizon.
     pub utilization: Vec<f64>,
+    /// Per-server breakdown rows (same order as `utilization`).
+    pub per_server: Vec<ServerBreakdown>,
     /// Model-time horizon (s).
     pub horizon_s: f64,
     /// Wall-clock of the simulation (s).
@@ -86,21 +106,61 @@ impl FleetReport {
     where
         I: IntoIterator<Item = &'a ShardStats>,
     {
+        Self::from_named_shards(shards.into_iter().map(|s| ("", s)), horizon_s, span_s, wall_s)
+    }
+
+    /// [`Self::from_shards`] with per-server tier labels for the breakdown
+    /// rows (`""` falls back to `s<i>`).
+    pub fn from_named_shards<'a, I>(
+        shards: I,
+        horizon_s: f64,
+        span_s: f64,
+        wall_s: f64,
+    ) -> FleetReport
+    where
+        I: IntoIterator<Item = (&'a str, &'a ShardStats)>,
+    {
         let mut lats: Vec<f64> = Vec::new();
         let (mut completed, mut shed, mut violations) = (0u64, 0u64, 0u64);
         let (mut batches, mut batch_sum) = (0u64, 0u64);
         let mut energy = 0.0;
-        let mut utilization = Vec::new();
-        for s in shards {
+        let mut per_server: Vec<ServerBreakdown> = Vec::new();
+        for (name, s) in shards {
             completed += s.completed;
             shed += s.shed;
             violations += s.violations;
             batches += s.batches;
             batch_sum += s.batch_size_sum;
             energy += s.energy_j;
-            lats.extend_from_slice(&s.latencies_s);
-            utilization.push(s.utilization(span_s.max(horizon_s)));
+            let util = s.utilization(span_s.max(horizon_s));
+            // One copy per shard: sort it for the breakdown percentiles,
+            // then move it into the fleet-wide pool (the aggregate sort
+            // below sees pre-sorted runs, so no work is duplicated).
+            let mut own = s.latencies_s.clone();
+            own.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let own_pct = |p: f64| if own.is_empty() { 0.0 } else { percentile_sorted(&own, p) };
+            per_server.push(ServerBreakdown {
+                name: if name.is_empty() {
+                    format!("s{}", per_server.len())
+                } else {
+                    name.to_string()
+                },
+                completed: s.completed,
+                shed: s.shed,
+                deadline_violations: s.violations,
+                mean_batch: if s.batches == 0 {
+                    0.0
+                } else {
+                    s.batch_size_sum as f64 / s.batches as f64
+                },
+                latency_p50_s: own_pct(50.0),
+                latency_p95_s: own_pct(95.0),
+                utilization: util,
+            });
+            lats.append(&mut own);
         }
+        // Kept as a flat view of per_server (single source: the loop above).
+        let utilization: Vec<f64> = per_server.iter().map(|b| b.utilization).collect();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
         FleetReport {
@@ -115,6 +175,7 @@ impl FleetReport {
             energy_mean_j: if completed == 0 { 0.0 } else { energy / completed as f64 },
             mean_batch: if batches == 0 { 0.0 } else { batch_sum as f64 / batches as f64 },
             utilization,
+            per_server,
             horizon_s,
             wall_s,
         }
@@ -193,6 +254,34 @@ impl FleetReport {
         ]
     }
 
+    /// Per-server breakdown table — which tier carried what on a
+    /// heterogeneous pool.
+    pub fn server_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title).header(&[
+            "server",
+            "completed",
+            "shed",
+            "viol",
+            "batch",
+            "p50 (ms)",
+            "p95 (ms)",
+            "util %",
+        ]);
+        for b in &self.per_server {
+            t.row(vec![
+                b.name.clone(),
+                format!("{}", b.completed),
+                format!("{}", b.shed),
+                format!("{}", b.deadline_violations),
+                format!("{:.2}", b.mean_batch),
+                format!("{:.1}", b.latency_p50_s * 1e3),
+                format!("{:.1}", b.latency_p95_s * 1e3),
+                format!("{:.0}", b.utilization * 100.0),
+            ]);
+        }
+        t
+    }
+
     /// Header matching [`Self::table_cells`].
     pub fn table(title: &str) -> Table {
         Table::new(title).header(&[
@@ -244,6 +333,40 @@ mod tests {
         assert!((rep.throughput() - 1.5).abs() < 1e-12);
         assert!(rep.render().contains("requests=4"));
         assert_eq!(rep.table_cells().len() + 1, 10, "cells align with header");
+        // Per-server breakdown rows with auto names.
+        assert_eq!(rep.per_server.len(), 2);
+        assert_eq!(rep.per_server[0].name, "s0");
+        assert_eq!(rep.per_server[0].completed, 2);
+        assert_eq!(rep.per_server[1].shed, 1);
+        assert!((rep.per_server[0].latency_p50_s - 0.020).abs() < 1e-12);
+        assert!((rep.per_server[1].mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn named_shards_feed_the_breakdown_table() {
+        let mut fast = ShardStats::default();
+        fast.record_completion(0.005, true, 1.0);
+        fast.batches = 1;
+        fast.batch_size_sum = 1;
+        fast.busy_s = 0.2;
+        let mut slow = ShardStats::default();
+        slow.record_completion(0.050, false, 1.0);
+        slow.shed = 2;
+        slow.batches = 1;
+        slow.batch_size_sum = 1;
+        slow.busy_s = 0.8;
+        let rep = FleetReport::from_named_shards(
+            [("fast", &fast), ("slow", &slow)],
+            1.0,
+            1.0,
+            0.0,
+        );
+        assert_eq!(rep.per_server[0].name, "fast");
+        assert_eq!(rep.per_server[1].name, "slow");
+        assert_eq!(rep.per_server[1].deadline_violations, 1);
+        assert!(rep.per_server[0].latency_p95_s < rep.per_server[1].latency_p95_s);
+        let rendered = rep.server_table("breakdown").render();
+        assert!(rendered.contains("fast") && rendered.contains("slow"));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!   fleet       run the sharded multi-server fleet engine
 //!   train       train a DDPG agent and print the learning curve
 //!   experiment  regenerate a paper table/figure (fig3 fig5 fig6 fig7
-//!               table3 fig8 table5 fleet, or `all`)
+//!               table3 fig8 table5 fleet fleet-hetero, or `all`)
 
 use std::sync::Arc;
 
@@ -17,13 +17,16 @@ use batchedge::algo::{baselines, feasibility, ipssa, og, Solver};
 use batchedge::config::SystemConfig;
 use batchedge::coordinator::Coordinator;
 use batchedge::experiments;
-use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport};
-use batchedge::scenario::PopulationArrivals;
+use batchedge::fleet::{
+    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, ServerProfile,
+};
 use batchedge::rl::env::SchedulerAlg;
 use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
 use batchedge::rl::train::{train, TrainConfig};
 use batchedge::runtime::{default_artifacts_root, profiler, Runtime};
-use batchedge::scenario::{ArrivalKind, ArrivalProcess, Scenario};
+use batchedge::scenario::{
+    mixed_gpu_tiers, ArrivalKind, ArrivalProcess, PopulationArrivals, Scenario,
+};
 use batchedge::util::cli::{Cli, CliError};
 use batchedge::util::rng::Rng;
 use batchedge::util::table::Table;
@@ -243,22 +246,43 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .opt("users", Some("100000"), "population size U")
         .opt("rate", Some("0.05"), "mean requests/s per user")
         .opt("horizon", Some("10"), "model-time horizon (s)")
-        .opt("policy", Some("jsq"), "rr|jsq|p2c|deadline|all")
+        .opt("policy", Some("jsq"), "rr|jsq|p2c|deadline|jsq-count|p2c-count|all")
         .opt("max-batch", Some("16"), "dynamic batching: largest batch")
         .opt("max-delay-ms", Some("10"), "dynamic batching: partial-batch delay")
+        .opt("bandwidth-mhz", Some("20"), "serving uplink carrier per cell")
         .opt("seed", Some("1"), "rng seed")
-        .switch("skewed", "run the last quarter of servers at 0.25x speed");
+        .switch("skewed", "run the last quarter of servers at 0.25x speed")
+        .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)");
     let args = cli.parse(argv)?;
     let cfg = net_cfg(args.str("net").unwrap())?;
+    let bandwidth_mhz = args.f64("bandwidth-mhz")?;
+    anyhow::ensure!(bandwidth_mhz > 0.0, "--bandwidth-mhz must be positive");
+    let mut cfg_serving = (*cfg).clone();
+    cfg_serving.radio.bandwidth_hz = bandwidth_mhz * 1e6;
+    let cfg = Arc::new(cfg_serving);
     let servers = args.usize("servers")?;
     let users = args.usize("users")?;
     let policies: Vec<DispatchPolicy> = match args.str("policy").unwrap() {
         "all" => DispatchPolicy::ALL.to_vec(),
-        p => vec![DispatchPolicy::parse(p)
-            .ok_or_else(|| anyhow!("unknown policy {p} (rr|jsq|p2c|deadline|all)"))?],
+        p => vec![DispatchPolicy::parse(p).ok_or_else(|| {
+            anyhow!("unknown policy {p} (rr|jsq|p2c|deadline|jsq-count|p2c-count|all)")
+        })?],
     };
+    anyhow::ensure!(
+        !(args.has("skewed") && args.has("hetero")),
+        "--skewed and --hetero are mutually exclusive"
+    );
+    anyhow::ensure!(
+        !args.has("hetero") || servers >= 2,
+        "--hetero needs at least two servers (1 fast + N-1 slow)"
+    );
     let speeds = if args.has("skewed") {
         experiments::fleet::skewed_speeds(servers)
+    } else {
+        Vec::new()
+    };
+    let profiles = if args.has("hetero") {
+        ServerProfile::from_tiers(&cfg, &mixed_gpu_tiers(servers))
     } else {
         Vec::new()
     };
@@ -272,12 +296,16 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         cfg.net.name,
         args.f64("rate")?
     ));
+    // Breakdown shown for JSQ when it ran (the headline policy), else the
+    // last policy requested.
+    let mut breakdown = None;
     for policy in policies {
         let arrivals =
             PopulationArrivals::stationary(&cfg.net.name, users, args.f64("rate")?);
         let fleet = FleetCfg {
             servers,
             speeds: speeds.clone(),
+            profiles: profiles.clone(),
             batch,
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
@@ -287,8 +315,18 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         let mut cells = vec![policy.name().to_string()];
         cells.extend(rep.table_cells());
         t.row(cells);
+        let prefer = policy == DispatchPolicy::ShortestQueue;
+        if prefer || !matches!(breakdown, Some((DispatchPolicy::ShortestQueue, _))) {
+            breakdown = Some((policy, rep));
+        }
     }
     print!("{}", t.render());
+    if args.has("hetero") {
+        if let Some((policy, rep)) = breakdown {
+            let title = format!("per-server breakdown ({})", policy.name());
+            print!("{}", rep.server_table(&title).render());
+        }
+    }
     Ok(())
 }
 
@@ -332,7 +370,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cli = Cli::new("batchedge experiment", "regenerate a paper table/figure")
-        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|fleet|all")
+        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|fleet|fleet-hetero|all")
         .switch("quick", "smoke-scale parameters");
     let args = cli.parse(argv)?;
     let id = args.positional.first().map(String::as_str).unwrap_or("all");

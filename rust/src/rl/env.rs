@@ -133,8 +133,9 @@ pub struct OnlineEnv {
     lcp_fmax: f64,
     e_fmax: f64,
     /// Shared solve context: profile/device tables built once per episode
+    /// — or handed in by a fleet pool so same-config shards share one —
     /// and reused by every scheduler call (`algo::ctx`).
-    tables: ProfileTables,
+    tables: Arc<ProfileTables>,
 }
 
 impl OnlineEnv {
@@ -147,6 +148,24 @@ impl OnlineEnv {
         slot_s: f64,
         rng: &mut Rng,
     ) -> OnlineEnv {
+        let tables = Arc::new(ProfileTables::new(cfg, m));
+        Self::with_tables(cfg, m, arrivals, alg, slot_s, rng, tables)
+    }
+
+    /// [`Self::new`] with a caller-provided solve context, so same-config
+    /// shards (e.g. a [`CoordinatorPool`](crate::fleet::CoordinatorPool))
+    /// build the dense tables once per fleet instead of once per shard.
+    pub fn with_tables(
+        cfg: &Arc<SystemConfig>,
+        m: usize,
+        arrivals: ArrivalProcess,
+        alg: SchedulerAlg,
+        slot_s: f64,
+        rng: &mut Rng,
+        tables: Arc<ProfileTables>,
+    ) -> OnlineEnv {
+        assert!(Arc::ptr_eq(tables.cfg(), cfg), "tables built from a different SystemConfig");
+        assert!(tables.b_cap() >= m, "tables tabulate fewer batches than M");
         let users = (0..m)
             .map(|_| {
                 let (d, up, dn) = cfg.radio.draw_user(rng);
@@ -156,7 +175,6 @@ impl OnlineEnv {
         let n = cfg.net.n();
         let lcp_fmax = cfg.device.prefix_latency_fmax(&cfg.profile, n);
         let e_fmax = cfg.device.prefix_energy_fmax(&cfg.profile, n);
-        let tables = ProfileTables::new(cfg, m);
         OnlineEnv {
             cfg: Arc::clone(cfg),
             users,

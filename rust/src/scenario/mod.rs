@@ -72,8 +72,15 @@ impl Scenario {
     /// Sub-scenario over a user subset (OG groups). Indices refer to
     /// `self.users`; order is preserved.
     pub fn subset(&self, idx: &[usize]) -> Scenario {
+        self.subset_with(idx, &self.cfg)
+    }
+
+    /// Sub-scenario over a user subset, re-homed onto a different system
+    /// config (multi-GPU pools where each GPU serves with its own
+    /// profile). Indices refer to `self.users`; order is preserved.
+    pub fn subset_with(&self, idx: &[usize], cfg: &Arc<SystemConfig>) -> Scenario {
         Scenario {
-            cfg: Arc::clone(&self.cfg),
+            cfg: Arc::clone(cfg),
             users: idx.iter().map(|&i| self.users[i].clone()).collect(),
         }
     }
@@ -87,6 +94,58 @@ impl Scenario {
         });
         (self.subset(&order), order)
     }
+}
+
+/// One GPU tier of a heterogeneous serving fleet (mixed hardware
+/// generations behind one front door, paper §VI / footnote 1).
+///
+/// A tier describes capability, not placement: `fixed_scale` /
+/// `marginal_scale` reshape the shared `F_n(b)` latency profile
+/// ([`LatencyProfile::rescaled`](crate::dnn::LatencyProfile::rescaled)),
+/// `speed` is a residual scalar, and `mem_items` caps the resident batch.
+/// `fleet::ServerProfile::from_tiers` expands tiers into per-server
+/// profiles.
+#[derive(Debug, Clone)]
+pub struct GpuTierSpec {
+    pub name: String,
+    /// Servers of this tier.
+    pub count: usize,
+    /// Scale on the fixed (`b = 1`) latency share of every `F_n` curve.
+    pub fixed_scale: f64,
+    /// Scale on the marginal (per-sample) latency share above `F_n(1)`.
+    pub marginal_scale: f64,
+    /// Residual relative speed (1.0 = the rescaled curve as-is).
+    pub speed: f64,
+    /// Memory limit in resident batch items (None = uncapped).
+    pub mem_items: Option<usize>,
+}
+
+/// The mixed-generation example pool of ISSUE/§VI: one "fast" server whose
+/// profile is a quarter of the shared curve (a current-generation GPU,
+/// ~4× capacity) plus `servers - 1` "slow" servers on the shared curve
+/// whose memory holds at most 8 resident batch items. With 4 servers this
+/// is the 4:1:1:1 capability skew the heterogeneous dispatch tests and
+/// the `fleet-hetero` experiment sweep.
+pub fn mixed_gpu_tiers(servers: usize) -> Vec<GpuTierSpec> {
+    assert!(servers >= 2, "a mixed pool needs at least two servers");
+    vec![
+        GpuTierSpec {
+            name: "fast".to_string(),
+            count: 1,
+            fixed_scale: 0.25,
+            marginal_scale: 0.25,
+            speed: 1.0,
+            mem_items: None,
+        },
+        GpuTierSpec {
+            name: "slow".to_string(),
+            count: servers - 1,
+            fixed_scale: 1.0,
+            marginal_scale: 1.0,
+            speed: 1.0,
+            mem_items: Some(8),
+        },
+    ]
 }
 
 /// Arrival process kinds for the online setting (paper §V-D).
@@ -250,6 +309,15 @@ mod tests {
         let sub = s.subset(&[2, 0]);
         assert_eq!(sub.users[0], s.users[2]);
         assert_eq!(sub.users[1], s.users[0]);
+    }
+
+    #[test]
+    fn mixed_tiers_cover_the_pool() {
+        let tiers = mixed_gpu_tiers(4);
+        assert_eq!(tiers.iter().map(|t| t.count).sum::<usize>(), 4);
+        assert_eq!(tiers[0].name, "fast");
+        assert!(tiers[0].fixed_scale < 1.0, "fast tier must be faster");
+        assert_eq!(tiers[1].mem_items, Some(8), "slow tier is memory-capped");
     }
 
     #[test]

@@ -1,18 +1,29 @@
-//! Fleet-layer integration tests: dispatch-policy orderings on a skewed
-//! fleet, 100k-user × 8-shard scale with bitwise determinism, and the
-//! N=1 pool-vs-coordinator conservation anchor.
+//! Fleet-layer integration tests: dispatch-policy orderings on skewed
+//! fleets (including the expected-completion-time vs count-based
+//! comparator acceptance), heterogeneous profile plumbing invariance,
+//! drain-edge behavior, 100k-user × 8-shard scale with bitwise
+//! determinism, and the N=1 pool-vs-coordinator conservation anchor.
+//!
+//! All fleet workloads run on the serving-grade uplink
+//! (`experiments::fleet::serving_cfg`): at the offline Table II per-user
+//! 1 MHz, a single input upload outlives every drawn deadline and each
+//! policy degenerates to ~100 % shed — the regime the seed's tests
+//! silently measured.
 
 use std::sync::Arc;
 
 use batchedge::config::SystemConfig;
 use batchedge::coordinator::Coordinator;
+use batchedge::experiments::fleet::serving_cfg;
 use batchedge::fleet::{
     BatchPolicy, CoordinatorPool, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, PoolCfg,
+    ServerProfile,
 };
 use batchedge::rl::env::SchedulerAlg;
 use batchedge::rl::policy::{FixedTwPolicy, OnlinePolicy};
 use batchedge::scenario::{ArrivalKind, ArrivalProcess, PopulationArrivals};
 
+#[allow(clippy::too_many_arguments)]
 fn run_fleet(
     cfg: &Arc<SystemConfig>,
     policy: DispatchPolicy,
@@ -23,8 +34,17 @@ fn run_fleet(
     batch: BatchPolicy,
     seed: u64,
 ) -> FleetReport {
+    let fleet = FleetCfg { servers, speeds, batch, horizon_s, seed, ..FleetCfg::default() };
+    run_cfg(cfg, policy, fleet, users)
+}
+
+fn run_cfg(
+    cfg: &Arc<SystemConfig>,
+    policy: DispatchPolicy,
+    fleet: FleetCfg,
+    users: usize,
+) -> FleetReport {
     let arrivals = PopulationArrivals::stationary(&cfg.net.name, users, 0.05);
-    let fleet = FleetCfg { servers, speeds, batch, horizon_s, seed };
     FleetEngine::new(cfg, fleet, policy.build(), arrivals).run()
 }
 
@@ -36,7 +56,7 @@ fn skewed() -> Vec<f64> {
 
 #[test]
 fn jsq_and_p2c_beat_round_robin_on_skewed_fleet() {
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
     // Keep every request's latency observable: no shedding.
     let batch = BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() };
     let run = |p: DispatchPolicy| run_fleet(&cfg, p, 8, skewed(), 70_000, 5.0, batch, 33);
@@ -71,9 +91,142 @@ fn jsq_and_p2c_beat_round_robin_on_skewed_fleet() {
     );
 }
 
+/// The acceptance scenario: a 4:1:1:1 capability skew (one 4×-fast server,
+/// three memory-capped slow ones) at a fixed seed. Routing on expected
+/// completion time must strictly beat the legacy count-first comparator
+/// on p95 *and* shed rate for both JSQ and P2C — the count signal treats
+/// a fast server mid-batch as "as loaded" as a slow one at equal depth,
+/// overloading the slow trio.
+#[test]
+fn time_based_routing_beats_count_based_on_skewed_pool() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let fast = ServerProfile {
+        name: "fast".into(),
+        speed: 4.0,
+        batch: Some(BatchPolicy { shed_expired: false, max_queue: 64, ..Default::default() }),
+        ..ServerProfile::default()
+    };
+    let slow = ServerProfile {
+        name: "slow".into(),
+        mem_items: Some(8),
+        batch: Some(BatchPolicy { shed_expired: false, max_queue: 32, ..Default::default() }),
+        ..ServerProfile::default()
+    };
+    let fleet = FleetCfg {
+        servers: 4,
+        profiles: vec![fast, slow.clone(), slow.clone(), slow],
+        horizon_s: 5.0,
+        seed: 11,
+        ..FleetCfg::default()
+    };
+    let run = |p: DispatchPolicy| run_cfg(&cfg, p, fleet.clone(), 120_000);
+
+    let jsq = run(DispatchPolicy::ShortestQueue);
+    let jsq_count = run(DispatchPolicy::ShortestQueueCount);
+    let p2c = run(DispatchPolicy::PowerOfTwo);
+    let p2c_count = run(DispatchPolicy::PowerOfTwoCount);
+
+    // Paired workloads: the comparison is apples-to-apples.
+    assert_eq!(jsq.requests, jsq_count.requests);
+    assert_eq!(p2c.requests, p2c_count.requests);
+
+    assert!(
+        jsq.latency_p95_s < jsq_count.latency_p95_s,
+        "time-JSQ p95 {:.1} ms must beat count-JSQ {:.1} ms",
+        jsq.latency_p95_s * 1e3,
+        jsq_count.latency_p95_s * 1e3
+    );
+    assert!(
+        p2c.latency_p95_s < p2c_count.latency_p95_s,
+        "time-P2C p95 {:.1} ms must beat count-P2C {:.1} ms",
+        p2c.latency_p95_s * 1e3,
+        p2c_count.latency_p95_s * 1e3
+    );
+    assert!(
+        jsq_count.shed_rate() > 1.5 * jsq.shed_rate(),
+        "count-JSQ must shed much more: {:.3} vs {:.3}",
+        jsq_count.shed_rate(),
+        jsq.shed_rate()
+    );
+    assert!(
+        p2c_count.shed_rate() > 1.3 * p2c.shed_rate(),
+        "count-P2C must shed more: {:.4} vs {:.4}",
+        p2c_count.shed_rate(),
+        p2c.shed_rate()
+    );
+    assert!(jsq.shed_rate() < 0.2, "time-JSQ keeps the pool serving: {}", jsq.render());
+
+    // Per-server breakdown: the fast tier carries the largest share under
+    // time-based routing.
+    let fast_row = &jsq.per_server[0];
+    assert_eq!(fast_row.name, "fast");
+    let max_slow = jsq.per_server[1..].iter().map(|s| s.completed).max().unwrap();
+    assert!(
+        fast_row.completed > max_slow,
+        "fast tier must carry the most load: {} vs {max_slow}",
+        fast_row.completed
+    );
+}
+
+/// Refactor guard: on a homogeneous pool the per-server profile plumbing
+/// must be invisible — explicit default profiles, explicit shared-profile
+/// `Arc`s and the legacy speeds-only path produce bitwise-identical
+/// reports under every policy (the count policies preserve the exact
+/// pre-refactor comparator semantics).
+#[test]
+fn homogeneous_profile_plumbing_is_bitwise_invisible() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let mk = |profiles: Vec<ServerProfile>| FleetCfg {
+        servers: 4,
+        profiles,
+        horizon_s: 2.0,
+        seed: 9,
+        ..FleetCfg::default()
+    };
+    for policy in DispatchPolicy::ALL {
+        let legacy = run_cfg(&cfg, policy, mk(Vec::new()), 20_000);
+        let defaults = run_cfg(&cfg, policy, mk(vec![ServerProfile::default(); 4]), 20_000);
+        let shared = Arc::new(cfg.profile.clone());
+        let explicit = run_cfg(
+            &cfg,
+            policy,
+            mk((0..4)
+                .map(|_| ServerProfile {
+                    profile: Some(Arc::clone(&shared)),
+                    ..ServerProfile::default()
+                })
+                .collect()),
+            20_000,
+        );
+        for other in [&defaults, &explicit] {
+            assert_eq!(legacy.requests, other.requests, "{}", policy.name());
+            assert_eq!(legacy.completed, other.completed, "{}", policy.name());
+            assert_eq!(legacy.shed, other.shed, "{}", policy.name());
+            assert_eq!(
+                legacy.latency_p50_s.to_bits(),
+                other.latency_p50_s.to_bits(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(
+                legacy.latency_p95_s.to_bits(),
+                other.latency_p95_s.to_bits(),
+                "{}",
+                policy.name()
+            );
+            assert_eq!(
+                legacy.energy_mean_j.to_bits(),
+                other.energy_mean_j.to_bits(),
+                "{}",
+                policy.name()
+            );
+        }
+    }
+}
+
 #[test]
 fn fleet_serves_100k_users_across_8_shards_deterministically() {
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
     let run = || {
         run_fleet(
             &cfg,
@@ -110,7 +263,7 @@ fn fleet_serves_100k_users_across_8_shards_deterministically() {
 
 #[test]
 fn deadline_aware_policy_is_competitive_on_skewed_fleet() {
-    let cfg = SystemConfig::mobilenet_default();
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
     let batch = BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() };
     let rr = run_fleet(&cfg, DispatchPolicy::RoundRobin, 8, skewed(), 70_000, 5.0, batch, 21);
     let da = run_fleet(&cfg, DispatchPolicy::DeadlineAware, 8, skewed(), 70_000, 5.0, batch, 21);
@@ -121,6 +274,70 @@ fn deadline_aware_policy_is_competitive_on_skewed_fleet() {
         rr.latency_p95_s * 1e3
     );
     assert!(da.violation_rate() < rr.violation_rate() + 1e-12);
+}
+
+/// Drain edge: when the first arrival lands after the horizon the run has
+/// zero events — the report must be all-zeros with finite utilization,
+/// not NaN.
+#[test]
+fn empty_horizon_reports_zeros_without_nan() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    // 4 users at 1e-6 Hz: the first arrival is ~10⁵–10⁶ s out, far past
+    // the 0.5 s horizon for any seed.
+    let arrivals = PopulationArrivals {
+        users: 4,
+        rate_per_user_hz: 1e-6,
+        l_low: 0.05,
+        l_high: 0.2,
+        peak_factor: 1.0,
+        period_s: 1.0,
+    };
+    let fleet = FleetCfg { servers: 3, horizon_s: 0.5, seed: 13, ..FleetCfg::default() };
+    let rep =
+        FleetEngine::new(&cfg, fleet, DispatchPolicy::ShortestQueue.build(), arrivals).run();
+    assert_eq!(rep.requests, 0);
+    assert_eq!(rep.completed, 0);
+    assert_eq!(rep.shed, 0);
+    assert_eq!(rep.latency_p50_s, 0.0);
+    assert_eq!(rep.latency_p99_s, 0.0);
+    assert_eq!(rep.mean_batch, 0.0);
+    assert!(rep.shed_rate() == 0.0 && rep.violation_rate() == 0.0);
+    assert_eq!(rep.utilization, vec![0.0; 3], "no NaN utilization on an event-free run");
+    assert!(rep.utilization_mean().is_finite());
+    assert_eq!(rep.per_server.len(), 3);
+}
+
+/// Drain edge: a launch window where *every* waiting request has expired
+/// exercises `try_launch`'s empty-batch `continue` path — the engine must
+/// shed them all and terminate cleanly instead of spinning or serving
+/// ghosts.
+#[test]
+fn launch_window_of_expired_requests_sheds_and_terminates() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    // Deadlines of ~10 µs expire during their own upload (~20 ms); a long
+    // partial-batch delay guarantees the timer path finds only corpses.
+    let arrivals = PopulationArrivals {
+        users: 16,
+        rate_per_user_hz: 1.0,
+        l_low: 1e-5,
+        l_high: 2e-5,
+        peak_factor: 1.0,
+        period_s: 1.0,
+    };
+    let batch = BatchPolicy {
+        max_batch: 1024,
+        max_delay_s: 0.05,
+        max_queue: 2048,
+        shed_expired: true,
+    };
+    let fleet = FleetCfg { servers: 1, batch, horizon_s: 1.0, seed: 17, ..FleetCfg::default() };
+    let rep =
+        FleetEngine::new(&cfg, fleet, DispatchPolicy::RoundRobin.build(), arrivals).run();
+    assert!(rep.requests > 3, "workload must offer requests: {}", rep.requests);
+    assert_eq!(rep.completed, 0, "every request expired before launch");
+    assert_eq!(rep.shed, rep.requests, "all shed at launch windows");
+    assert_eq!(rep.latency_p95_s, 0.0);
+    assert!(rep.utilization_mean() == 0.0, "no batch ever served");
 }
 
 #[test]
