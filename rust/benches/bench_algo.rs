@@ -16,10 +16,12 @@ use batchedge::util::rng::Rng;
 
 fn main() {
     let reps = if common::quick() { 5 } else { 30 };
+    // BATCHEDGE_BENCH_MAX_M caps every M axis (CI smoke runs use 12).
+    let m_cap = common::max_m().unwrap_or(usize::MAX);
     let cfg = SystemConfig::dssd3_default();
     let mut recs = Vec::new();
 
-    for &m in &[2usize, 4, 8, 14, 32, 64] {
+    for &m in [2usize, 4, 8, 14, 32, 64].iter().filter(|&&m| m <= m_cap) {
         let s = Scenario::draw(&cfg, m, &mut Rng::seed_from(1));
         recs.push(common::bench(&format!("alg1/traverse M={m}"), 2, reps, || {
             let p = traverse::solve_with_batch(&s, cfg.deadline_s, 1).unwrap();
@@ -27,7 +29,7 @@ fn main() {
         }));
     }
 
-    for &m in &[2usize, 4, 8, 14, 32, 64] {
+    for &m in [2usize, 4, 8, 14, 32, 64].iter().filter(|&&m| m <= m_cap) {
         let s = Scenario::draw(&cfg, m, &mut Rng::seed_from(2));
         recs.push(common::bench(&format!("alg2/ip-ssa M={m}"), 2, reps, || {
             std::hint::black_box(ipssa::solve(&s).total_energy());
@@ -37,7 +39,7 @@ fn main() {
     // OG (Table V: the expensive one — the reference grows ~M^4, the
     // context-backed path ~M^3). Fixed seed 3 so the fast/ref pairs and
     // the cross-PR trajectory compare like for like.
-    for &m in &[2usize, 4, 8, 14, 20, 32, 64] {
+    for &m in [2usize, 4, 8, 14, 20, 32, 64].iter().filter(|&&m| m <= m_cap) {
         let s = Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(3));
         let r = if m > 14 { reps / 3 + 1 } else { reps };
         recs.push(common::bench(&format!("alg3/og M={m}"), 1, r, || {
@@ -47,7 +49,7 @@ fn main() {
 
     // Naive reference points (the oracle): capped at M=20 — the O(M⁴N)
     // path grows another ~(64/20)⁴ ≈ 100× by M=64.
-    for &m in &[2usize, 4, 8, 14, 20] {
+    for &m in [2usize, 4, 8, 14, 20].iter().filter(|&&m| m <= m_cap) {
         let s = Scenario::draw_mixed_deadlines(&cfg, m, 0.25, 1.0, &mut Rng::seed_from(3));
         let r = if m > 14 { reps / 3 + 1 } else { reps };
         recs.push(common::bench(&format!("alg3/og-ref M={m}"), 1, r, || {
@@ -56,15 +58,17 @@ fn main() {
     }
 
     // Mobilenet flavour at the Table-V operating point.
-    let cfg = SystemConfig::mobilenet_default();
-    let s = Scenario::draw_mixed_deadlines(&cfg, 14, 0.05, 0.2, &mut Rng::seed_from(4));
-    recs.push(common::bench("alg3/og mobilenet M=14 (Table V)", 1, reps, || {
-        std::hint::black_box(og::solve(&s).total_energy());
-    }));
-    let s2 = Scenario::draw(&cfg, 14, &mut Rng::seed_from(5));
-    recs.push(common::bench("alg2/ip-ssa mobilenet M=14 (Table V)", 2, reps, || {
-        std::hint::black_box(ipssa::solve(&s2).total_energy());
-    }));
+    if 14 <= m_cap {
+        let cfg = SystemConfig::mobilenet_default();
+        let s = Scenario::draw_mixed_deadlines(&cfg, 14, 0.05, 0.2, &mut Rng::seed_from(4));
+        recs.push(common::bench("alg3/og mobilenet M=14 (Table V)", 1, reps, || {
+            std::hint::black_box(og::solve(&s).total_energy());
+        }));
+        let s2 = Scenario::draw(&cfg, 14, &mut Rng::seed_from(5));
+        recs.push(common::bench("alg2/ip-ssa mobilenet M=14 (Table V)", 2, reps, || {
+            std::hint::black_box(ipssa::solve(&s2).total_energy());
+        }));
+    }
 
     common::save_suite("algo", &recs);
 }

@@ -8,14 +8,19 @@
 //!  * a tiered-profile pool (1× fast profile + memory-capped slow servers)
 //!    with its per-server breakdown, and
 //!  * engine wall-clock — events/s of the discrete-event core at 10⁵⁺
-//!    users, the number that makes fleet sweeps tractable.
+//!    users, the number that makes fleet sweeps tractable, persisted as
+//!    an ns/event point (plus the fluid-mode wall) to `BENCH_fleet.json`.
 //!
 //! `BATCHEDGE_BENCH_QUICK=1` shrinks everything for smoke runs.
 
 mod common;
 
-use batchedge::experiments::fleet::{run_fleet, run_fleet_cfg, serving_cfg, skewed_speeds};
-use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, ServerProfile};
+use std::time::Instant;
+
+use batchedge::experiments::fleet::{
+    run_fleet, run_fleet_cfg, run_fleet_fluid, serving_cfg, skewed_speeds,
+};
+use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FluidCfg, ServerProfile};
 use batchedge::scenario::mixed_gpu_tiers;
 
 fn main() {
@@ -82,9 +87,10 @@ fn main() {
     }
 
     // --- Engine throughput: how fast the event core chews requests.
+    let mut recs = Vec::new();
     let reps = if quick { 2 } else { 5 };
     for &users in if quick { &[20_000usize][..] } else { &[20_000usize, 100_000, 400_000][..] } {
-        common::bench(&format!("fleet/jsq 8 servers U={users}"), 1, reps, || {
+        recs.push(common::bench(&format!("fleet/jsq 8 servers U={users}"), 1, reps, || {
             let rep = run_fleet(
                 &cfg,
                 DispatchPolicy::ShortestQueue,
@@ -96,6 +102,70 @@ fn main() {
                 7,
             );
             std::hint::black_box(rep.completed);
+        }));
+    }
+
+    // --- Raw event-core rate: ns per delivered event of the index-heap
+    //     core (the reciprocal of events/s, so lower-is-better matches
+    //     the regression gate). Persisted — this is the PR-to-PR number.
+    {
+        let users = if quick { 20_000 } else { 100_000 };
+        let (mut mean_ns_ev, mut min_ns_ev, mut last_rate) = (0.0f64, f64::INFINITY, 0.0f64);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let rep = run_fleet(
+                &cfg,
+                DispatchPolicy::ShortestQueue,
+                8,
+                Vec::new(),
+                users,
+                0.05,
+                horizon,
+                7,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            let ns_ev = dt * 1e9 / rep.events as f64;
+            mean_ns_ev += ns_ev / reps as f64;
+            min_ns_ev = min_ns_ev.min(ns_ev);
+            last_rate = rep.events as f64 / dt;
+        }
+        println!(
+            "bench fleet/event-core ns/event                     mean {mean_ns_ev:>10.1} ns  \
+             min {min_ns_ev:>10.1} ns  ({:.2}M events/s)",
+            last_rate / 1e6
+        );
+        recs.push(common::Record {
+            name: format!("fleet/event-core ns-per-event U={users}"),
+            mean_s: mean_ns_ev * 1e-9,
+            min_s: min_ns_ev * 1e-9,
+            reps,
         });
     }
+
+    // --- Fluid mode: the whole pool is one closed-form solve + MC draws;
+    //     512 servers / 10M users should cost about what 8 servers do.
+    {
+        let servers = if quick { 64 } else { 512 };
+        let batch = BatchPolicy {
+            shed_expired: false,
+            max_queue: 1 << 20,
+            max_delay_s: 0.0,
+            ..BatchPolicy::default()
+        };
+        let rec =
+            common::bench(&format!("fleet/fluid {servers} servers"), 1, reps, || {
+                let fleet = FleetCfg {
+                    servers,
+                    batch,
+                    horizon_s: horizon,
+                    seed: 7,
+                    ..FleetCfg::default()
+                };
+                let out = run_fleet_fluid(&cfg, fleet, 20_000 * servers, 0.05, &FluidCfg::default());
+                std::hint::black_box(out.report.completed);
+            });
+        recs.push(rec);
+    }
+
+    common::save_suite("fleet", &recs);
 }

@@ -76,3 +76,10 @@ pub fn save_suite(suite: &str, records: &[Record]) {
 pub fn quick() -> bool {
     std::env::var("BATCHEDGE_BENCH_QUICK").as_deref() == Ok("1")
 }
+
+/// Optional ceiling on the problem-size axis (`BATCHEDGE_BENCH_MAX_M`):
+/// the CI bench-smoke job caps solver sweeps at a small M so the job
+/// measures regressions in seconds instead of minutes.
+pub fn max_m() -> Option<usize> {
+    std::env::var("BATCHEDGE_BENCH_MAX_M").ok()?.parse().ok()
+}

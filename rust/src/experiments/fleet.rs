@@ -24,7 +24,8 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::fleet::{
-    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, ServerProfile,
+    run_fluid, BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, FluidCfg,
+    FluidOutcome, ServerProfile,
 };
 use crate::scenario::{mixed_gpu_tiers, PopulationArrivals};
 use crate::util::json::Json;
@@ -117,6 +118,20 @@ pub fn run_fleet_cfg(
     FleetEngine::new(cfg, fleet, policy.build(), arrivals).run()
 }
 
+/// One fluid-mode run: stable shards through the closed-form oracle
+/// ([`crate::fleet::analytic`]), hot shards event-by-event. Shared by the
+/// experiment, the CLI's `--fluid` flag, the bench and the example.
+pub fn run_fleet_fluid(
+    cfg: &Arc<SystemConfig>,
+    fleet: FleetCfg,
+    population: usize,
+    rate_per_user_hz: f64,
+    fl: &FluidCfg,
+) -> FluidOutcome {
+    let arrivals = PopulationArrivals::stationary(&cfg.net.name, population, rate_per_user_hz);
+    run_fluid(cfg, &fleet, &arrivals, fl)
+}
+
 fn policy_grid_json(grid: &[(&'static str, FleetReport)]) -> Json {
     Json::Obj(
         grid.iter()
@@ -194,6 +209,75 @@ pub fn run(p: &Params) -> Result<()> {
         rep.text(format!("U={users}: {}", r.render()));
     }
     rep.table("scaling", t);
+
+    // --- 3. Fluid mode: closed form vs the event engine on the same
+    //        pool, then fleet scales the event core would grind on.
+    let batch = BatchPolicy {
+        shed_expired: false,
+        max_queue: 1 << 20,
+        max_delay_s: 0.0,
+        ..BatchPolicy::default()
+    };
+    let fleet = FleetCfg {
+        servers: 8,
+        batch,
+        horizon_s: p.horizon_s,
+        seed: p.seed,
+        ..FleetCfg::default()
+    };
+    let users = 160_000; // λ/server = 1 kHz → ρ ≈ 0.7 on mobilenet
+    let mut t = FleetReport::table(&format!(
+        "fluid vs event — 8 homogeneous servers, random dispatch, \
+         {users} users × {} Hz, zero batching delay",
+        p.rate_per_user_hz
+    ));
+    let ev = run_fleet_cfg(&cfg, DispatchPolicy::Random, fleet.clone(), users, p.rate_per_user_hz);
+    let fl = run_fleet_fluid(&cfg, fleet, users, p.rate_per_user_hz, &FluidCfg::default());
+    for (mode, r) in [("event", &ev), ("fluid", &fl.report)] {
+        let mut cells = vec![mode.to_string()];
+        cells.extend(r.table_cells());
+        t.row(cells);
+    }
+    rep.table("fluid_vs_event", t);
+    let balanced = fl.ledger.iter().all(|l| l.balanced());
+    rep.json(
+        "fluid_vs_event",
+        Json::obj(vec![
+            ("event_p50_s", Json::Num(ev.latency_p50_s)),
+            ("fluid_p50_s", Json::Num(fl.report.latency_p50_s)),
+            ("event_util", Json::Num(ev.utilization_mean())),
+            ("fluid_util", Json::Num(fl.report.utilization_mean())),
+            ("fluid_shards", Json::Num(fl.fluid_shards as f64)),
+            ("ledger_balanced", Json::Num(balanced as u8 as f64)),
+        ]),
+    );
+
+    // Fluid-only scale-out: the whole pool is one closed-form solve +
+    // Monte-Carlo draws, so 512 servers / 10M users cost what 8 did.
+    let mut t = FleetReport::table(&format!(
+        "fluid scale-out — homogeneous pools, {} Hz/user, 20k users/server",
+        p.rate_per_user_hz
+    ));
+    for n in [64usize, 512] {
+        let fleet = FleetCfg {
+            servers: n,
+            batch,
+            horizon_s: p.horizon_s,
+            seed: p.seed,
+            ..FleetCfg::default()
+        };
+        let out = run_fleet_fluid(&cfg, fleet, 20_000 * n, p.rate_per_user_hz, &FluidCfg::default());
+        let mut cells = vec![format!("fluid N={n}")];
+        cells.extend(out.report.table_cells());
+        t.row(cells);
+        rep.text(format!(
+            "N={n}: {} fluid / {} event shards, ledger balanced: {}",
+            out.fluid_shards,
+            out.event_shards,
+            out.ledger.iter().all(|l| l.balanced()),
+        ));
+    }
+    rep.table("fluid_scale", t);
     rep.save()
 }
 

@@ -1,0 +1,920 @@
+//! Closed-form batch-service queueing oracle + fluid-scale fleet mode.
+//!
+//! # The model
+//!
+//! A single dynamic-batching edge server as simulated by
+//! [`engine`](super::engine) with one shard and `max_delay_s = 0`:
+//! Poisson(λ) request arrivals, a batch cap `K = max_batch`, and
+//! deterministic batch-size-dependent service
+//! `s(b) = Σ_n F_n(b) / speed` — the paper's batch occupancy (eq. 20)
+//! priced off the server's own [`ServerProfile`](super::ServerProfile)
+//! table. Whenever the server goes idle with a non-empty queue it launches
+//! `min(queue, K)` immediately. This is exactly the *dynamic batching*
+//! policy analysed by Inoue, "Queueing analysis of GPU-based inference
+//! servers with dynamic batching: a closed-form characterization"
+//! (arXiv:1912.06322), whose embedded-chain construction this module
+//! follows; service times here come from the repo's calibrated `F_n(b)`
+//! curves rather than an abstract `s(b)`.
+//!
+//! # Derivation
+//!
+//! Observe the queue at **batch-completion epochs** (for `j = 0`, at the
+//! service completion triggered by the next arrival). With `j` jobs left
+//! behind, the next batch has size `b(j) = min(max(j, 1), K)` and runs
+//! `s_j = s(b(j))`; during it `Poisson(λ·s_j)` new jobs arrive, so the
+//! queue left behind next is `max(j − K, 0) + Poisson(λ·s_j)` — an
+//! embedded Markov chain on ℕ. We truncate it at a depth `J` estimated
+//! from its geometric tail (the decay root `x > 1` of
+//! `K·ln x = λ·s_K·(x − 1)`) and solve the stationary law `q` by the GTH
+//! (Grassmann–Taksar–Heyman) elimination, which is subtraction-free and
+//! hence numerically exact to rounding.
+//!
+//! Renewal–reward over completion cycles (cycle = idle wait `1/λ` if
+//! `j = 0`, plus the service `s_j`) then gives every steady-state
+//! statistic:
+//!
+//! * mean batch size `E[B] = Σ_j q_j·b(j)`,
+//! * utilization `ρ_busy = Σ_j q_j·s_j / E[cycle]`,
+//! * queue length `L_q = Σ_j q_j·(ℓ_j·s_j + λ·s_j²/2) / E[cycle]` with
+//!   `ℓ_j = max(j − K, 0)` (the jobs that keep waiting through the whole
+//!   window, plus the time-average of the Poisson arrivals within it),
+//! * mean wait `W̄_q = L_q / λ` (Little), and the conservation identity
+//!   `λ·E[cycle] = E[B]` used as an internal cross-check.
+//!
+//! The waiting-time *distribution* follows from tagging a Poisson arrival
+//! (PASTA, cycle-length-biased): an arrival at offset `τ` into a service
+//! window of completion-type `j` waits the residual `s_j − τ`, then
+//! `floor((ℓ_j + N(λτ)) / K)` full batches ahead of it — every
+//! intermediate batch is exactly size `K` because the backlog it sees
+//! exceeds `K` until its own batch launches — each costing `s(K)`:
+//!
+//! ```text
+//! P(W ≤ w) = [ q_0 + λ·Σ_j q_j ∫₀^{s_j} P(N(λτ) ≤ (m(τ)+1)K − 1 − ℓ_j) dτ ]
+//!            / (q_0 + λ·Σ_j q_j s_j),   m(τ) = ⌊(w − s_j + τ)/s(K)⌋,
+//! ```
+//!
+//! with the `q_0` atom for the arrival that itself wakes an idle server.
+//! [`QueueSolution::wait_distribution`] evaluates this on a grid (shared
+//! Poisson-CDF tables over the τ axis keep it `O(points · (G·n + J·G))`),
+//! yielding percentiles and a distribution mean that independently
+//! cross-checks Little's law.
+//!
+//! Exactness holds for `max_delay_s = 0` (the differential suite in
+//! `tests/test_analytic.rs` pins the event engine to these formulas); a
+//! positive partial-batch delay makes the oracle an approximation that
+//! degrades as `max_delay_s` approaches `s(1)`.
+//!
+//! # Fluid fleet mode
+//!
+//! [`run_fluid`] scales the oracle out: under random (or round-robin)
+//! dispatch a Poisson(λ) population stream splits into N independent
+//! Poisson(λ/N) shard streams, so every *stable* shard
+//! (`ρ ≤ hot_rho`) is advanced analytically — its report row is
+//! synthesized from the closed form plus Monte-Carlo draws of the radio
+//! uplink (i.i.d. upload displacement preserves the Poisson law at the
+//! queue) — while hot or saturated shards fall back to the event-by-event
+//! [`FleetEngine`](super::FleetEngine) on their thinned stream. A
+//! per-shard conservation ledger (`arrivals = served + shed + in-flight`)
+//! makes the hybrid accounting auditable at any horizon.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::scenario::PopulationArrivals;
+use crate::util::rng::Rng;
+
+use super::engine::{FleetCfg, FleetEngine};
+use super::profile::{self, ResolvedServer, ServerProfile};
+use super::queue::BatchPolicy;
+use super::report::{FleetReport, ShardStats};
+use super::DispatchPolicy;
+
+/// Stability gate: the embedded chain is solved only for
+/// `λ·s(K)/K ≤ RHO_MAX` (truncation depth explodes as ρ → 1).
+pub const RHO_MAX: f64 = 0.95;
+
+/// Hard cap on the truncated chain size (GTH is O(J³)).
+const MAX_STATES: usize = 1536;
+
+/// Poisson tail padding: pmf arrays run to `μ + 12·√(μ+1) + 30`, beyond
+/// which the CDF is 1 to double precision.
+fn poisson_len(mu: f64) -> usize {
+    (mu + 12.0 * (mu + 1.0).sqrt() + 30.0).ceil() as usize
+}
+
+/// `pmf[n] = P(Poisson(mu) = n)` for `n = 0..len`.
+fn poisson_pmf(mu: f64) -> Vec<f64> {
+    let len = poisson_len(mu);
+    let mut p = Vec::with_capacity(len + 1);
+    p.push((-mu).exp());
+    for n in 1..=len {
+        let prev = p[n - 1];
+        p.push(prev * mu / n as f64);
+    }
+    p
+}
+
+/// The single-server dynamic-batching queue model.
+#[derive(Debug, Clone)]
+pub struct BatchQueueModel {
+    /// Poisson arrival rate at this server (requests/s).
+    pub lambda_hz: f64,
+    /// `service_s[b-1] = s(b) = Σ_n F_n(b) / speed` for `b = 1..=K`.
+    pub service_s: Vec<f64>,
+    /// Batch cap `K`.
+    pub max_batch: usize,
+}
+
+/// Outcome of [`BatchQueueModel::solve`].
+#[derive(Debug, Clone)]
+pub enum BatchQueueAnalysis {
+    /// The chain is positive recurrent; closed-form statistics inside.
+    Stable(QueueSolution),
+    /// Offered load at or beyond the stability gate — no steady state
+    /// (or none the truncated solver will certify).
+    Saturated {
+        /// Shed-free throughput capacity `max_b b / s(b)` (req/s).
+        capacity_hz: f64,
+        /// Drift ratio `λ·s(K)/K`.
+        rho: f64,
+    },
+}
+
+impl BatchQueueAnalysis {
+    /// The stable solution, or a panic with the saturation diagnosis.
+    pub fn expect_stable(self) -> QueueSolution {
+        match self {
+            BatchQueueAnalysis::Stable(s) => s,
+            BatchQueueAnalysis::Saturated { capacity_hz, rho } => {
+                panic!("queue saturated: rho={rho:.3}, capacity={capacity_hz:.1} req/s")
+            }
+        }
+    }
+}
+
+impl BatchQueueModel {
+    pub fn new(lambda_hz: f64, service_s: Vec<f64>, max_batch: usize) -> BatchQueueModel {
+        assert!(lambda_hz > 0.0, "arrival rate must be positive");
+        assert!(max_batch >= 1 && service_s.len() == max_batch, "need s(1)..s(K)");
+        assert!(service_s.iter().all(|&s| s > 0.0), "service times must be positive");
+        BatchQueueModel { lambda_hz, service_s, max_batch }
+    }
+
+    /// Price the model off a resolved server: `s(b)` from its own
+    /// occupancy table and speed, `K` from its effective batch policy.
+    pub fn from_resolved(rs: &ResolvedServer, lambda_hz: f64) -> BatchQueueModel {
+        let k = rs.batch.max_batch;
+        let service = (1..=k).map(|b| rs.occupancy.total(b) / rs.speed).collect();
+        BatchQueueModel::new(lambda_hz, service, k)
+    }
+
+    /// Price the model off a [`ServerProfile`] under the fleet-shared
+    /// config and batch policy (the single-server entry point mirroring
+    /// what the engine resolves per shard).
+    pub fn from_profile(
+        cfg: &SystemConfig,
+        server: &ServerProfile,
+        shared: BatchPolicy,
+        lambda_hz: f64,
+    ) -> BatchQueueModel {
+        let resolved = profile::resolve(cfg, std::slice::from_ref(server), shared);
+        BatchQueueModel::from_resolved(&resolved[0], lambda_hz)
+    }
+
+    /// `s(b)`, 1-indexed.
+    #[inline]
+    fn s(&self, b: usize) -> f64 {
+        self.service_s[b - 1]
+    }
+
+    /// Shed-free throughput capacity `max_b b / s(b)` (req/s). For
+    /// profiles with non-increasing marginal cost (all calibrated `F_n`
+    /// curves here) the max sits at `b = K`, where it coincides with the
+    /// stability bound `K / s(K)`.
+    pub fn capacity_hz(&self) -> f64 {
+        (1..=self.max_batch)
+            .map(|b| b as f64 / self.s(b))
+            .fold(0.0, f64::max)
+    }
+
+    /// Drift ratio `λ·s(K)/K` — the chain is positive recurrent iff
+    /// `rho < 1`.
+    pub fn rho(&self) -> f64 {
+        self.lambda_hz * self.s(self.max_batch) / self.max_batch as f64
+    }
+
+    /// Truncation depth from the geometric tail-decay root `x > 1` of
+    /// `K·ln x = λ·s_K·(x − 1)`: the stationary tail decays like
+    /// `r^j` with `r = 1/x`, so `J = K + log_r(1e-16)` keeps the lost
+    /// mass below double-precision noise.
+    fn truncation_depth(&self) -> usize {
+        let k = self.max_batch as f64;
+        let mu = self.lambda_hz * self.s(self.max_batch);
+        let f = |x: f64| k * x.ln() - mu * (x - 1.0);
+        // f(1) = 0, f'(1) = K − μ > 0 under stability, f → −∞: bracket
+        // the far root by doubling, then bisect.
+        let mut hi = 2.0;
+        while f(hi) > 0.0 && hi < 1e9 {
+            hi *= 2.0;
+        }
+        let mut lo = 1.0 + 1e-12;
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if f(mid) > 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let r = 1.0 / lo;
+        let extra = (1e-16f64.ln() / r.ln().min(-1e-12)).ceil() as usize;
+        (self.max_batch + extra).clamp(64, MAX_STATES)
+    }
+
+    /// Stationary law of the embedded chain on `{0..J}` by GTH
+    /// elimination (row-stochastic after truncation renormalization).
+    fn stationary(&self, j_states: usize) -> Vec<f64> {
+        let j_states = j_states.min(MAX_STATES);
+        let k = self.max_batch;
+        // One Poisson pmf per batch size.
+        let pmfs: Vec<Vec<f64>> =
+            (1..=k).map(|b| poisson_pmf(self.lambda_hz * self.s(b))).collect();
+        // Dense row-major transition matrix of the truncated chain.
+        let n = j_states;
+        let mut a = vec![0.0f64; n * n];
+        for j in 0..n {
+            let b = j.clamp(1, k);
+            let left = j.saturating_sub(k);
+            let pm = &pmfs[b - 1];
+            let hi = pm.len().min(n - left);
+            let row = &mut a[j * n..(j + 1) * n];
+            row[left..left + hi].copy_from_slice(&pm[..hi]);
+            let sum: f64 = row.iter().sum();
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        // GTH: eliminate states from the top down; no subtractions, so
+        // the result is accurate to rounding even for stiff chains.
+        for m in (1..n).rev() {
+            let (low, high) = a.split_at_mut(m * n);
+            let row_m = &high[..m];
+            let sc: f64 = row_m.iter().sum();
+            for i in 0..m {
+                let factor = low[i * n + m] / sc;
+                if factor == 0.0 {
+                    continue;
+                }
+                for (col, &rv) in row_m.iter().enumerate() {
+                    low[i * n + col] += factor * rv;
+                }
+            }
+        }
+        let mut pi = vec![0.0f64; n];
+        pi[0] = 1.0;
+        for m in 1..n {
+            let sc: f64 = a[m * n..m * n + m].iter().sum();
+            let num: f64 = (0..m).map(|i| pi[i] * a[i * n + m]).sum();
+            pi[m] = num / sc;
+        }
+        let total: f64 = pi.iter().sum();
+        for v in &mut pi {
+            *v /= total;
+        }
+        pi
+    }
+
+    /// Solve the model: stationary law + every derived statistic.
+    pub fn solve(&self) -> BatchQueueAnalysis {
+        let rho = self.rho();
+        if rho > RHO_MAX {
+            return BatchQueueAnalysis::Saturated { capacity_hz: self.capacity_hz(), rho };
+        }
+        let mut depth = self.truncation_depth();
+        let q = loop {
+            let q = self.stationary(depth);
+            // Accept once the top decile carries negligible mass (the
+            // truncation didn't bite); otherwise deepen.
+            let tail: f64 = q[(9 * q.len()) / 10..].iter().sum();
+            if tail < 1e-9 || depth >= MAX_STATES {
+                break q;
+            }
+            depth = (depth * 2).min(MAX_STATES);
+        };
+        let lam = self.lambda_hz;
+        let k = self.max_batch;
+        let (mut cycle, mut mean_batch, mut busy, mut lq_num, mut jobs, mut job_svc) =
+            (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        for (j, &qj) in q.iter().enumerate() {
+            let b = j.clamp(1, k);
+            let sj = self.s(b);
+            let lj = j.saturating_sub(k) as f64;
+            cycle += qj * (sj + if j == 0 { 1.0 / lam } else { 0.0 });
+            mean_batch += qj * b as f64;
+            busy += qj * sj;
+            lq_num += qj * (lj * sj + lam * sj * sj / 2.0);
+            jobs += qj * b as f64;
+            job_svc += qj * b as f64 * sj;
+        }
+        let utilization = busy / cycle;
+        let mean_wait_s = lq_num / cycle / lam;
+        let mean_service_s = job_svc / jobs;
+        BatchQueueAnalysis::Stable(QueueSolution {
+            lambda_hz: lam,
+            max_batch: k,
+            service_s: self.service_s.clone(),
+            q,
+            mean_batch,
+            utilization,
+            mean_wait_s,
+            mean_service_s,
+            mean_response_s: mean_wait_s + mean_service_s,
+            mean_cycle_s: cycle,
+            capacity_hz: self.capacity_hz(),
+            rho,
+        })
+    }
+}
+
+/// Closed-form steady-state solution of one dynamic-batching server.
+#[derive(Debug, Clone)]
+pub struct QueueSolution {
+    pub lambda_hz: f64,
+    pub max_batch: usize,
+    /// `service_s[b-1] = s(b)`.
+    pub service_s: Vec<f64>,
+    /// Stationary law of the queue length at batch-completion epochs.
+    pub q: Vec<f64>,
+    /// Mean launched batch size `E[B]`.
+    pub mean_batch: f64,
+    /// Long-run busy fraction.
+    pub utilization: f64,
+    /// Mean queueing wait `W̄_q` (Little's law on `L_q`).
+    pub mean_wait_s: f64,
+    /// Job-mean service time `E[s(B̂)]` under the size-biased batch law
+    /// (the batch a *job* finds itself in, not the batch average).
+    pub mean_service_s: f64,
+    /// `W̄_q + E[s(B̂)]` — queue-side mean response (excludes upload).
+    pub mean_response_s: f64,
+    /// Mean completion-cycle length (internal; conservation checks).
+    pub mean_cycle_s: f64,
+    /// Shed-free throughput capacity (req/s).
+    pub capacity_hz: f64,
+    /// Drift ratio `λ·s(K)/K`.
+    pub rho: f64,
+}
+
+impl QueueSolution {
+    /// Relative error of the renewal identity `λ·E[cycle] = E[B]` — a
+    /// solver self-check that should sit at rounding noise.
+    pub fn conservation_error(&self) -> f64 {
+        (self.mean_batch / self.mean_cycle_s - self.lambda_hz).abs() / self.lambda_hz
+    }
+
+    /// Size-biased batch law: `P(a tagged job's batch has size b)`,
+    /// 1-indexed as `law[b-1]`. This is the law to sample a job's own
+    /// service time from.
+    pub fn job_batch_law(&self) -> Vec<f64> {
+        let mut law = vec![0.0; self.max_batch];
+        for (j, &qj) in self.q.iter().enumerate() {
+            let b = j.clamp(1, self.max_batch);
+            law[b - 1] += qj * b as f64;
+        }
+        let total: f64 = law.iter().sum();
+        for v in &mut law {
+            *v /= total;
+        }
+        law
+    }
+
+    /// `P(W ≤ w)` for the queueing wait of a tagged (PASTA) arrival.
+    pub fn wait_cdf(&self, w: f64) -> f64 {
+        self.wait_cdf_grid(&[w])[0]
+    }
+
+    /// Batched CDF evaluation sharing the per-τ Poisson tables across
+    /// all `w` values and chain states.
+    fn wait_cdf_grid(&self, ws: &[f64]) -> Vec<f64> {
+        const G: usize = 256;
+        let lam = self.lambda_hz;
+        let k = self.max_batch;
+        let sk = self.service_s[k - 1];
+        let den = self.q[0]
+            + lam
+                * self
+                    .q
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &qj)| qj * self.service_s[j.clamp(1, k) - 1])
+                    .sum::<f64>();
+        // Shared τ grid over [0, s_K]; prefix Poisson CDFs per grid point.
+        let h = sk / G as f64;
+        let prefix: Vec<Vec<f64>> = (0..=G)
+            .map(|i| {
+                let mut p = poisson_pmf(lam * h * i as f64);
+                let mut acc = 0.0;
+                for v in &mut p {
+                    acc += *v;
+                    *v = acc;
+                }
+                p
+            })
+            .collect();
+        let cdf_at = |i: usize, thr: isize| -> f64 {
+            if thr < 0 {
+                0.0
+            } else if (thr as usize) >= prefix[i].len() {
+                1.0
+            } else {
+                prefix[i][thr as usize]
+            }
+        };
+        // Exact CDF at an off-grid μ (state endpoints τ = s_j < s_K).
+        let cdf_exact = |mu: f64, thr: isize| -> f64 {
+            if thr < 0 {
+                return 0.0;
+            }
+            let pm = poisson_pmf(mu);
+            pm.iter().take(thr as usize + 1).sum::<f64>().min(1.0)
+        };
+        let g_of = |w: f64, tau: f64, sj: f64, lj: f64, val: &dyn Fn(isize) -> f64| -> f64 {
+            let rem = sj - tau;
+            if w < rem - 1e-15 {
+                return 0.0;
+            }
+            let m = if sk > 0.0 { ((w - rem) / sk).floor() as isize } else { isize::MAX };
+            val((m + 1) * k as isize - 1 - lj as isize)
+        };
+        ws.iter()
+            .map(|&w| {
+                if w < 0.0 {
+                    return 0.0;
+                }
+                // q_0 atom (the waking arrival waits zero), then the
+                // integral over every completion-type's service window —
+                // including j = 0, whose triggered batch of 1 still has
+                // arrivals accumulating behind it.
+                let mut num = self.q[0];
+                for (j, &qj) in self.q.iter().enumerate() {
+                    if qj < 1e-15 {
+                        continue;
+                    }
+                    let b = j.clamp(1, k);
+                    let sj = self.service_s[b - 1];
+                    let lj = j.saturating_sub(k) as f64;
+                    // Trapezoid over the shared grid points inside
+                    // [0, s_j], plus the partial last segment to s_j.
+                    let full = ((sj / sk) * G as f64).floor() as usize;
+                    let full = full.min(G);
+                    let mut integral = 0.0;
+                    let mut prev = g_of(w, 0.0, sj, lj, &|t| cdf_at(0, t));
+                    for i in 1..=full {
+                        let g = g_of(w, h * i as f64, sj, lj, &|t| cdf_at(i, t));
+                        integral += 0.5 * (prev + g) * h;
+                        prev = g;
+                    }
+                    let tau_last = h * full as f64;
+                    if sj > tau_last + 1e-15 {
+                        let g_end = g_of(w, sj, sj, lj, &|t| cdf_exact(lam * sj, t));
+                        integral += 0.5 * (prev + g_end) * (sj - tau_last);
+                    }
+                    num += qj * lam * integral;
+                }
+                (num / den).min(1.0)
+            })
+            .collect()
+    }
+
+    /// Tabulated waiting-time distribution on `points` grid values,
+    /// spanning far enough that the tail mass is below `1e-4`.
+    pub fn wait_distribution(&self, points: usize) -> WaitDist {
+        assert!(points >= 8, "need a non-trivial grid");
+        let mut w_max =
+            self.mean_wait_s * 8.0 + self.service_s[self.max_batch - 1] + 2.0 / self.lambda_hz;
+        for _ in 0..24 {
+            if self.wait_cdf(w_max) >= 1.0 - 1e-4 {
+                break;
+            }
+            w_max *= 2.0;
+        }
+        let w: Vec<f64> =
+            (0..points).map(|i| w_max * i as f64 / (points - 1) as f64).collect();
+        let mut cdf = self.wait_cdf_grid(&w);
+        // Monotonize (grid integration can jitter at rounding scale).
+        for i in 1..cdf.len() {
+            cdf[i] = cdf[i].max(cdf[i - 1]);
+        }
+        WaitDist { w, cdf }
+    }
+}
+
+/// A tabulated waiting-time CDF with inverse-transform helpers.
+#[derive(Debug, Clone)]
+pub struct WaitDist {
+    /// Grid of wait values (s), ascending from 0.
+    pub w: Vec<f64>,
+    /// `cdf[i] = P(W ≤ w[i])`, non-decreasing.
+    pub cdf: Vec<f64>,
+}
+
+impl WaitDist {
+    /// `p`-quantile by monotone linear interpolation (`p` in `[0, 1]`).
+    pub fn quantile(&self, p: f64) -> f64 {
+        let target = p * self.cdf.last().copied().unwrap_or(1.0);
+        if target <= self.cdf[0] {
+            return self.w[0];
+        }
+        match self.cdf.iter().position(|&c| c >= target) {
+            Some(i) => {
+                let (c0, c1) = (self.cdf[i - 1], self.cdf[i]);
+                let t = if c1 > c0 { (target - c0) / (c1 - c0) } else { 1.0 };
+                self.w[i - 1] + t * (self.w[i] - self.w[i - 1])
+            }
+            None => *self.w.last().unwrap(),
+        }
+    }
+
+    /// Inverse-transform sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.quantile(rng.f64())
+    }
+
+    /// Mean from the tabulated distribution, `∫ (1 − F) dw` — an
+    /// independent cross-check of the Little's-law mean.
+    pub fn mean(&self) -> f64 {
+        let mut acc = 0.0;
+        for i in 1..self.w.len() {
+            let surv = 0.5 * ((1.0 - self.cdf[i - 1]) + (1.0 - self.cdf[i]));
+            acc += surv * (self.w[i] - self.w[i - 1]);
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fluid fleet mode
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`run_fluid`].
+#[derive(Debug, Clone)]
+pub struct FluidCfg {
+    /// Shards with drift ratio above this stay event-by-event (the
+    /// closed form is solved only for `ρ ≤` [`RHO_MAX`] anyway).
+    pub hot_rho: f64,
+    /// Latency/radio Monte-Carlo draws per analytic shard (report
+    /// percentiles; capped by the shard's served count).
+    pub latency_samples: usize,
+}
+
+impl Default for FluidCfg {
+    fn default() -> Self {
+        FluidCfg { hot_rho: 0.9, latency_samples: 2048 }
+    }
+}
+
+/// Per-shard conservation ledger row: every offered request is accounted
+/// for as served, shed, or still in flight at the horizon.
+#[derive(Debug, Clone)]
+pub struct ShardLedger {
+    pub name: String,
+    /// `true` = advanced analytically; `false` = event-by-event.
+    pub fluid: bool,
+    /// Drift ratio of this shard's thinned stream.
+    pub rho: f64,
+    pub arrivals: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub in_flight: u64,
+}
+
+impl ShardLedger {
+    /// `arrivals = served + shed + in_flight`, exactly.
+    pub fn balanced(&self) -> bool {
+        self.arrivals == self.served + self.shed + self.in_flight
+    }
+}
+
+/// Result of a fluid-mode fleet run.
+#[derive(Debug)]
+pub struct FluidOutcome {
+    pub report: FleetReport,
+    pub ledger: Vec<ShardLedger>,
+    /// Shards advanced analytically.
+    pub fluid_shards: usize,
+    /// Shards run event-by-event.
+    pub event_shards: usize,
+}
+
+/// Serve `fleet` in fluid mode: stable shards advance through the
+/// closed-form oracle, hot shards through the event engine.
+///
+/// Assumes load-oblivious splitting (random / round-robin): each shard
+/// sees an independent Poisson stream of rate `λ/N`. Reports for
+/// load-*aware* policies (JSQ, P2C) will be optimistic under skew — use
+/// the event engine when the dispatch policy is the object of study.
+/// Analytic shards model `max_delay_s = 0` batching; with a positive
+/// delay the fluid numbers are an approximation (see module docs). The
+/// arrival process must be stationary (`peak_factor == 1`).
+pub fn run_fluid(
+    cfg: &Arc<SystemConfig>,
+    fleet: &FleetCfg,
+    arrivals: &PopulationArrivals,
+    fluid: &FluidCfg,
+) -> FluidOutcome {
+    assert!(
+        arrivals.peak_factor == 1.0,
+        "fluid mode needs a stationary stream (peak_factor == 1)"
+    );
+    assert!(fleet.servers > 0, "fleet needs at least one server");
+    let wall0 = Instant::now();
+    let n = fleet.servers;
+    let lambda_shard = arrivals.users as f64 * arrivals.rate_per_user_hz / n as f64;
+
+    // Per-server profiles exactly as the engine builds them.
+    let profiles: Vec<ServerProfile> = if fleet.profiles.is_empty() {
+        (0..n)
+            .map(|i| ServerProfile::at_speed(fleet.speeds.get(i).copied().unwrap_or(1.0)))
+            .collect()
+    } else {
+        fleet.profiles.clone()
+    };
+    let resolved = profile::resolve(cfg, &profiles, fleet.batch);
+
+    // Solve each distinct (occupancy, speed, K) once; shards sharing a
+    // tier share the solution and its tabulated wait distribution.
+    type Key = (usize, u64, usize);
+    let key_of = |rs: &ResolvedServer| -> Key {
+        (Arc::as_ptr(&rs.occupancy) as usize, rs.speed.to_bits(), rs.batch.max_batch)
+    };
+    let mut solutions: HashMap<Key, Option<Arc<(QueueSolution, WaitDist)>>> = HashMap::new();
+    for rs in &resolved {
+        solutions.entry(key_of(rs)).or_insert_with(|| {
+            let model = BatchQueueModel::from_resolved(rs, lambda_shard);
+            if model.rho() > fluid.hot_rho {
+                return None; // hot by policy — no need to solve
+            }
+            match model.solve() {
+                BatchQueueAnalysis::Stable(sol) => {
+                    let dist = sol.wait_distribution(257);
+                    Some(Arc::new((sol, dist)))
+                }
+                BatchQueueAnalysis::Saturated { .. } => None,
+            }
+        });
+    }
+
+    // Pass 1: hot shards run event-by-event on their thinned stream.
+    let mut rows: Vec<Option<(String, ShardStats)>> = (0..n).map(|_| None).collect();
+    let mut ledger: Vec<Option<ShardLedger>> = (0..n).map(|_| None).collect();
+    let mut span_s = fleet.horizon_s;
+    let mut events = 0u64;
+    let thinned = PopulationArrivals {
+        rate_per_user_hz: arrivals.rate_per_user_hz / n as f64,
+        ..arrivals.clone()
+    };
+    for (i, rs) in resolved.iter().enumerate() {
+        if solutions[&key_of(rs)].is_some() {
+            continue;
+        }
+        let shard_fleet = FleetCfg {
+            servers: 1,
+            speeds: Vec::new(),
+            profiles: vec![profiles[i].clone()],
+            batch: fleet.batch,
+            horizon_s: fleet.horizon_s,
+            seed: fleet.seed.wrapping_add(0xF1D + i as u64),
+        };
+        let engine = FleetEngine::new(
+            cfg,
+            shard_fleet,
+            DispatchPolicy::Random.build(),
+            thinned.clone(),
+        );
+        let (shard_span, shard_events, mut shards) = engine.run_into_shards();
+        span_s = span_s.max(shard_span);
+        events += shard_events;
+        let (name, stats) = shards.pop().expect("one shard per hot server");
+        let model = BatchQueueModel::from_resolved(rs, lambda_shard);
+        ledger[i] = Some(ShardLedger {
+            name: if name.is_empty() { format!("s{i}") } else { name.clone() },
+            fluid: false,
+            rho: model.rho(),
+            arrivals: stats.completed + stats.shed,
+            served: stats.completed,
+            shed: stats.shed,
+            in_flight: 0, // the event engine drains before reporting
+        });
+        rows[i] = Some((name, stats));
+    }
+
+    // Pass 2: analytic shards, synthesized against the final span.
+    let mut root = Rng::seed_from(fleet.seed);
+    let mut mc_rng = root.fork(0xF1D0);
+    for (i, rs) in resolved.iter().enumerate() {
+        let Some(pair) = &solutions[&key_of(rs)] else { continue };
+        let (sol, dist) = (&pair.0, &pair.1);
+        let law = sol.job_batch_law();
+        let offered = (lambda_shard * fleet.horizon_s).round() as u64;
+        // Monte-Carlo draws: radio uplink (displacement), own-batch
+        // service, queue wait — independent in steady state (validated
+        // against the event engine to ~2% on p50).
+        let samples = fluid.latency_samples.clamp(1, offered.max(1) as usize);
+        let mut lat = Vec::with_capacity(samples);
+        let (mut upload_sum, mut energy_sum, mut viol) = (0.0, 0.0, 0u64);
+        for _ in 0..samples {
+            let (_d, rate_up, _dn) = cfg.radio.draw_user(&mut mc_rng);
+            let upload_s = cfg.net.input_bits / rate_up;
+            upload_sum += upload_s;
+            energy_sum += (cfg.radio.tx_power_w + cfg.radio.tx_circuit_w) * upload_s;
+            let wait = dist.sample(&mut mc_rng);
+            let u = mc_rng.f64();
+            let mut b = law.len();
+            let mut acc = 0.0;
+            for (bi, &p) in law.iter().enumerate() {
+                acc += p;
+                if u <= acc {
+                    b = bi + 1;
+                    break;
+                }
+            }
+            let latency = upload_s + wait + sol.service_s[b - 1];
+            let deadline = mc_rng.uniform(arrivals.l_low, arrivals.l_high);
+            if latency > deadline + 1e-12 {
+                viol += 1;
+            }
+            lat.push(latency);
+        }
+        let mean_upload = upload_sum / samples as f64;
+        // Little's law on the whole pipeline (upload + queue + service)
+        // gives the jobs still in flight when the horizon closes.
+        let in_flight = ((mean_upload + sol.mean_response_s) * lambda_shard).round() as u64;
+        let in_flight = in_flight.min(offered);
+        let served = offered - in_flight;
+        let mut stats = ShardStats {
+            completed: served,
+            shed: 0,
+            violations: (viol as f64 / samples as f64 * served as f64).round() as u64,
+            batches: ((served as f64 / sol.mean_batch).round() as u64).max(u64::from(served > 0)),
+            batch_size_sum: served,
+            busy_s: sol.utilization * span_s,
+            energy_j: energy_sum / samples as f64 * served as f64,
+            latencies_s: lat,
+        };
+        // `violations` may not exceed the sampled latencies' implication;
+        // clamp to completed for tiny shards.
+        stats.violations = stats.violations.min(stats.completed);
+        let name = if rs.name.is_empty() { format!("s{i}") } else { rs.name.clone() };
+        ledger[i] = Some(ShardLedger {
+            name,
+            fluid: true,
+            rho: sol.rho,
+            arrivals: offered,
+            served,
+            shed: 0,
+            in_flight,
+        });
+        rows[i] = Some((rs.name.clone(), stats));
+    }
+
+    let rows: Vec<(String, ShardStats)> = rows.into_iter().map(|r| r.unwrap()).collect();
+    let mut report = FleetReport::from_named_shards(
+        rows.iter().map(|(name, s)| (name.as_str(), s)),
+        fleet.horizon_s,
+        span_s,
+        wall0.elapsed().as_secs_f64(),
+    );
+    report.events = events;
+    let ledger: Vec<ShardLedger> = ledger.into_iter().map(|l| l.unwrap()).collect();
+    let fluid_shards = ledger.iter().filter(|l| l.fluid).count();
+    FluidOutcome { report, ledger, fluid_shards, event_shards: n - fluid_shards }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Flat service curve: s(b) = s for every b (M/D/1 when K = 1).
+    fn flat(lambda: f64, s: f64, k: usize) -> BatchQueueModel {
+        BatchQueueModel::new(lambda, vec![s; k], k)
+    }
+
+    #[test]
+    fn md1_matches_pollaczek_khinchine() {
+        // K = 1 collapses the model to M/D/1, whose mean wait has the
+        // independent closed form W_q = λ s² / (2 (1 − λ s)).
+        for (lam, s) in [(0.5, 1.0), (0.8, 1.0), (2.0, 0.3)] {
+            let sol = flat(lam, s, 1).solve().expect_stable();
+            let pk = lam * s * s / (2.0 * (1.0 - lam * s));
+            assert!(
+                (sol.mean_wait_s - pk).abs() / pk < 1e-6,
+                "λ={lam}: W_q {} vs PK {pk}",
+                sol.mean_wait_s
+            );
+            assert!((sol.utilization - lam * s).abs() < 1e-9);
+            assert!((sol.mean_batch - 1.0).abs() < 1e-9);
+            assert!((sol.mean_service_s - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn conservation_identity_holds_at_rounding_noise() {
+        for k in [2usize, 8, 16] {
+            let service: Vec<f64> = (1..=k).map(|b| 0.006 + 0.0003 * b as f64).collect();
+            let cap = k as f64 / service[k - 1];
+            let model = BatchQueueModel::new(0.7 * cap, service, k);
+            let sol = model.solve().expect_stable();
+            assert!(sol.conservation_error() < 1e-8, "K={k}: {}", sol.conservation_error());
+        }
+    }
+
+    #[test]
+    fn capacity_sits_at_the_full_batch_for_affine_curves() {
+        let service: Vec<f64> = (1..=16).map(|b| 0.00608 + 0.00032 * b as f64).collect();
+        let model = BatchQueueModel::new(100.0, service.clone(), 16);
+        let expect = 16.0 / service[15];
+        assert!((model.capacity_hz() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturation_is_detected_not_mis_solved() {
+        let model = flat(2.0, 1.0, 1); // ρ = 2
+        match model.solve() {
+            BatchQueueAnalysis::Saturated { rho, capacity_hz } => {
+                assert!(rho > 1.0);
+                assert!((capacity_hz - 1.0).abs() < 1e-12);
+            }
+            BatchQueueAnalysis::Stable(_) => panic!("ρ=2 must saturate"),
+        }
+    }
+
+    #[test]
+    fn wait_distribution_is_a_cdf_and_cross_checks_little() {
+        let service: Vec<f64> = (1..=8).map(|b| 0.037 + 0.011 * b as f64).collect();
+        let cap = 8.0 / service[7];
+        let sol = BatchQueueModel::new(0.6 * cap, service, 8).solve().expect_stable();
+        let dist = sol.wait_distribution(257);
+        assert_eq!(dist.w[0], 0.0);
+        for i in 1..dist.cdf.len() {
+            assert!(dist.cdf[i] >= dist.cdf[i - 1], "CDF must be monotone");
+        }
+        let last = *dist.cdf.last().unwrap();
+        assert!(last > 0.999 && last <= 1.0 + 1e-12, "tail covered: {last}");
+        // Distribution mean vs Little's-law mean: two independent
+        // derivations of the same quantity.
+        let rel = (dist.mean() - sol.mean_wait_s).abs() / sol.mean_wait_s;
+        assert!(rel < 0.02, "dist mean {} vs Little {}", dist.mean(), sol.mean_wait_s);
+        // Quantiles are monotone and bracket the mass.
+        let (p10, p50, p95) = (dist.quantile(0.10), dist.quantile(0.50), dist.quantile(0.95));
+        assert!(p10 <= p50 && p50 <= p95);
+        assert!(sol.wait_cdf(p50) >= 0.49);
+    }
+
+    #[test]
+    fn job_batch_law_is_a_distribution_consistent_with_means() {
+        let service: Vec<f64> = (1..=16).map(|b| 0.006 + 0.0003 * b as f64).collect();
+        let cap = 16.0 / service[15];
+        let sol = BatchQueueModel::new(0.75 * cap, service, 16).solve().expect_stable();
+        let law = sol.job_batch_law();
+        let total: f64 = law.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let mean_svc: f64 =
+            law.iter().enumerate().map(|(bi, &p)| p * sol.service_s[bi]).sum();
+        assert!((mean_svc - sol.mean_service_s).abs() < 1e-9);
+        // Size-biasing pulls the job-seen batch above the batch average.
+        let job_mean_b: f64 =
+            law.iter().enumerate().map(|(bi, &p)| p * (bi + 1) as f64).sum();
+        assert!(job_mean_b >= sol.mean_batch - 1e-9);
+    }
+
+    #[test]
+    fn faster_profiles_cut_wait_and_raise_capacity() {
+        let slow: Vec<f64> = (1..=8).map(|b| 0.037 + 0.011 * b as f64).collect();
+        let fast: Vec<f64> = slow.iter().map(|s| s / 4.0).collect();
+        let lam = 0.5 * 8.0 / slow[7];
+        let s_sol = BatchQueueModel::new(lam, slow, 8).solve().expect_stable();
+        let f_sol = BatchQueueModel::new(lam, fast, 8).solve().expect_stable();
+        assert!(f_sol.capacity_hz > 3.9 * s_sol.capacity_hz);
+        assert!(f_sol.mean_wait_s < s_sol.mean_wait_s);
+        assert!(f_sol.utilization < s_sol.utilization);
+    }
+
+    #[test]
+    fn wait_dist_sampling_reproduces_its_own_quantiles() {
+        let service: Vec<f64> = (1..=4).map(|b| 0.01 + 0.002 * b as f64).collect();
+        let sol =
+            BatchQueueModel::new(0.5 * 4.0 / service[3], service, 4).solve().expect_stable();
+        let dist = sol.wait_distribution(129);
+        let mut rng = Rng::seed_from(42);
+        let n = 20_000;
+        let mut draws: Vec<f64> = (0..n).map(|_| dist.sample(&mut rng)).collect();
+        draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let emp_p50 = draws[n / 2];
+        let p50 = dist.quantile(0.5);
+        assert!(
+            (emp_p50 - p50).abs() <= 0.05 * p50.max(1e-6) + 1e-4,
+            "sampled p50 {emp_p50} vs {p50}"
+        );
+    }
+}

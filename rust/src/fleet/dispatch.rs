@@ -81,6 +81,11 @@ pub trait Dispatcher {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchPolicy {
     RoundRobin,
+    /// Uniform random server — the exact-Poisson-splitting baseline: a
+    /// Poisson(λ) stream split uniformly over N servers is N independent
+    /// Poisson(λ/N) streams, which is the regime the closed-form
+    /// [`analytic`](super::analytic) shard model assumes.
+    Random,
     /// JSQ on expected completion time.
     ShortestQueue,
     /// P2C on expected completion time.
@@ -93,8 +98,9 @@ pub enum DispatchPolicy {
 }
 
 impl DispatchPolicy {
-    pub const ALL: [DispatchPolicy; 6] = [
+    pub const ALL: [DispatchPolicy; 7] = [
         DispatchPolicy::RoundRobin,
+        DispatchPolicy::Random,
         DispatchPolicy::ShortestQueue,
         DispatchPolicy::PowerOfTwo,
         DispatchPolicy::DeadlineAware,
@@ -105,6 +111,7 @@ impl DispatchPolicy {
     pub fn parse(s: &str) -> Option<DispatchPolicy> {
         match s {
             "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "rand" | "random" => Some(DispatchPolicy::Random),
             "jsq" | "shortest-queue" => Some(DispatchPolicy::ShortestQueue),
             "p2c" | "power-of-two" => Some(DispatchPolicy::PowerOfTwo),
             "deadline" | "deadline-aware" => Some(DispatchPolicy::DeadlineAware),
@@ -117,6 +124,7 @@ impl DispatchPolicy {
     pub fn name(&self) -> &'static str {
         match self {
             DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::Random => "rand",
             DispatchPolicy::ShortestQueue => "jsq",
             DispatchPolicy::PowerOfTwo => "p2c",
             DispatchPolicy::DeadlineAware => "deadline",
@@ -128,6 +136,7 @@ impl DispatchPolicy {
     pub fn build(&self) -> Box<dyn Dispatcher> {
         match self {
             DispatchPolicy::RoundRobin => Box::new(RoundRobin::default()),
+            DispatchPolicy::Random => Box::new(Random),
             DispatchPolicy::ShortestQueue => Box::new(ShortestQueue),
             DispatchPolicy::PowerOfTwo => Box::new(PowerOfTwo),
             DispatchPolicy::DeadlineAware => Box::new(DeadlineAware),
@@ -152,6 +161,22 @@ impl Dispatcher for RoundRobin {
         let s = self.next % servers.len();
         self.next = (self.next + 1) % servers.len();
         s
+    }
+}
+
+/// Uniform random assignment — oblivious to load, but the unique policy
+/// under which each server's arrival stream is *exactly* Poisson(λ/N)
+/// (Poisson thinning), making per-shard closed-form analysis exact.
+#[derive(Debug)]
+pub struct Random;
+
+impl Dispatcher for Random {
+    fn name(&self) -> &'static str {
+        "rand"
+    }
+
+    fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, rng: &mut Rng) -> usize {
+        rng.usize_below(servers.len())
     }
 }
 
@@ -389,6 +414,21 @@ mod tests {
         assert_eq!(da.pick(&req(0.01), &views, 0.0, &mut rng), 1);
         // Loose deadline: both feasible, least time wins.
         assert_eq!(da.pick(&req(1.0), &views, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn random_policy_spreads_uniformly() {
+        let mut d = Random;
+        let views = vec![view(9, 1, 1.0), view(0, 0, 0.0), view(5, 1, 0.5)];
+        let mut rng = Rng::seed_from(13);
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[d.pick(&req(1.0), &views, 0.0, &mut rng)] += 1;
+        }
+        // Load-oblivious: every server near 1/3 regardless of backlog.
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "{counts:?}");
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! [`ServerProfile`](super::profile::ServerProfile): heterogeneous pools
 //! mix latency curves, memory caps and batching policies per server, and
 //! every load signal the dispatcher sees is priced off the profile of the
-//! server it describes. Everything advances through the binary-heap
+//! server it describes. Everything advances through the index-heap
 //! [`EventQueue`](super::events::EventQueue), so a run costs
 //! `O(requests · (log E + N))` regardless of how much model time it spans
 //! — this is what makes 10⁵–10⁶-user sweeps tractable where the slotted
@@ -32,7 +32,7 @@ use crate::scenario::{PopArrival, PopulationArrivals};
 use crate::util::rng::Rng;
 
 use super::dispatch::{Dispatcher, ServerView};
-use super::events::EventQueue;
+use super::events::{EventId, EventQueue};
 use super::profile::{self, ServerProfile};
 use super::queue::{BatchPolicy, BatchQueue};
 use super::report::{FleetReport, ShardStats};
@@ -79,8 +79,10 @@ enum Ev {
     Arrival(PopArrival),
     /// A request's upload reached its assigned server.
     Enqueue { server: usize, req: Request },
-    /// Partial-batch delay timer (stale generations are ignored).
-    Timer { server: usize, gen: u64 },
+    /// Partial-batch delay timer. Always valid when popped: launches and
+    /// re-arms cancel the outstanding timer in place (index-heap
+    /// [`EventQueue::cancel`]) instead of leaving stale generations.
+    Timer { server: usize },
     /// A batch finished serving.
     BatchDone { server: usize, batch: Vec<Request> },
 }
@@ -92,11 +94,12 @@ struct Server {
     cap: profile::ResolvedServer,
     busy_until: f64,
     in_flight: usize,
-    timer_gen: u64,
-    /// Deadline of the currently armed partial-batch timer, if any —
-    /// deduplicates re-arming when later admissions leave the oldest
-    /// request (and hence the launch deadline) unchanged.
-    timer_at: Option<f64>,
+    /// The armed partial-batch timer `(deadline, handle)`, if any. The
+    /// deadline deduplicates re-arming when later admissions leave the
+    /// oldest request (and hence the launch deadline) unchanged; the
+    /// handle cancels the event eagerly when a launch consumes the queue
+    /// front.
+    timer: Option<(f64, EventId)>,
     stats: ShardStats,
 }
 
@@ -167,8 +170,7 @@ impl FleetEngine {
                 cap,
                 busy_until: 0.0,
                 in_flight: 0,
-                timer_gen: 0,
-                timer_at: None,
+                timer: None,
                 stats: ShardStats::default(),
             })
             .collect();
@@ -203,11 +205,10 @@ impl FleetEngine {
                         self.servers[server].stats.shed += 1;
                     }
                 }
-                Ev::Timer { server, gen } => {
-                    if self.servers[server].timer_gen == gen {
-                        self.servers[server].timer_at = None;
-                        self.try_launch(server, now);
-                    }
+                Ev::Timer { server } => {
+                    // Eager cancellation guarantees a popped timer is live.
+                    self.servers[server].timer = None;
+                    self.try_launch(server, now);
                 }
                 Ev::BatchDone { server, batch } => {
                     let s = &mut self.servers[server];
@@ -228,12 +229,28 @@ impl FleetEngine {
         // The event clock ends at the last drain completion; utilization
         // is measured over that full span so it cannot exceed 100%.
         let span_s = self.events.now();
-        FleetReport::from_named_shards(
+        let mut rep = FleetReport::from_named_shards(
             self.servers.iter().map(|s| (s.cap.name.as_str(), &s.stats)),
             self.fleet.horizon_s,
             span_s,
             wall0.elapsed().as_secs_f64(),
-        )
+        );
+        rep.events = self.events.popped();
+        rep
+    }
+
+    /// Run, then hand back the simulated span and per-shard stats — the
+    /// hot-shard path of [`analytic::run_fluid`](super::analytic::run_fluid)
+    /// merges these with analytically advanced shards.
+    pub(crate) fn run_into_shards(mut self) -> (f64, u64, Vec<(String, ShardStats)>) {
+        let _ = self.run();
+        let span_s = self.events.now();
+        let shards = self
+            .servers
+            .into_iter()
+            .map(|s| (s.cap.name.clone(), s.stats))
+            .collect();
+        (span_s, self.events.popped(), shards)
     }
 
     fn on_arrival(&mut self, a: PopArrival, now: f64) {
@@ -286,11 +303,14 @@ impl FleetEngine {
             }
             if !self.servers[sid].queue.ready(now) {
                 if let Some(t) = self.servers[sid].queue.launch_deadline() {
-                    if self.servers[sid].timer_at != Some(t) {
-                        self.servers[sid].timer_gen += 1;
-                        self.servers[sid].timer_at = Some(t);
-                        let gen = self.servers[sid].timer_gen;
-                        self.events.schedule(t, Ev::Timer { server: sid, gen });
+                    if self.servers[sid].timer.map(|(at, _)| at) != Some(t) {
+                        // Re-arm: drop the old timer from the heap (no
+                        // stale event survives) and schedule the new one.
+                        if let Some((_, id)) = self.servers[sid].timer.take() {
+                            self.events.cancel(id);
+                        }
+                        let id = self.events.schedule(t, Ev::Timer { server: sid });
+                        self.servers[sid].timer = Some((t, id));
                     }
                 }
                 return;
@@ -302,14 +322,15 @@ impl FleetEngine {
                 // re-examine what is left.
                 continue;
             }
+            // Launching consumed the timer's queue front; cancel any
+            // outstanding timer event in place.
+            if let Some((_, id)) = self.servers[sid].timer.take() {
+                self.events.cancel(id);
+            }
             let s = &mut self.servers[sid];
             let service_s = s.cap.occupancy.total(batch.len()) / s.cap.speed;
             s.busy_until = now + service_s;
             s.in_flight = batch.len();
-            // Launching consumed the timer's queue front; invalidate any
-            // outstanding timer event.
-            s.timer_gen += 1;
-            s.timer_at = None;
             s.stats.batches += 1;
             s.stats.batch_size_sum += batch.len() as u64;
             s.stats.busy_s += service_s;

@@ -1,60 +1,70 @@
 //! Generic discrete-event core for the fleet engine.
 //!
-//! A binary-heap queue of `(time, payload)` entries with a monotone
-//! simulated clock. Unlike the slotted [`OnlineEnv`](crate::rl::env) loop —
-//! O(slots · users) per run — fleet-scale simulation pops events in time
-//! order, so cost scales with the number of *requests*, making sweeps over
-//! 10⁴–10⁶ users feasible. Simultaneous events pop FIFO by insertion
-//! sequence, which (together with the seeded [`Rng`](crate::util::rng::Rng)
-//! streams) makes every fleet run deterministic.
+//! An **index-heap** event queue with a monotone simulated clock: payloads
+//! live in an arena of reusable slots, and the heap orders *slot indices*
+//! by `(time, insertion sequence)`. Unlike the earlier `BinaryHeap` core
+//! (kept below as the [`legacy`] test oracle), every scheduled event has a
+//! stable [`EventId`] handle, so callers cancel or reschedule in
+//! `O(log n)` *in place* — no tombstones to skip at pop time, no churn
+//! re-pushing updated entries. The engine uses this for partial-batch
+//! timers: a launch invalidates its timer by cancelling it eagerly instead
+//! of leaving a stale generation in the heap.
+//!
+//! Unlike the slotted [`OnlineEnv`](crate::rl::env) loop — O(slots · users)
+//! per run — fleet-scale simulation pops events in time order, so cost
+//! scales with the number of *requests*, making sweeps over 10⁴–10⁶ users
+//! feasible. Simultaneous events pop FIFO by insertion sequence, which
+//! (together with the seeded [`Rng`](crate::util::rng::Rng) streams) makes
+//! every fleet run deterministic: the pop order is the unique total order
+//! on `(time, seq)`, bitwise identical to the legacy heap's (the in-crate
+//! property tests pin this).
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+/// Stable handle to a scheduled event.
+///
+/// Generation-tagged so a handle kept past its event's pop or cancel is
+/// harmless: [`EventQueue::cancel`] on a stale id is a no-op returning
+/// `false` (the slot has been reused under a bumped generation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId {
+    slot: u32,
+    gen: u32,
+}
 
-/// A scheduled payload at simulated time `at`.
-#[derive(Debug, Clone)]
-struct Entry<E> {
+/// Arena slot: schedule metadata plus the payload and the slot's position
+/// in the heap (the backlink that makes cancel O(log n)).
+#[derive(Debug)]
+struct Slot<E> {
     at: f64,
     seq: u64,
-    payload: E,
-}
-
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl<E> Eq for Entry<E> {}
-
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earliest time first, then insertion order.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
+    gen: u32,
+    /// `None` while the slot sits on the free list.
+    payload: Option<E>,
+    /// Index into `EventQueue::heap`; meaningless when free.
+    pos: usize,
 }
 
 /// Min-time event queue with a monotone clock, generic over the payload.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    slots: Vec<Slot<E>>,
+    /// Heap of live slot indices, min-ordered by `(at, seq)`.
+    heap: Vec<u32>,
+    free: Vec<u32>,
     seq: u64,
     now: f64,
+    popped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
     fn default() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0.0 }
+        EventQueue {
+            slots: Vec::new(),
+            heap: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+            now: 0.0,
+            popped: 0,
+        }
     }
 }
 
@@ -68,39 +78,271 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// Total events popped so far (the raw events/sec numerator).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Earlier of two live slots in `(at, seq)` order.
+    #[inline]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (sa, sb) = (&self.slots[a as usize], &self.slots[b as usize]);
+        sa.at < sb.at || (sa.at == sb.at && sa.seq < sb.seq)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if !self.before(self.heap[i], self.heap[parent]) {
+                break;
+            }
+            self.heap.swap(i, parent);
+            self.slots[self.heap[i] as usize].pos = i;
+            self.slots[self.heap[parent] as usize].pos = parent;
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && self.before(self.heap[l], self.heap[best]) {
+                best = l;
+            }
+            if r < self.heap.len() && self.before(self.heap[r], self.heap[best]) {
+                best = r;
+            }
+            if best == i {
+                return;
+            }
+            self.heap.swap(i, best);
+            self.slots[self.heap[i] as usize].pos = i;
+            self.slots[self.heap[best] as usize].pos = best;
+            i = best;
+        }
+    }
+
+    /// Detach the heap entry at position `pos`, restoring heap order.
+    fn heap_remove(&mut self, pos: usize) -> u32 {
+        let slot = self.heap[pos];
+        let last = self.heap.len() - 1;
+        self.heap.swap(pos, last);
+        self.heap.pop();
+        if pos < self.heap.len() {
+            self.slots[self.heap[pos] as usize].pos = pos;
+            self.sift_down(pos);
+            self.sift_up(pos);
+        }
+        slot
+    }
+
     /// Schedule `payload` at absolute time `at` (clamped to now — no past
-    /// scheduling).
-    pub fn schedule(&mut self, at: f64, payload: E) {
+    /// scheduling). The returned [`EventId`] cancels or reschedules it.
+    pub fn schedule(&mut self, at: f64, payload: E) -> EventId {
         let at = at.max(self.now);
-        self.heap.push(Entry { at, seq: self.seq, payload });
+        let seq = self.seq;
         self.seq += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let sl = &mut self.slots[s as usize];
+                sl.at = at;
+                sl.seq = seq;
+                sl.payload = Some(payload);
+                sl.pos = self.heap.len();
+                s
+            }
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    at,
+                    seq,
+                    gen: 0,
+                    payload: Some(payload),
+                    pos: self.heap.len(),
+                });
+                s
+            }
+        };
+        self.heap.push(slot);
+        self.sift_up(self.heap.len() - 1);
+        EventId { slot, gen: self.slots[slot as usize].gen }
+    }
+
+    /// Cancel a scheduled event in place. Returns the payload if the id
+    /// was still live; `false`/`None` on a stale handle.
+    pub fn cancel(&mut self, id: EventId) -> Option<E> {
+        let sl = self.slots.get(id.slot as usize)?;
+        if sl.gen != id.gen || sl.payload.is_none() {
+            return None;
+        }
+        let pos = sl.pos;
+        debug_assert_eq!(self.heap[pos], id.slot, "heap backlink out of sync");
+        self.heap_remove(pos);
+        self.release(id.slot)
+    }
+
+    /// Move a live event to a new time, keeping its payload and FIFO rank
+    /// among its *new* simultaneous peers (it re-enters the sequence
+    /// order). Returns `false` on a stale handle.
+    pub fn reschedule(&mut self, id: EventId, at: f64) -> bool {
+        match self.cancel(id) {
+            Some(payload) => {
+                self.schedule(at, payload);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Free a slot, bumping its generation so stale ids die.
+    fn release(&mut self, slot: u32) -> Option<E> {
+        let sl = &mut self.slots[slot as usize];
+        sl.gen = sl.gen.wrapping_add(1);
+        self.free.push(slot);
+        sl.payload.take()
     }
 
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        let e = self.heap.pop()?;
-        debug_assert!(e.at >= self.now - 1e-12, "time went backwards");
-        self.now = self.now.max(e.at);
-        Some((self.now, e.payload))
+        if self.heap.is_empty() {
+            return None;
+        }
+        let slot = self.heap_remove(0);
+        let at = self.slots[slot as usize].at;
+        debug_assert!(at >= self.now - 1e-12, "time went backwards");
+        self.now = self.now.max(at);
+        self.popped += 1;
+        let payload = self.release(slot).expect("heap slot had no payload");
+        Some((self.now, payload))
     }
 
     /// Time of the next event without popping it.
     pub fn peek_at(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.at)
+        self.heap.first().map(|&s| self.slots[s as usize].at)
     }
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Live (scheduled, uncancelled) events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 }
 
+/// The pre-index-heap event core, kept verbatim as the differential test
+/// oracle: a rebuilt `std::collections::BinaryHeap` of `(time, seq)`
+/// entries, with cancellation emulated by a lazy tombstone set (the only
+/// way to cancel in a heap without backlinks). Pop order over any
+/// interleaving of schedules, pops and cancels must be bitwise identical
+/// to [`EventQueue`]'s.
+#[cfg(test)]
+pub(crate) mod legacy {
+    use std::cmp::Ordering;
+    use std::collections::{BinaryHeap, HashSet};
+
+    #[derive(Debug, Clone)]
+    struct Entry<E> {
+        at: f64,
+        seq: u64,
+        payload: E,
+    }
+
+    impl<E> PartialEq for Entry<E> {
+        fn eq(&self, other: &Self) -> bool {
+            self.at == other.at && self.seq == other.seq
+        }
+    }
+
+    impl<E> Eq for Entry<E> {}
+
+    impl<E> Ord for Entry<E> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            // Min-heap: earliest time first, then insertion order.
+            other
+                .at
+                .partial_cmp(&self.at)
+                .unwrap_or(Ordering::Equal)
+                .then(other.seq.cmp(&self.seq))
+        }
+    }
+
+    impl<E> PartialOrd for Entry<E> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    /// Legacy min-time event queue (lazy cancellation).
+    #[derive(Debug)]
+    pub(crate) struct LegacyEventQueue<E> {
+        heap: BinaryHeap<Entry<E>>,
+        cancelled: HashSet<u64>,
+        seq: u64,
+        now: f64,
+    }
+
+    impl<E> LegacyEventQueue<E> {
+        pub(crate) fn new() -> Self {
+            LegacyEventQueue {
+                heap: BinaryHeap::new(),
+                cancelled: HashSet::new(),
+                seq: 0,
+                now: 0.0,
+            }
+        }
+
+        pub(crate) fn now(&self) -> f64 {
+            self.now
+        }
+
+        /// Schedule, returning the entry's sequence number as its handle.
+        pub(crate) fn schedule(&mut self, at: f64, payload: E) -> u64 {
+            let at = at.max(self.now);
+            self.heap.push(Entry { at, seq: self.seq, payload });
+            self.seq += 1;
+            self.seq - 1
+        }
+
+        /// Tombstone a sequence number; the entry is skipped at pop time.
+        pub(crate) fn cancel(&mut self, seq: u64) {
+            self.cancelled.insert(seq);
+        }
+
+        pub(crate) fn pop(&mut self) -> Option<(f64, E)> {
+            while let Some(e) = self.heap.pop() {
+                if self.cancelled.remove(&e.seq) {
+                    continue;
+                }
+                debug_assert!(e.at >= self.now - 1e-12, "time went backwards");
+                self.now = self.now.max(e.at);
+                return Some((self.now, e.payload));
+            }
+            None
+        }
+
+        pub(crate) fn peek_at(&mut self) -> Option<f64> {
+            while let Some(e) = self.heap.peek() {
+                if self.cancelled.contains(&e.seq) {
+                    let seq = e.seq;
+                    self.heap.pop();
+                    self.cancelled.remove(&seq);
+                    continue;
+                }
+                return Some(e.at);
+            }
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::legacy::LegacyEventQueue;
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn pops_in_time_order_across_payload_types() {
@@ -112,6 +354,7 @@ mod tests {
         let order: Vec<(f64, &str)> = std::iter::from_fn(|| q.pop()).collect();
         assert_eq!(order, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
         assert_eq!(q.now(), 3.0);
+        assert_eq!(q.popped(), 3);
         assert!(q.is_empty());
     }
 
@@ -155,5 +398,131 @@ mod tests {
             out
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn cancel_removes_in_place_and_stale_ids_are_noops() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let a = q.schedule(1.0, 10);
+        let b = q.schedule(2.0, 20);
+        let c = q.schedule(3.0, 30);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.cancel(b), Some(20));
+        assert_eq!(q.len(), 2, "cancel removes immediately, no tombstone");
+        assert_eq!(q.cancel(b), None, "double cancel is a stale no-op");
+        assert_eq!(q.pop(), Some((1.0, 10)));
+        assert_eq!(q.cancel(a), None, "popped id is stale");
+        // Slot reuse: a new schedule may land in b's or a's freed slot; the
+        // old handles must still be dead.
+        let d = q.schedule(0.5, 40);
+        assert_eq!(q.cancel(b), None);
+        assert_eq!(q.cancel(a), None);
+        assert_eq!(q.pop(), Some((1.0, 40)), "clamped to now");
+        assert_eq!(q.cancel(d), None);
+        assert_eq!(q.pop(), Some((3.0, 30)));
+        assert_eq!(q.cancel(c), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reschedule_moves_an_event_in_both_directions() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        let a = q.schedule(5.0, "a");
+        q.schedule(2.0, "b");
+        assert!(q.reschedule(a, 1.0), "decrease-key");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        let c = q.schedule(3.0, "c");
+        assert!(q.reschedule(c, 9.0), "increase-key");
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((9.0, "c")));
+        assert!(!q.reschedule(a, 1.0), "stale handle");
+    }
+
+    /// One random op applied to both queues; returns pops to compare.
+    fn step(
+        rng: &mut Rng,
+        q: &mut EventQueue<u64>,
+        o: &mut LegacyEventQueue<u64>,
+        live: &mut Vec<(EventId, u64)>,
+        payload: &mut u64,
+    ) -> Option<((f64, u64), Option<(f64, u64)>)> {
+        match rng.usize_below(10) {
+            // Schedule (weighted heaviest so queues grow).
+            0..=4 => {
+                let at = q.now() + rng.uniform(0.0, 3.0);
+                let p = *payload;
+                *payload += 1;
+                let id = q.schedule(at, p);
+                let seq = o.schedule(at, p);
+                live.push((id, seq));
+                None
+            }
+            // Cancel a random live event (or a stale handle).
+            5..=6 => {
+                if live.is_empty() {
+                    return None;
+                }
+                let i = rng.usize_below(live.len());
+                let (id, seq) = live.swap_remove(i);
+                let hit = q.cancel(id).is_some();
+                if hit {
+                    o.cancel(seq);
+                }
+                None
+            }
+            // Pop from both.
+            _ => {
+                let a = q.pop();
+                let b = o.pop();
+                // A pop consumes one live entry; prune ids popped already
+                // lazily (cancel on them is a no-op on both sides).
+                a.map(|ap| (ap, b))
+            }
+        }
+    }
+
+    #[test]
+    fn pop_order_is_bitwise_identical_to_the_legacy_heap() {
+        // The headline refactor guard: across random schedule / pop /
+        // cancel interleavings, the index-heap must externally behave
+        // exactly like the legacy BinaryHeap + tombstones it replaced —
+        // times bitwise equal, payloads identical, pop for pop.
+        for seed in 0..20u64 {
+            let mut rng = Rng::seed_from(0xE7E21 + seed);
+            let mut q: EventQueue<u64> = EventQueue::new();
+            let mut o: LegacyEventQueue<u64> = LegacyEventQueue::new();
+            let mut live = Vec::new();
+            let mut payload = 0u64;
+            for _ in 0..2000 {
+                if let Some(((at_a, pa), b)) = step(&mut rng, &mut q, &mut o, &mut live, &mut payload)
+                {
+                    let (at_b, pb) = b.expect("legacy queue ran dry first");
+                    assert_eq!(at_a.to_bits(), at_b.to_bits(), "seed {seed}");
+                    assert_eq!(pa, pb, "seed {seed}");
+                }
+                assert_eq!(q.peek_at().map(f64::to_bits), o.peek_at().map(f64::to_bits));
+            }
+            // Drain both to the end.
+            loop {
+                match (q.pop(), o.pop()) {
+                    (None, None) => break,
+                    (Some((at_a, pa)), Some((at_b, pb))) => {
+                        assert_eq!(at_a.to_bits(), at_b.to_bits(), "drain, seed {seed}");
+                        assert_eq!(pa, pb, "drain, seed {seed}");
+                    }
+                    (a, b) => panic!("queues diverged at drain: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn popped_counts_only_delivered_events() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        let a = q.schedule(1.0, 1);
+        q.schedule(2.0, 2);
+        q.cancel(a);
+        while q.pop().is_some() {}
+        assert_eq!(q.popped(), 1, "cancelled events never pop");
     }
 }

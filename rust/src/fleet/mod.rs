@@ -10,9 +10,15 @@
 //!
 //! Components:
 //!
-//! * [`events`] — generic binary-heap discrete-event core (arrival /
-//!   dispatch / batch-complete), replacing the O(slots · users) dense slot
-//!   loop so sweeps over 10⁴–10⁶ users are feasible;
+//! * [`events`] — generic index-heap discrete-event core (arrival /
+//!   dispatch / batch-complete) with O(log n) in-place cancel and
+//!   reschedule over an event-slot arena, replacing the O(slots · users)
+//!   dense slot loop so sweeps over 10⁴–10⁶ users are feasible;
+//! * [`analytic`] — closed-form batch-service queueing oracle
+//!   (embedded-chain / GTH solve of the dynamic-batching M/D^(b)/1
+//!   queue, after Inoue arXiv:1912.06322) priced off the same
+//!   `ServerProfile` tables, plus the `fluid` fleet mode that advances
+//!   stable shards analytically and hot shards event-by-event;
 //! * [`dispatch`] — load-balancing policies (round-robin,
 //!   join-shortest-queue, power-of-two-choices, deadline-aware) behind the
 //!   [`Dispatcher`] trait;
@@ -34,6 +40,7 @@
 //! Future scaling PRs (multi-GPU pools, result caching, async backends)
 //! plug in as new `Dispatcher`/server models against the same event core.
 
+pub mod analytic;
 pub mod dispatch;
 pub mod engine;
 pub mod events;
@@ -42,6 +49,10 @@ pub mod profile;
 pub mod queue;
 pub mod report;
 
+pub use analytic::{
+    run_fluid, BatchQueueAnalysis, BatchQueueModel, FluidCfg, FluidOutcome, QueueSolution,
+    ShardLedger, WaitDist,
+};
 pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
 pub use engine::{FleetCfg, FleetEngine};
 pub use pool::{CoordinatorPool, PoolCfg};

@@ -81,6 +81,8 @@ pub struct FleetReport {
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_p99_s: f64,
+    /// Mean end-to-end latency over completed requests (s).
+    pub latency_mean_s: f64,
     /// Mean user-side energy per completed request (J).
     pub energy_mean_j: f64,
     /// Mean launched batch size.
@@ -93,6 +95,9 @@ pub struct FleetReport {
     pub horizon_s: f64,
     /// Wall-clock of the simulation (s).
     pub wall_s: f64,
+    /// Discrete events popped by the engine (0 for non-event reports —
+    /// analytic shards advance without popping anything).
+    pub events: u64,
 }
 
 impl FleetReport {
@@ -163,6 +168,8 @@ impl FleetReport {
         let utilization: Vec<f64> = per_server.iter().map(|b| b.utilization).collect();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
+        let latency_mean_s =
+            if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 };
         FleetReport {
             servers: utilization.len(),
             requests: completed + shed,
@@ -172,12 +179,14 @@ impl FleetReport {
             latency_p50_s: pct(50.0),
             latency_p95_s: pct(95.0),
             latency_p99_s: pct(99.0),
+            latency_mean_s,
             energy_mean_j: if completed == 0 { 0.0 } else { energy / completed as f64 },
             mean_batch: if batches == 0 { 0.0 } else { batch_sum as f64 / batches as f64 },
             utilization,
             per_server,
             horizon_s,
             wall_s,
+            events: 0,
         }
     }
 
@@ -205,6 +214,16 @@ impl FleetReport {
             0.0
         } else {
             self.completed as f64 / self.horizon_s
+        }
+    }
+
+    /// Raw engine throughput: events popped per wall-clock second (0 when
+    /// no events were counted or no wall time elapsed).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_s
         }
     }
 
@@ -327,6 +346,9 @@ mod tests {
         assert!((rep.shed_rate() - 0.25).abs() < 1e-12);
         assert!((rep.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
         assert!((rep.latency_p50_s - 0.020).abs() < 1e-12);
+        assert!((rep.latency_mean_s - 0.020).abs() < 1e-12);
+        assert_eq!(rep.events, 0, "non-event reports count no events");
+        assert_eq!(rep.events_per_sec(), 0.0);
         assert!((rep.energy_mean_j - 2.0).abs() < 1e-12);
         assert!((rep.mean_batch - 1.5).abs() < 1e-12);
         assert_eq!(rep.utilization, vec![0.25, 0.5]);

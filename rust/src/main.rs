@@ -18,7 +18,7 @@ use batchedge::config::SystemConfig;
 use batchedge::coordinator::Coordinator;
 use batchedge::experiments;
 use batchedge::fleet::{
-    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, ServerProfile,
+    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, FluidCfg, ServerProfile,
 };
 use batchedge::rl::env::SchedulerAlg;
 use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
@@ -246,13 +246,14 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .opt("users", Some("100000"), "population size U")
         .opt("rate", Some("0.05"), "mean requests/s per user")
         .opt("horizon", Some("10"), "model-time horizon (s)")
-        .opt("policy", Some("jsq"), "rr|jsq|p2c|deadline|jsq-count|p2c-count|all")
+        .opt("policy", Some("jsq"), "rr|rand|jsq|p2c|deadline|jsq-count|p2c-count|all")
         .opt("max-batch", Some("16"), "dynamic batching: largest batch")
         .opt("max-delay-ms", Some("10"), "dynamic batching: partial-batch delay")
         .opt("bandwidth-mhz", Some("20"), "serving uplink carrier per cell")
         .opt("seed", Some("1"), "rng seed")
         .switch("skewed", "run the last quarter of servers at 0.25x speed")
-        .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)");
+        .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)")
+        .switch("fluid", "fluid mode: stable shards closed-form, hot shards event-by-event");
     let args = cli.parse(argv)?;
     let cfg = net_cfg(args.str("net").unwrap())?;
     let bandwidth_mhz = args.f64("bandwidth-mhz")?;
@@ -265,7 +266,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let policies: Vec<DispatchPolicy> = match args.str("policy").unwrap() {
         "all" => DispatchPolicy::ALL.to_vec(),
         p => vec![DispatchPolicy::parse(p).ok_or_else(|| {
-            anyhow!("unknown policy {p} (rr|jsq|p2c|deadline|jsq-count|p2c-count|all)")
+            anyhow!("unknown policy {p} (rr|rand|jsq|p2c|deadline|jsq-count|p2c-count|all)")
         })?],
     };
     anyhow::ensure!(
@@ -296,6 +297,37 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         cfg.net.name,
         args.f64("rate")?
     ));
+    if args.has("fluid") {
+        // Fluid mode assumes load-oblivious (random) splitting; the
+        // requested policy only matters to the event fallback shards.
+        let fleet = FleetCfg {
+            servers,
+            speeds,
+            profiles,
+            batch,
+            horizon_s: args.f64("horizon")?,
+            seed: args.u64("seed")?,
+        };
+        let out = experiments::fleet::run_fleet_fluid(
+            &cfg,
+            fleet,
+            users,
+            args.f64("rate")?,
+            &FluidCfg::default(),
+        );
+        println!("fluid: {}", out.report.render());
+        println!(
+            "fluid shards: {} analytic / {} event; ledger balanced: {}",
+            out.fluid_shards,
+            out.event_shards,
+            out.ledger.iter().all(|l| l.balanced()),
+        );
+        let mut cells = vec!["fluid".to_string()];
+        cells.extend(out.report.table_cells());
+        t.row(cells);
+        print!("{}", t.render());
+        return Ok(());
+    }
     // Breakdown shown for JSQ when it ran (the headline policy), else the
     // last policy requested.
     let mut breakdown = None;

@@ -1,0 +1,293 @@
+//! Differential suite: the closed-form batch-queueing oracle
+//! (`fleet::analytic`) vs the event-driven engine (`fleet::engine`).
+//!
+//! The headline test sweeps randomized (λ, profile, max-batch, dispatch)
+//! configurations — both workload nets, K ∈ {2..32}, drift ratios
+//! 0.25–0.8, server speeds 0.5–2× — runs ~40k requests through a
+//! single-shard engine with zero batching delay, and asserts the engine's
+//! mean batch size, utilization, and mean wait converge to the oracle's
+//! closed-form values within declared tolerance bands (set at ≥3× the
+//! worst deviation observed while calibrating against an independent
+//! Python port of the chain).
+//!
+//! The fluid-mode tests pin the hybrid fleet path: exact per-shard
+//! conservation ledgers at several horizons, fluid-vs-event agreement on
+//! a homogeneous pool, and hot-shard fallback on a skewed pool.
+
+use std::sync::Arc;
+
+use batchedge::config::SystemConfig;
+use batchedge::experiments::fleet::serving_cfg;
+use batchedge::fleet::{
+    run_fluid, BatchPolicy, BatchQueueAnalysis, BatchQueueModel, DispatchPolicy, FleetCfg,
+    FleetEngine, FluidCfg, ServerProfile,
+};
+use batchedge::scenario::PopulationArrivals;
+use batchedge::util::rng::Rng;
+
+/// Tolerance bands (relative): calibration headroom ≥3× over the worst
+/// observed deviation at ~40k requests.
+const TOL_BATCH: f64 = 0.06;
+const TOL_UTIL: f64 = 0.05;
+const TOL_RESPONSE: f64 = 0.08;
+const TOL_WAIT: f64 = 0.12;
+/// Absolute floor for the wait comparison: in low-ρ small-K regimes the
+/// mean wait is sub-millisecond and the Monte-Carlo upload estimate's
+/// standard error would dominate a purely relative band.
+const WAIT_FLOOR_S: f64 = 3e-4;
+
+#[derive(Debug)]
+struct Case {
+    net: &'static str,
+    k: usize,
+    rho: f64,
+    speed: f64,
+    policy: DispatchPolicy,
+}
+
+/// ≥20 randomized configurations, deterministic across runs.
+fn cases() -> Vec<Case> {
+    let mut rng = Rng::seed_from(0xD1FF_CA5E);
+    let ks = [2usize, 4, 8, 16, 32];
+    (0..24)
+        .map(|i| Case {
+            net: if i % 2 == 0 { "mobilenet_v2" } else { "dssd3" },
+            k: ks[i % ks.len()],
+            rho: rng.uniform(0.25, 0.8),
+            speed: rng.uniform(0.5, 2.0),
+            policy: if i % 4 < 2 { DispatchPolicy::RoundRobin } else { DispatchPolicy::Random },
+        })
+        .collect()
+}
+
+fn batch_policy(k: usize) -> BatchPolicy {
+    // Zero partial-batch delay: the regime where the closed form is
+    // exact. No shedding, effectively unbounded queue.
+    BatchPolicy { max_batch: k, max_delay_s: 0.0, max_queue: 1 << 20, shed_expired: false }
+}
+
+/// Monte-Carlo estimate of the mean uplink transfer time under `cfg`'s
+/// radio model (the engine's latency includes it; the oracle's does not).
+fn mean_upload_s(cfg: &SystemConfig) -> f64 {
+    let mut rng = Rng::seed_from(0x0B0E);
+    let n = 200_000;
+    (0..n)
+        .map(|_| {
+            let (_d, rate_up, _dn) = cfg.radio.draw_user(&mut rng);
+            cfg.net.input_bits / rate_up
+        })
+        .sum::<f64>()
+        / n as f64
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[test]
+fn engine_converges_to_the_closed_form_across_randomized_configs() {
+    let mut upload_cache: Vec<(&'static str, f64)> = Vec::new();
+    for (i, c) in cases().iter().enumerate() {
+        let cfg = serving_cfg(c.net).unwrap();
+        let batch = batch_policy(c.k);
+        let profile = ServerProfile::at_speed(c.speed);
+
+        // Pick λ hitting the case's drift ratio, snapped to a whole user
+        // population at the serving request rate.
+        let probe = BatchQueueModel::from_profile(&cfg, &profile, batch, 1.0);
+        let rate = 0.05;
+        let users =
+            ((c.rho * c.k as f64 / probe.service_s[c.k - 1]) / rate).round().max(1.0) as usize;
+        let lambda = users as f64 * rate;
+        let horizon = (40_000.0 / lambda).clamp(2.0, 500.0);
+
+        let sol = BatchQueueModel::from_profile(&cfg, &profile, batch, lambda)
+            .solve()
+            .expect_stable();
+        assert!(sol.conservation_error() < 1e-8, "case {i}: solver self-check");
+
+        let fleet = FleetCfg {
+            servers: 1,
+            speeds: Vec::new(),
+            profiles: vec![profile],
+            batch,
+            horizon_s: horizon,
+            seed: 0xC0FE + i as u64,
+        };
+        let arrivals = PopulationArrivals::stationary(c.net, users, rate);
+        let rep = FleetEngine::new(&cfg, fleet, c.policy.build(), arrivals).run();
+        assert!(rep.completed > 10_000, "case {i}: want a meaningful sample");
+
+        let upload = match upload_cache.iter().find(|(n, _)| *n == c.net) {
+            Some(&(_, u)) => u,
+            None => {
+                let u = mean_upload_s(&cfg);
+                upload_cache.push((c.net, u));
+                u
+            }
+        };
+        let ctx = format!(
+            "case {i} ({c:?}): λ={lambda:.1} Hz, oracle batch {:.3} util {:.4} wait {:.5}s",
+            sol.mean_batch, sol.utilization, sol.mean_wait_s
+        );
+
+        let e_batch = rel(rep.mean_batch, sol.mean_batch);
+        assert!(e_batch < TOL_BATCH, "{ctx}: batch {:.3} dev {e_batch:.4}", rep.mean_batch);
+
+        let util = rep.utilization_mean();
+        let e_util = rel(util, sol.utilization);
+        assert!(e_util < TOL_UTIL, "{ctx}: util {util:.4} dev {e_util:.4}");
+
+        // Engine latency = upload + queue wait + own-batch service.
+        let response = rep.latency_mean_s - upload;
+        let e_resp = rel(response, sol.mean_response_s);
+        assert!(e_resp < TOL_RESPONSE, "{ctx}: response {response:.5} dev {e_resp:.4}");
+
+        let wait = response - sol.mean_service_s;
+        let dev = (wait - sol.mean_wait_s).abs();
+        assert!(
+            dev < WAIT_FLOOR_S || rel(wait, sol.mean_wait_s) < TOL_WAIT,
+            "{ctx}: wait {wait:.5} abs dev {dev:.6}"
+        );
+    }
+}
+
+#[test]
+fn oracle_distribution_mean_cross_checks_littles_law_on_paper_profiles() {
+    // Two derivations of the same mean — stationary-chain renewal reward
+    // vs integrating the tagged-arrival CDF — on both calibrated nets.
+    for (net, k, rho) in [("mobilenet_v2", 16, 0.7), ("dssd3", 8, 0.55)] {
+        let cfg = serving_cfg(net).unwrap();
+        let batch = batch_policy(k);
+        let profile = ServerProfile::at_speed(1.0);
+        let probe = BatchQueueModel::from_profile(&cfg, &profile, batch, 1.0);
+        let lambda = rho * k as f64 / probe.service_s[k - 1];
+        let sol =
+            BatchQueueModel::from_profile(&cfg, &profile, batch, lambda).solve().expect_stable();
+        let dist = sol.wait_distribution(257);
+        let dev = rel(dist.mean(), sol.mean_wait_s);
+        assert!(dev < 0.03, "{net}: dist mean {} vs Little {} ({dev:.4})", dist.mean(), sol.mean_wait_s);
+    }
+}
+
+/// The shared fluid test pool: 8 servers, λ/server = 1 kHz (ρ ≈ 0.7 on
+/// the mobilenet serving profile).
+fn fluid_pool(horizon_s: f64, speeds: Vec<f64>) -> (Arc<SystemConfig>, FleetCfg, PopulationArrivals) {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let fleet = FleetCfg {
+        servers: 8,
+        speeds,
+        profiles: Vec::new(),
+        batch: batch_policy(16),
+        horizon_s,
+        seed: 9,
+    };
+    let arrivals = PopulationArrivals::stationary("mobilenet_v2", 160_000, 0.05);
+    (cfg, fleet, arrivals)
+}
+
+#[test]
+fn fluid_ledger_conserves_requests_at_every_horizon() {
+    for horizon in [2.0, 5.0, 10.0] {
+        let (cfg, fleet, arrivals) = fluid_pool(horizon, Vec::new());
+        let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+        assert_eq!(out.fluid_shards, 8, "homogeneous ρ≈0.7 pool is all-analytic");
+        let mut total_arrivals = 0u64;
+        for l in &out.ledger {
+            assert!(
+                l.balanced(),
+                "horizon {horizon}: shard {} leaks: {} != {} + {} + {}",
+                l.name, l.arrivals, l.served, l.shed, l.in_flight
+            );
+            assert!(l.in_flight > 0, "a loaded shard has work in flight at the horizon");
+            total_arrivals += l.arrivals;
+        }
+        let served: u64 = out.ledger.iter().map(|l| l.served).sum();
+        assert_eq!(out.report.completed, served, "report agrees with the ledger");
+        // Offered load ≈ λ·horizon per shard.
+        let expect = 160_000.0 * 0.05 * horizon;
+        assert!(
+            rel(total_arrivals as f64, expect) < 0.01,
+            "horizon {horizon}: {total_arrivals} arrivals vs λT = {expect}"
+        );
+    }
+}
+
+#[test]
+fn fluid_matches_the_event_engine_on_a_homogeneous_pool() {
+    let (cfg, fleet, arrivals) = fluid_pool(10.0, Vec::new());
+    let event = FleetEngine::new(
+        &cfg,
+        fleet.clone(),
+        DispatchPolicy::Random.build(),
+        arrivals.clone(),
+    )
+    .run();
+    let fluid = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+
+    let e_p50 = rel(fluid.report.latency_p50_s, event.latency_p50_s);
+    assert!(
+        e_p50 < 0.12,
+        "p50: fluid {:.5} vs event {:.5} ({e_p50:.4})",
+        fluid.report.latency_p50_s,
+        event.latency_p50_s
+    );
+    let e_mean = rel(fluid.report.latency_mean_s, event.latency_mean_s);
+    assert!(
+        e_mean < 0.10,
+        "mean: fluid {:.5} vs event {:.5} ({e_mean:.4})",
+        fluid.report.latency_mean_s,
+        event.latency_mean_s
+    );
+    let e_util = rel(fluid.report.utilization_mean(), event.utilization_mean());
+    assert!(
+        e_util < 0.10,
+        "util: fluid {:.4} vs event {:.4} ({e_util:.4})",
+        fluid.report.utilization_mean(),
+        event.utilization_mean()
+    );
+    let e_batch = rel(fluid.report.mean_batch, event.mean_batch);
+    assert!(
+        e_batch < 0.10,
+        "batch: fluid {:.3} vs event {:.3} ({e_batch:.4})",
+        fluid.report.mean_batch,
+        event.mean_batch
+    );
+}
+
+#[test]
+fn hybrid_fluid_routes_hot_shards_to_the_event_engine() {
+    // Two of eight servers at 0.25× speed: their thinned stream exceeds
+    // the stability gate, so they must fall back to event simulation
+    // while the six fast shards stay analytic.
+    let speeds = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.25, 0.25];
+    let (cfg, fleet, arrivals) = fluid_pool(2.0, speeds.clone());
+    let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+    assert_eq!(out.fluid_shards, 6);
+    assert_eq!(out.event_shards, 2);
+    for (i, l) in out.ledger.iter().enumerate() {
+        assert_eq!(l.fluid, speeds[i] == 1.0, "shard {i} classified by its own ρ");
+        assert!(l.balanced(), "shard {i} leaks requests");
+        if !l.fluid {
+            assert!(l.rho > 1.0, "the slow shards are saturated: ρ = {}", l.rho);
+            assert_eq!(l.in_flight, 0, "event shards drain before reporting");
+        }
+    }
+    assert!(out.report.events > 0, "hybrid runs count their event-shard events");
+}
+
+#[test]
+fn saturated_single_server_is_diagnosed_with_capacity() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let batch = batch_policy(16);
+    let profile = ServerProfile::at_speed(1.0);
+    let probe = BatchQueueModel::from_profile(&cfg, &profile, batch, 1.0);
+    let cap = probe.capacity_hz();
+    match BatchQueueModel::from_profile(&cfg, &profile, batch, 1.5 * cap).solve() {
+        BatchQueueAnalysis::Saturated { capacity_hz, rho } => {
+            assert!(rel(capacity_hz, cap) < 1e-9);
+            assert!(rho > 1.0);
+        }
+        BatchQueueAnalysis::Stable(_) => panic!("50% over capacity must saturate"),
+    }
+}

@@ -216,3 +216,166 @@ fn og_groups_partition_users_exactly() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Event-core invariants (fleet::events) — the index-heap queue behind the
+// fleet engine. The bitwise differential test against the legacy
+// BinaryHeap oracle lives in the module; these pin the *public-API*
+// contract over random schedule / cancel / reschedule / pop
+// interleavings.
+// ---------------------------------------------------------------------------
+
+use std::collections::HashMap;
+
+use batchedge::fleet::events::{EventId, EventQueue};
+
+/// Drive a random op sequence, tracking the ground truth externally:
+/// `expect` maps payload → the effective time it must pop at, `order`
+/// maps payload → its (re)schedule rank (the FIFO tiebreak key).
+#[derive(Debug, Default)]
+struct EventModel {
+    expect: HashMap<u64, f64>,
+    order: HashMap<u64, u64>,
+    live: Vec<(EventId, u64)>,
+    next_payload: u64,
+    next_order: u64,
+    pops: Vec<(f64, u64)>,
+}
+
+impl EventModel {
+    fn step(&mut self, q: &mut EventQueue<u64>, rng: &mut Rng) {
+        match rng.usize_below(10) {
+            0..=5 => {
+                // Schedule, sometimes "in the past" (clamped to now).
+                let at = q.now() + rng.uniform(-0.5, 2.0);
+                let eff = at.max(q.now());
+                let p = self.next_payload;
+                self.next_payload += 1;
+                let id = q.schedule(at, p);
+                self.expect.insert(p, eff);
+                self.order.insert(p, self.next_order);
+                self.next_order += 1;
+                self.live.push((id, p));
+            }
+            6 => {
+                if self.live.is_empty() {
+                    return;
+                }
+                let i = rng.usize_below(self.live.len());
+                let (id, p) = self.live.swap_remove(i);
+                // A handle may be stale if its event already popped; a
+                // stale cancel must be a no-op.
+                if q.cancel(id).is_some() {
+                    self.expect.remove(&p);
+                    self.order.remove(&p);
+                }
+            }
+            7 => {
+                if self.live.is_empty() {
+                    return;
+                }
+                let i = rng.usize_below(self.live.len());
+                // Reschedule relinquishes the handle (the queue returns a
+                // fresh id internally), so drop the live entry either way.
+                let (id, p) = self.live.swap_remove(i);
+                let at = q.now() + rng.uniform(-0.5, 3.0);
+                if q.reschedule(id, at) {
+                    self.expect.insert(p, at.max(q.now()));
+                    self.order.insert(p, self.next_order);
+                    self.next_order += 1;
+                }
+            }
+            _ => {
+                if let Some(pop) = q.pop() {
+                    self.pops.push(pop);
+                }
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        // 1. Monotone time, FIFO tiebreak by (re)schedule rank.
+        for w in self.pops.windows(2) {
+            let ((t0, p0), (t1, p1)) = (w[0], w[1]);
+            if t1 < t0 {
+                return Err(format!("time went backwards: {t0} -> {t1}"));
+            }
+            if t1 == t0 && self.order[&p1] < self.order[&p0] {
+                return Err(format!("tiebreak violated at t={t0}: {p0} before {p1}"));
+            }
+        }
+        // 2. Exactly the uncancelled payloads pop, each at its final
+        //    effective time (reschedules honored, bit-exact).
+        if self.pops.len() != self.expect.len() {
+            return Err(format!(
+                "popped {} events, expected {}",
+                self.pops.len(),
+                self.expect.len()
+            ));
+        }
+        for &(at, p) in &self.pops {
+            match self.expect.get(&p) {
+                None => return Err(format!("payload {p} popped but was cancelled")),
+                Some(&want) if want.to_bits() != at.to_bits() => {
+                    return Err(format!("payload {p} popped at {at}, scheduled for {want}"))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn event_queue_pops_every_live_event_once_in_monotone_fifo_order() {
+    forall_with_rng(
+        "event-queue-contract",
+        |rng| 200 + rng.usize_below(600),
+        |&ops, rng| {
+            let mut q: EventQueue<u64> = EventQueue::new();
+            let mut model = EventModel::default();
+            for _ in 0..ops {
+                model.step(&mut q, rng);
+            }
+            while let Some(pop) = q.pop() {
+                model.pops.push(pop);
+            }
+            if !q.is_empty() || q.len() != 0 {
+                return Err("drained queue still reports live events".into());
+            }
+            if q.popped() != model.pops.len() as u64 {
+                return Err(format!(
+                    "popped() counter {} != delivered {}",
+                    q.popped(),
+                    model.pops.len()
+                ));
+            }
+            model.check()
+        },
+    );
+}
+
+#[test]
+fn event_queue_clock_never_precedes_delivered_events() {
+    forall_with_rng(
+        "event-queue-clock",
+        |rng| 100 + rng.usize_below(200),
+        |&ops, rng| {
+            let mut q: EventQueue<u32> = EventQueue::new();
+            for i in 0..ops {
+                q.schedule(rng.uniform(0.0, 5.0), i as u32);
+            }
+            let mut last = 0.0f64;
+            while let Some((at, _)) = q.pop() {
+                if at < last {
+                    return Err(format!("pop at {at} after clock {last}"));
+                }
+                if (q.now() - at).abs() > 0.0 {
+                    return Err(format!("clock {} != delivered time {at}", q.now()));
+                }
+                last = at;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Gate bench results against a checked-in baseline.
+
+Reads one or more BENCH_<suite>.json files (written by the Rust bench
+binaries' `common::save_suite`) and compares each record's `min_ns`
+against the ceiling recorded in the baseline file. A record regresses
+when
+
+    observed_min_ns > ratio * baseline_min_ns
+
+with `ratio` taken from the baseline file (default 2.0 — the CI smoke
+gate is meant to catch order-of-magnitude regressions on shared runners,
+not single-digit-percent drift).
+
+Names present in the results but absent from the baseline are
+report-only (new benches land first, get a ceiling in a follow-up once a
+CI run has recorded real numbers). Names in the baseline but missing
+from the results are warned about, not failed — quick-mode knobs
+(`BATCHEDGE_BENCH_MAX_M`) legitimately drop points.
+
+Usage:
+    check_bench.py --baseline ci/bench-baseline.json BENCH_algo.json BENCH_fleet.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    with open(path) as f:
+        data = json.load(f)
+    suite = data.get("suite", path)
+    out = {}
+    for rec in data.get("results", []):
+        out[rec["name"]] = float(rec["min_ns"])
+    return suite, out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="baseline json path")
+    ap.add_argument("results", nargs="+", help="BENCH_<suite>.json files")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    ratio = float(baseline.get("ratio", 2.0))
+    suites = baseline.get("suites", {})
+
+    failures = []
+    seen = {s: set() for s in suites}
+    for path in args.results:
+        suite, results = load_results(path)
+        base = suites.get(suite, {})
+        for name, min_ns in sorted(results.items()):
+            ceiling = base.get(name, {}).get("min_ns")
+            if ceiling is None:
+                print(f"  new    {suite:>6} | {name}: {min_ns/1e6:.3f} ms (no baseline)")
+                continue
+            seen[suite].add(name)
+            limit = ratio * ceiling
+            status = "FAIL" if min_ns > limit else "ok"
+            print(
+                f"  {status:<6} {suite:>6} | {name}: {min_ns/1e6:.3f} ms "
+                f"(ceiling {ceiling/1e6:.3f} ms x{ratio:g})"
+            )
+            if min_ns > limit:
+                failures.append((suite, name, min_ns, limit))
+
+    for suite, base in suites.items():
+        for name in sorted(set(base) - seen.get(suite, set())):
+            print(f"  warn   {suite:>6} | {name}: in baseline but not in results")
+
+    if failures:
+        print(f"\n{len(failures)} bench regression(s) beyond {ratio:g}x the baseline:")
+        for suite, name, min_ns, limit in failures:
+            print(f"  {suite} | {name}: {min_ns/1e6:.3f} ms > {limit/1e6:.3f} ms")
+        return 1
+    print("\nbench gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
