@@ -20,8 +20,11 @@ use std::time::Instant;
 use batchedge::experiments::fleet::{
     run_fleet, run_fleet_cfg, run_fleet_fluid, serving_cfg, skewed_speeds,
 };
-use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FluidCfg, ServerProfile};
-use batchedge::scenario::mixed_gpu_tiers;
+use batchedge::fleet::{
+    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FluidCfg, ServerProfile,
+};
+use batchedge::obs::{FileSink, Tracer};
+use batchedge::scenario::{mixed_gpu_tiers, PopulationArrivals};
 
 fn main() {
     let quick = common::quick();
@@ -136,6 +139,56 @@ fn main() {
         );
         recs.push(common::Record {
             name: format!("fleet/event-core ns-per-event U={users}"),
+            mean_s: mean_ns_ev * 1e-9,
+            min_s: min_ns_ev * 1e-9,
+            reps,
+        });
+    }
+
+    // --- Same workload with 1 % lifecycle tracing attached — the
+    //     enabled-overhead point the observability spine budgets against.
+    //     New record name, so the baseline gate reports it without a
+    //     ceiling until one is pinned.
+    {
+        let users = if quick { 20_000 } else { 100_000 };
+        let path = std::env::temp_dir().join("batchedge_bench_trace.jsonl");
+        let (mut mean_ns_ev, mut min_ns_ev) = (0.0f64, f64::INFINITY);
+        for _ in 0..reps {
+            let fleet = FleetCfg {
+                servers: 8,
+                batch: BatchPolicy {
+                    shed_expired: false,
+                    max_queue: 1 << 20,
+                    ..BatchPolicy::default()
+                },
+                horizon_s: horizon,
+                seed: 7,
+                ..FleetCfg::default()
+            };
+            let arrivals = PopulationArrivals::stationary(&cfg.net.name, users, 0.05);
+            let mut engine = FleetEngine::new(
+                &cfg,
+                fleet,
+                DispatchPolicy::ShortestQueue.build(),
+                arrivals,
+            );
+            let sink = FileSink::create(&path).expect("temp trace file");
+            engine.set_tracer(Tracer::new(0.01, Box::new(sink)));
+            let t0 = Instant::now();
+            let rep = engine.run();
+            let dt = t0.elapsed().as_secs_f64();
+            let ns_ev = dt * 1e9 / rep.events as f64;
+            mean_ns_ev += ns_ev / reps as f64;
+            min_ns_ev = min_ns_ev.min(ns_ev);
+            std::hint::black_box(rep.completed);
+        }
+        std::fs::remove_file(&path).ok();
+        println!(
+            "bench fleet/event-core ns/event traced 1%           mean {mean_ns_ev:>10.1} ns  \
+             min {min_ns_ev:>10.1} ns"
+        );
+        recs.push(common::Record {
+            name: format!("fleet/event-core ns-per-event traced1% U={users}"),
             mean_s: mean_ns_ev * 1e-9,
             min_s: min_ns_ev * 1e-9,
             reps,

@@ -1,6 +1,12 @@
 //! Serving metrics: per-request records and aggregate reports.
+//!
+//! Latency percentiles come from the canonical [`LogHistogram`] (the same
+//! bucket scheme as `fleet::report`, so a pool-of-coordinators report is
+//! bitwise identical to a standalone coordinator's — the `fleet::pool`
+//! conservation anchor). Empty runs report NaN percentiles, rendered `-`.
 
-use crate::util::stats::{percentile, Accumulator};
+use crate::obs::hist::LogHistogram;
+use crate::util::stats::{fmt_ms, Accumulator};
 
 /// One completed inference request.
 #[derive(Debug, Clone)]
@@ -51,6 +57,9 @@ pub struct Report {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub records: Vec<RequestRecord>,
+    /// Mergeable latency histogram (the percentile source; fed by
+    /// [`Metrics::push`] alongside `records`).
+    pub latency: LogHistogram,
     pub real_compute_s: f64,
     pub batch_count: u64,
     pub batch_size_sum: u64,
@@ -58,6 +67,7 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn push(&mut self, r: RequestRecord) {
+        self.latency.record(r.latency_s);
         self.records.push(r);
     }
 
@@ -71,13 +81,11 @@ impl Metrics {
 
     pub fn report(&self, wall_s: f64) -> Report {
         let mut energy = Accumulator::new();
-        let mut lats: Vec<f64> = Vec::with_capacity(self.records.len());
         let mut violations = 0;
         let mut offloaded = 0;
         let mut forced = 0;
         for r in &self.records {
             energy.push(r.energy_j);
-            lats.push(r.latency_s);
             if r.latency_s > r.deadline_s + 1e-9 {
                 violations += 1;
             }
@@ -91,8 +99,9 @@ impl Metrics {
         Report {
             requests: n,
             energy_mean_j: energy.mean(),
-            latency_p50_s: if lats.is_empty() { 0.0 } else { percentile(&lats, 50.0) },
-            latency_p95_s: if lats.is_empty() { 0.0 } else { percentile(&lats, 95.0) },
+            // NaN when empty (no data ≠ zero latency).
+            latency_p50_s: self.latency.percentile(50.0),
+            latency_p95_s: self.latency.percentile(95.0),
             deadline_violations: violations,
             offloaded_frac: if n == 0 { 0.0 } else { offloaded as f64 / n as f64 },
             forced_frac: if n == 0 { 0.0 } else { forced as f64 / n as f64 },
@@ -114,12 +123,12 @@ impl Report {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} energy/task={:.4} J p50={:.1} ms p95={:.1} ms violations={} \
+            "requests={} energy/task={:.4} J p50={} ms p95={} ms violations={} \
              offloaded={:.0}% forced={:.0}% real_compute={:.2} s wall={:.2} s",
             self.requests,
             self.energy_mean_j,
-            self.latency_p50_s * 1e3,
-            self.latency_p95_s * 1e3,
+            fmt_ms(self.latency_p50_s),
+            fmt_ms(self.latency_p95_s),
             self.deadline_violations,
             self.offloaded_frac * 100.0,
             self.forced_frac * 100.0,
@@ -156,9 +165,18 @@ mod tests {
         assert_eq!(rep.deadline_violations, 1);
         assert!((rep.offloaded_frac - 1.0 / 3.0).abs() < 1e-12);
         assert!((rep.forced_frac - 1.0 / 3.0).abs() < 1e-12);
-        assert!((rep.latency_p50_s - 0.02).abs() < 1e-12);
+        // Histogram-backed percentile: ≤1% relative error vs the oracle.
+        assert!((rep.latency_p50_s - 0.02).abs() < 0.01 * 0.02);
         assert!(rep.render().contains("requests=3"));
         assert!((rep.throughput(2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_reports_dashes_not_zeros() {
+        let rep = Metrics::default().report(0.0);
+        assert_eq!(rep.requests, 0);
+        assert!(rep.latency_p50_s.is_nan() && rep.latency_p95_s.is_nan());
+        assert!(rep.render().contains("p50=- ms"));
     }
 
     #[test]

@@ -139,9 +139,10 @@ fn policy_grid_json(grid: &[(&'static str, FleetReport)]) -> Json {
                 (
                     name.to_string(),
                     Json::obj(vec![
-                        ("p50_s", Json::Num(r.latency_p50_s)),
-                        ("p95_s", Json::Num(r.latency_p95_s)),
-                        ("p99_s", Json::Num(r.latency_p99_s)),
+                        // Percentiles are NaN on empty runs; encode as null.
+                        ("p50_s", Json::num_or_null(r.latency_p50_s)),
+                        ("p95_s", Json::num_or_null(r.latency_p95_s)),
+                        ("p99_s", Json::num_or_null(r.latency_p99_s)),
                         ("shed_rate", Json::Num(r.shed_rate())),
                         ("completed", Json::Num(r.completed as f64)),
                     ]),
@@ -243,8 +244,8 @@ pub fn run(p: &Params) -> Result<()> {
     rep.json(
         "fluid_vs_event",
         Json::obj(vec![
-            ("event_p50_s", Json::Num(ev.latency_p50_s)),
-            ("fluid_p50_s", Json::Num(fl.report.latency_p50_s)),
+            ("event_p50_s", Json::num_or_null(ev.latency_p50_s)),
+            ("fluid_p50_s", Json::num_or_null(fl.report.latency_p50_s)),
             ("event_util", Json::Num(ev.utilization_mean())),
             ("fluid_util", Json::Num(fl.report.utilization_mean())),
             ("fluid_shards", Json::Num(fl.fluid_shards as f64)),

@@ -69,26 +69,32 @@
 //! [`run_fluid`] scales the oracle out: under random (or round-robin)
 //! dispatch a Poisson(λ) population stream splits into N independent
 //! Poisson(λ/N) shard streams, so every *stable* shard
-//! (`ρ ≤ hot_rho`) is advanced analytically — its report row is
-//! synthesized from the closed form plus Monte-Carlo draws of the radio
-//! uplink (i.i.d. upload displacement preserves the Poisson law at the
-//! queue) — while hot or saturated shards fall back to the event-by-event
-//! [`FleetEngine`](super::FleetEngine) on their thinned stream. A
-//! per-shard conservation ledger (`arrivals = served + shed + in-flight`)
-//! makes the hybrid accounting auditable at any horizon.
+//! (`ρ ≤ hot_rho`) is advanced analytically, while hot or saturated
+//! shards fall back to the event-by-event
+//! [`FleetEngine`](super::FleetEngine) on their thinned stream. An
+//! analytic shard's latency law is the exact convolution upload ⊕ wait ⊕
+//! own-batch service ([`QueueSolution::latency_distribution`]; i.i.d.
+//! upload displacement preserves the Poisson law at the queue), and the
+//! hybrid fleet report merges those closed-form CDFs with the event
+//! shards' histograms through the weighted quantile merge in
+//! [`crate::obs::hist`] — no Monte-Carlo latency pooling. Monte-Carlo
+//! draws remain only for the violation and energy estimates. A per-shard
+//! conservation ledger (`arrivals = served + shed + in-flight`) makes
+//! the hybrid accounting auditable at any horizon.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::obs::hist::Cdf;
 use crate::scenario::PopulationArrivals;
 use crate::util::rng::Rng;
 
 use super::engine::{FleetCfg, FleetEngine};
 use super::profile::{self, ResolvedServer, ServerProfile};
 use super::queue::BatchPolicy;
-use super::report::{FleetReport, ShardStats};
+use super::report::{AnalyticLatency, FleetReport, ShardStats};
 use super::DispatchPolicy;
 
 /// Stability gate: the embedded chain is solved only for
@@ -508,6 +514,57 @@ impl QueueSolution {
         }
         WaitDist { w, cdf }
     }
+
+    /// End-to-end latency CDF of a tagged job — upload displacement,
+    /// queue wait, then its own batch's service:
+    ///
+    /// ```text
+    /// F_lat(x) = Σ_b P(B = b) · (1/|U|) Σ_{u ∈ U} F_wait(x − u − s_b)
+    /// ```
+    ///
+    /// with `P(B = b)` the job-stationary batch law
+    /// ([`Self::job_batch_law`]) and `U` equal-mass atoms of the upload
+    /// law (see `upload_atoms`). Tabulated on a uniform `points` grid
+    /// spanning `[0, w_max + s_K + u_max]`, which covers everything but
+    /// the `1e-4` tail already truncated by `wait`.
+    pub fn latency_distribution(
+        &self,
+        wait: &WaitDist,
+        uploads: &[f64],
+        points: usize,
+    ) -> WaitDist {
+        assert!(points >= 8, "need a non-trivial grid");
+        assert!(!uploads.is_empty(), "need at least one upload atom");
+        let law = self.job_batch_law();
+        let u_max = uploads.iter().cloned().fold(0.0_f64, f64::max);
+        let s_k = self.service_s[self.max_batch - 1];
+        let x_max = wait.w.last().copied().unwrap_or(0.0) + s_k + u_max;
+        let w_u = 1.0 / uploads.len() as f64;
+        let xs: Vec<f64> =
+            (0..points).map(|i| x_max * i as f64 / (points - 1) as f64).collect();
+        let mut cdf: Vec<f64> = xs
+            .iter()
+            .map(|&x| {
+                let mut f = 0.0;
+                for (bi, &pb) in law.iter().enumerate() {
+                    if pb < 1e-15 {
+                        continue;
+                    }
+                    let s_b = self.service_s[bi];
+                    let mut inner = 0.0;
+                    for &u in uploads {
+                        inner += wait.cdf_at(x - u - s_b);
+                    }
+                    f += pb * w_u * inner;
+                }
+                f.min(1.0)
+            })
+            .collect();
+        for i in 1..cdf.len() {
+            cdf[i] = cdf[i].max(cdf[i - 1]);
+        }
+        WaitDist { w: xs, cdf }
+    }
 }
 
 /// A tabulated waiting-time CDF with inverse-transform helpers.
@@ -551,6 +608,37 @@ impl WaitDist {
         }
         acc
     }
+
+    /// `P(W ≤ x)` by linear interpolation on the tabulated grid: 0 below
+    /// the grid, the last tabulated value at or beyond its end.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if x < self.w[0] {
+            return 0.0;
+        }
+        let i = self.w.partition_point(|&wi| wi <= x);
+        if i >= self.w.len() {
+            return *self.cdf.last().unwrap();
+        }
+        let (w0, w1) = (self.w[i - 1], self.w[i]);
+        let (c0, c1) = (self.cdf[i - 1], self.cdf[i]);
+        if w1 > w0 {
+            c0 + (x - w0) / (w1 - w0) * (c1 - c0)
+        } else {
+            c1
+        }
+    }
+}
+
+/// A tabulated [`WaitDist`] is a [`Cdf`], so analytic shards can be
+/// quantile-merged with empirical histograms in `fleet::report`.
+impl Cdf for WaitDist {
+    fn cdf(&self, x: f64) -> f64 {
+        self.cdf_at(x)
+    }
+
+    fn upper_bound(&self) -> f64 {
+        *self.w.last().unwrap()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -563,8 +651,10 @@ pub struct FluidCfg {
     /// Shards with drift ratio above this stay event-by-event (the
     /// closed form is solved only for `ρ ≤` [`RHO_MAX`] anyway).
     pub hot_rho: f64,
-    /// Latency/radio Monte-Carlo draws per analytic shard (report
-    /// percentiles; capped by the shard's served count).
+    /// Radio/deadline Monte-Carlo draws per analytic shard — these feed
+    /// the violation and energy estimates only. Latency percentiles come
+    /// from the convolved closed-form law ([`FluidShardLaw::latency`]),
+    /// not from pooled samples.
     pub latency_samples: usize,
 }
 
@@ -572,6 +662,40 @@ impl Default for FluidCfg {
     fn default() -> Self {
         FluidCfg { hot_rho: 0.9, latency_samples: 2048 }
     }
+}
+
+/// Everything a stable shard needs to report latency without pooling
+/// Monte-Carlo samples: the closed-form solution, its tabulated wait
+/// distribution, and the convolved end-to-end latency CDF
+/// ([`QueueSolution::latency_distribution`]). Shards sharing a tier
+/// share one `Arc` of this.
+#[derive(Debug)]
+pub struct FluidShardLaw {
+    pub sol: QueueSolution,
+    pub wait: WaitDist,
+    pub latency: WaitDist,
+}
+
+/// Collapse the radio upload-time law into `atoms` equal-mass
+/// quantile-midpoint atoms: draw a large sample, sort it, and take the
+/// mean of each of `atoms` equal-count slices. The atoms' mean equals
+/// the sample mean exactly, and the convolution in
+/// [`QueueSolution::latency_distribution`] is then `O(atoms)` per grid
+/// point instead of `O(draws)`.
+fn upload_atoms(cfg: &SystemConfig, rng: &mut Rng, atoms: usize) -> Vec<f64> {
+    const DRAWS: usize = 4096;
+    let atoms = atoms.clamp(1, DRAWS);
+    let mut us: Vec<f64> = (0..DRAWS)
+        .map(|_| {
+            let (_d, rate_up, _dn) = cfg.radio.draw_user(rng);
+            cfg.net.input_bits / rate_up
+        })
+        .collect();
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let per = DRAWS / atoms;
+    (0..atoms)
+        .map(|i| us[i * per..(i + 1) * per].iter().sum::<f64>() / per as f64)
+        .collect()
 }
 
 /// Per-shard conservation ledger row: every offered request is accounted
@@ -642,13 +766,23 @@ pub fn run_fluid(
     };
     let resolved = profile::resolve(cfg, &profiles, fleet.batch);
 
+    // RNG layout: `mc_rng` is forked first so the per-shard pass-2 draw
+    // streams stay bit-identical across releases; `atom_rng` is a
+    // separate later fork, so tabulating upload atoms cannot perturb
+    // them.
+    let mut root = Rng::seed_from(fleet.seed);
+    let mut mc_rng = root.fork(0xF1D0);
+    let mut atom_rng = root.fork(0xA70);
+    let uploads = upload_atoms(cfg, &mut atom_rng, 128);
+
     // Solve each distinct (occupancy, speed, K) once; shards sharing a
-    // tier share the solution and its tabulated wait distribution.
+    // tier share the solution, its tabulated wait distribution, and the
+    // convolved end-to-end latency law.
     type Key = (usize, u64, usize);
     let key_of = |rs: &ResolvedServer| -> Key {
         (Arc::as_ptr(&rs.occupancy) as usize, rs.speed.to_bits(), rs.batch.max_batch)
     };
-    let mut solutions: HashMap<Key, Option<Arc<(QueueSolution, WaitDist)>>> = HashMap::new();
+    let mut solutions: HashMap<Key, Option<Arc<FluidShardLaw>>> = HashMap::new();
     for rs in &resolved {
         solutions.entry(key_of(rs)).or_insert_with(|| {
             let model = BatchQueueModel::from_resolved(rs, lambda_shard);
@@ -657,8 +791,9 @@ pub fn run_fluid(
             }
             match model.solve() {
                 BatchQueueAnalysis::Stable(sol) => {
-                    let dist = sol.wait_distribution(257);
-                    Some(Arc::new((sol, dist)))
+                    let wait = sol.wait_distribution(257);
+                    let latency = sol.latency_distribution(&wait, &uploads, 513);
+                    Some(Arc::new(FluidShardLaw { sol, wait, latency }))
                 }
                 BatchQueueAnalysis::Saturated { .. } => None,
             }
@@ -709,19 +844,19 @@ pub fn run_fluid(
         rows[i] = Some((name, stats));
     }
 
-    // Pass 2: analytic shards, synthesized against the final span.
-    let mut root = Rng::seed_from(fleet.seed);
-    let mut mc_rng = root.fork(0xF1D0);
+    // Pass 2: analytic shards, synthesized against the final span. The
+    // Monte-Carlo loop estimates violations and energy only; latency
+    // percentiles come from the convolved closed-form law, merged with
+    // any event-shard histograms by `FleetReport::from_mixed_shards`.
+    let mut analytic: Vec<Option<(Arc<FluidShardLaw>, f64)>> = (0..n).map(|_| None).collect();
     for (i, rs) in resolved.iter().enumerate() {
-        let Some(pair) = &solutions[&key_of(rs)] else { continue };
-        let (sol, dist) = (&pair.0, &pair.1);
+        let Some(shard_law) = &solutions[&key_of(rs)] else { continue };
+        let (sol, dist) = (&shard_law.sol, &shard_law.wait);
         let law = sol.job_batch_law();
         let offered = (lambda_shard * fleet.horizon_s).round() as u64;
-        // Monte-Carlo draws: radio uplink (displacement), own-batch
-        // service, queue wait — independent in steady state (validated
-        // against the event engine to ~2% on p50).
+        // Draw order (radio, wait, batch, deadline) is frozen — it keeps
+        // the streams bit-identical to earlier releases.
         let samples = fluid.latency_samples.clamp(1, offered.max(1) as usize);
-        let mut lat = Vec::with_capacity(samples);
         let (mut upload_sum, mut energy_sum, mut viol) = (0.0, 0.0, 0u64);
         for _ in 0..samples {
             let (_d, rate_up, _dn) = cfg.radio.draw_user(&mut mc_rng);
@@ -744,7 +879,6 @@ pub fn run_fluid(
             if latency > deadline + 1e-12 {
                 viol += 1;
             }
-            lat.push(latency);
         }
         let mean_upload = upload_sum / samples as f64;
         // Little's law on the whole pipeline (upload + queue + service)
@@ -760,7 +894,7 @@ pub fn run_fluid(
             batch_size_sum: served,
             busy_s: sol.utilization * span_s,
             energy_j: energy_sum / samples as f64 * served as f64,
-            latencies_s: lat,
+            ..ShardStats::default()
         };
         // `violations` may not exceed the sampled latencies' implication;
         // clamp to completed for tiny shards.
@@ -775,12 +909,19 @@ pub fn run_fluid(
             shed: 0,
             in_flight,
         });
+        analytic[i] = Some((Arc::clone(shard_law), mean_upload + sol.mean_response_s));
         rows[i] = Some((rs.name.clone(), stats));
     }
 
     let rows: Vec<(String, ShardStats)> = rows.into_iter().map(|r| r.unwrap()).collect();
-    let mut report = FleetReport::from_named_shards(
-        rows.iter().map(|(name, s)| (name.as_str(), s)),
+    let mut report = FleetReport::from_mixed_shards(
+        rows.iter().zip(&analytic).map(|((name, s), a)| {
+            let lat = a.as_ref().map(|(law, mean_s)| AnalyticLatency {
+                cdf: &law.latency as &dyn Cdf,
+                mean_s: *mean_s,
+            });
+            (name.as_str(), s, lat)
+        }),
         fleet.horizon_s,
         span_s,
         wall0.elapsed().as_secs_f64(),

@@ -35,7 +35,15 @@
 //!   high-fidelity cross-checks (an N=1 pool is bit-identical to a
 //!   standalone coordinator run);
 //! * [`report`] — per-shard metric aggregation into a fleet report
-//!   (p50/p95/p99 latency, shed rate, utilization, energy).
+//!   (p50/p95/p99 latency, shed rate, utilization, energy), backed by
+//!   the mergeable histograms in [`crate::obs::hist`]; hybrid fluid
+//!   pools join analytic CDFs and event histograms through the weighted
+//!   quantile merge.
+//!
+//! Observability hooks live in [`crate::obs`]: the engine can carry a
+//! sampled request-lifecycle [`Tracer`](crate::obs::Tracer) and a
+//! per-shard interval [`Timeline`](crate::obs::Timeline), both off (one
+//! branch, zero allocations) unless enabled.
 //!
 //! Future scaling PRs (multi-GPU pools, result caching, async backends)
 //! plug in as new `Dispatcher`/server models against the same event core.
@@ -50,8 +58,8 @@ pub mod queue;
 pub mod report;
 
 pub use analytic::{
-    run_fluid, BatchQueueAnalysis, BatchQueueModel, FluidCfg, FluidOutcome, QueueSolution,
-    ShardLedger, WaitDist,
+    run_fluid, BatchQueueAnalysis, BatchQueueModel, FluidCfg, FluidOutcome, FluidShardLaw,
+    QueueSolution, ShardLedger, WaitDist,
 };
 pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
 pub use engine::{FleetCfg, FleetEngine};

@@ -114,7 +114,11 @@ impl CoordinatorPool {
 ///
 /// The slotted coordinator has no shedding and does not meter server busy
 /// time, so `shed` and `busy_s` stay 0 (utilization reads 0 for pool
-/// shards).
+/// shards). Latencies land in the same canonical `LogHistogram` bucket
+/// scheme that `coordinator::metrics` uses, so an N=1 pool's percentiles
+/// stay **bitwise** equal to a standalone coordinator's — bucket counts
+/// are insertion-order independent and the quantile is a pure function
+/// of (counts, min, max).
 fn shard_stats(c: &Coordinator) -> ShardStats {
     let mut s = ShardStats::default();
     for r in &c.metrics.records {

@@ -5,8 +5,22 @@
 //! fleet report merges them into the numbers a serving operator watches:
 //! tail latency (p50/p95/p99), shed and deadline-violation rates, energy
 //! per request, mean batch size, and per-server utilization.
+//!
+//! Latency percentiles are backed by [`LogHistogram`] — fixed O(buckets)
+//! memory regardless of request count, declared relative error ≤ 1 %
+//! against the sort-based oracle
+//! ([`crate::util::stats::percentile_sorted`]), and exact `u64`-count merges
+//! across shards. Hybrid pools (event shards + closed-form analytic
+//! shards from [`super::analytic`]) combine through the weighted-CDF
+//! quantile merge ([`merged_quantile`]) instead of pooling Monte-Carlo
+//! latency samples: each analytic shard contributes its latency law as an
+//! [`AnalyticLatency`] weighted by its completions.
+//!
+//! Empty latency sets report `NaN` percentiles (rendered `-`), not `0.0`
+//! — an idle fleet is not an infinitely fast one.
 
-use crate::util::stats::percentile_sorted;
+use crate::obs::hist::{merged_quantile, Cdf, LogHistogram};
+use crate::util::stats::fmt_ms;
 use crate::util::table::Table;
 
 /// Serving statistics of one shard.
@@ -26,8 +40,14 @@ pub struct ShardStats {
     pub busy_s: f64,
     /// User-side energy of completed requests (J).
     pub energy_j: f64,
-    /// End-to-end latency of every completed request (s).
-    pub latencies_s: Vec<f64>,
+    /// End-to-end latency law of completed requests (log-bucketed;
+    /// O(buckets) memory independent of request count).
+    pub latency: LogHistogram,
+    /// Sort-oracle shadow of `latency` — test builds only, so the
+    /// differential suite can pin histogram percentiles against
+    /// `percentile_sorted` on real engine workloads.
+    #[cfg(test)]
+    pub latencies_raw: Vec<f64>,
 }
 
 impl ShardStats {
@@ -38,7 +58,9 @@ impl ShardStats {
             self.violations += 1;
         }
         self.energy_j += energy_j;
-        self.latencies_s.push(latency_s);
+        self.latency.record(latency_s);
+        #[cfg(test)]
+        self.latencies_raw.push(latency_s);
     }
 
     /// Fraction of the horizon this shard's server was busy.
@@ -49,6 +71,17 @@ impl ShardStats {
             self.busy_s / horizon_s
         }
     }
+}
+
+/// Closed-form latency law standing in for a shard that has no measured
+/// samples (a fluid-mode analytic shard): its CDF joins the fleet
+/// quantile merge weighted by the shard's completions, and `mean_s`
+/// joins the weighted fleet mean.
+pub struct AnalyticLatency<'a> {
+    /// End-to-end latency CDF (upload ⊕ wait ⊕ service).
+    pub cdf: &'a dyn Cdf,
+    /// Mean end-to-end latency (s).
+    pub mean_s: f64,
 }
 
 /// Per-server breakdown row of a fleet report — which tier carried what.
@@ -62,7 +95,8 @@ pub struct ServerBreakdown {
     pub deadline_violations: u64,
     /// Mean launched batch size on this server.
     pub mean_batch: f64,
-    /// This server's own completion-latency percentiles (s).
+    /// This server's own completion-latency percentiles (s; NaN when the
+    /// shard completed nothing).
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     /// Busy fraction over the simulated span.
@@ -78,10 +112,12 @@ pub struct FleetReport {
     pub completed: u64,
     pub shed: u64,
     pub deadline_violations: u64,
+    /// Fleet latency percentiles (s; NaN when nothing completed).
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_p99_s: f64,
-    /// Mean end-to-end latency over completed requests (s).
+    /// Mean end-to-end latency over completed requests (s; NaN when
+    /// nothing completed).
     pub latency_mean_s: f64,
     /// Mean user-side energy per completed request (J).
     pub energy_mean_j: f64,
@@ -101,12 +137,12 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
-    /// Merge per-shard stats (percentiles over the pooled latency set).
-    /// Takes references so fleet-scale engines aggregate without cloning
-    /// the per-request latency vectors. `horizon_s` is the arrival window
-    /// (the throughput denominator); `span_s` is the full simulated time
-    /// including any post-horizon drain (the utilization denominator) —
-    /// pass the same value when they coincide.
+    /// Merge per-shard stats (percentiles over the exact-count merge of
+    /// the shard histograms). Takes references so fleet-scale engines
+    /// aggregate without cloning per-shard state. `horizon_s` is the
+    /// arrival window (the throughput denominator); `span_s` is the full
+    /// simulated time including any post-horizon drain (the utilization
+    /// denominator) — pass the same value when they coincide.
     pub fn from_shards<'a, I>(shards: I, horizon_s: f64, span_s: f64, wall_s: f64) -> FleetReport
     where
         I: IntoIterator<Item = &'a ShardStats>,
@@ -125,12 +161,38 @@ impl FleetReport {
     where
         I: IntoIterator<Item = (&'a str, &'a ShardStats)>,
     {
-        let mut lats: Vec<f64> = Vec::new();
+        Self::from_mixed_shards(
+            shards.into_iter().map(|(n, s)| (n, s, None)),
+            horizon_s,
+            span_s,
+            wall_s,
+        )
+    }
+
+    /// The full constructor: shards may additionally carry an
+    /// [`AnalyticLatency`] law. All-measured pools take the pure
+    /// histogram path (quantiles bitwise independent of shard order);
+    /// as soon as one analytic law is present, fleet percentiles switch
+    /// to the weighted histogram⊕CDF quantile merge — no latency-sample
+    /// pooling anywhere.
+    pub fn from_mixed_shards<'a, I>(
+        shards: I,
+        horizon_s: f64,
+        span_s: f64,
+        wall_s: f64,
+    ) -> FleetReport
+    where
+        I: IntoIterator<Item = (&'a str, &'a ShardStats, Option<AnalyticLatency<'a>>)>,
+    {
         let (mut completed, mut shed, mut violations) = (0u64, 0u64, 0u64);
         let (mut batches, mut batch_sum) = (0u64, 0u64);
         let mut energy = 0.0;
         let mut per_server: Vec<ServerBreakdown> = Vec::new();
-        for (name, s) in shards {
+        let mut merged = LogHistogram::latency();
+        // (weight, law CDF, weighted mean contribution) of analytic shards.
+        let mut analytic: Vec<(f64, &'a dyn Cdf)> = Vec::new();
+        let mut analytic_mean_sum = 0.0;
+        for (name, s, law) in shards {
             completed += s.completed;
             shed += s.shed;
             violations += s.violations;
@@ -138,12 +200,20 @@ impl FleetReport {
             batch_sum += s.batch_size_sum;
             energy += s.energy_j;
             let util = s.utilization(span_s.max(horizon_s));
-            // One copy per shard: sort it for the breakdown percentiles,
-            // then move it into the fleet-wide pool (the aggregate sort
-            // below sees pre-sorted runs, so no work is duplicated).
-            let mut own = s.latencies_s.clone();
-            own.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let own_pct = |p: f64| if own.is_empty() { 0.0 } else { percentile_sorted(&own, p) };
+            let (own_p50, own_p95) = match &law {
+                Some(a) if s.latency.is_empty() && s.completed > 0 => {
+                    let one: [(f64, &dyn Cdf); 1] = [(1.0, a.cdf)];
+                    (merged_quantile(&one, 0.50), merged_quantile(&one, 0.95))
+                }
+                _ => (s.latency.percentile(50.0), s.latency.percentile(95.0)),
+            };
+            if let Some(a) = law {
+                if s.completed > 0 && s.latency.is_empty() {
+                    analytic.push((s.completed as f64, a.cdf));
+                    analytic_mean_sum += s.completed as f64 * a.mean_s;
+                }
+            }
+            merged.merge(&s.latency);
             per_server.push(ServerBreakdown {
                 name: if name.is_empty() {
                     format!("s{}", per_server.len())
@@ -158,27 +228,43 @@ impl FleetReport {
                 } else {
                     s.batch_size_sum as f64 / s.batches as f64
                 },
-                latency_p50_s: own_pct(50.0),
-                latency_p95_s: own_pct(95.0),
+                latency_p50_s: own_p50,
+                latency_p95_s: own_p95,
                 utilization: util,
             });
-            lats.append(&mut own);
         }
         // Kept as a flat view of per_server (single source: the loop above).
         let utilization: Vec<f64> = per_server.iter().map(|b| b.utilization).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
-        let latency_mean_s =
-            if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 };
+        let (p50, p95, p99) = if analytic.is_empty() {
+            // Pure-histogram path: quantiles are bitwise independent of
+            // shard order (exact u64-count merge).
+            (merged.quantile(0.50), merged.quantile(0.95), merged.quantile(0.99))
+        } else {
+            let mut parts: Vec<(f64, &dyn Cdf)> = analytic.clone();
+            if !merged.is_empty() {
+                parts.push((merged.count() as f64, &merged));
+            }
+            (
+                merged_quantile(&parts, 0.50),
+                merged_quantile(&parts, 0.95),
+                merged_quantile(&parts, 0.99),
+            )
+        };
+        let lat_weight = merged.count() as f64 + analytic.iter().map(|(w, _)| w).sum::<f64>();
+        let latency_mean_s = if lat_weight > 0.0 {
+            (merged.sum() + analytic_mean_sum) / lat_weight
+        } else {
+            f64::NAN
+        };
         FleetReport {
             servers: utilization.len(),
             requests: completed + shed,
             completed,
             shed,
             deadline_violations: violations,
-            latency_p50_s: pct(50.0),
-            latency_p95_s: pct(95.0),
-            latency_p99_s: pct(99.0),
+            latency_p50_s: p50,
+            latency_p95_s: p95,
+            latency_p99_s: p99,
             latency_mean_s,
             energy_mean_j: if completed == 0 { 0.0 } else { energy / completed as f64 },
             mean_batch: if batches == 0 { 0.0 } else { batch_sum as f64 / batches as f64 },
@@ -240,16 +326,16 @@ impl FleetReport {
     pub fn render(&self) -> String {
         format!(
             "servers={} requests={} completed={} shed={:.2}% viol={:.2}% \
-             p50={:.1} ms p95={:.1} ms p99={:.1} ms batch={:.2} util={:.0}% \
+             p50={} ms p95={} ms p99={} ms batch={:.2} util={:.0}% \
              energy/req={:.4} J thru={:.0} req/s wall={:.2} s",
             self.servers,
             self.requests,
             self.completed,
             self.shed_rate() * 100.0,
             self.violation_rate() * 100.0,
-            self.latency_p50_s * 1e3,
-            self.latency_p95_s * 1e3,
-            self.latency_p99_s * 1e3,
+            fmt_ms(self.latency_p50_s),
+            fmt_ms(self.latency_p95_s),
+            fmt_ms(self.latency_p99_s),
             self.mean_batch,
             self.utilization_mean() * 100.0,
             self.energy_mean_j,
@@ -262,9 +348,9 @@ impl FleetReport {
     pub fn table_cells(&self) -> Vec<String> {
         vec![
             format!("{}", self.requests),
-            format!("{:.1}", self.latency_p50_s * 1e3),
-            format!("{:.1}", self.latency_p95_s * 1e3),
-            format!("{:.1}", self.latency_p99_s * 1e3),
+            fmt_ms(self.latency_p50_s),
+            fmt_ms(self.latency_p95_s),
+            fmt_ms(self.latency_p99_s),
             format!("{:.2}", self.shed_rate() * 100.0),
             format!("{:.2}", self.violation_rate() * 100.0),
             format!("{:.2}", self.mean_batch),
@@ -293,8 +379,8 @@ impl FleetReport {
                 format!("{}", b.shed),
                 format!("{}", b.deadline_violations),
                 format!("{:.2}", b.mean_batch),
-                format!("{:.1}", b.latency_p50_s * 1e3),
-                format!("{:.1}", b.latency_p95_s * 1e3),
+                fmt_ms(b.latency_p50_s),
+                fmt_ms(b.latency_p95_s),
                 format!("{:.0}", b.utilization * 100.0),
             ]);
         }
@@ -322,6 +408,11 @@ impl FleetReport {
 mod tests {
     use super::*;
 
+    // Histogram-backed percentiles carry the declared ≤1% relative error.
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 0.01 * b.abs() + 1e-12
+    }
+
     #[test]
     fn merges_shards_and_rates() {
         let mut a = ShardStats::default();
@@ -345,8 +436,8 @@ mod tests {
         assert_eq!(rep.deadline_violations, 1);
         assert!((rep.shed_rate() - 0.25).abs() < 1e-12);
         assert!((rep.violation_rate() - 1.0 / 3.0).abs() < 1e-12);
-        assert!((rep.latency_p50_s - 0.020).abs() < 1e-12);
-        assert!((rep.latency_mean_s - 0.020).abs() < 1e-12);
+        assert!(close(rep.latency_p50_s, 0.020));
+        assert!((rep.latency_mean_s - 0.020).abs() < 1e-9, "means stay exact");
         assert_eq!(rep.events, 0, "non-event reports count no events");
         assert_eq!(rep.events_per_sec(), 0.0);
         assert!((rep.energy_mean_j - 2.0).abs() < 1e-12);
@@ -360,7 +451,7 @@ mod tests {
         assert_eq!(rep.per_server[0].name, "s0");
         assert_eq!(rep.per_server[0].completed, 2);
         assert_eq!(rep.per_server[1].shed, 1);
-        assert!((rep.per_server[0].latency_p50_s - 0.020).abs() < 1e-12);
+        assert!(close(rep.per_server[0].latency_p50_s, 0.020));
         assert!((rep.per_server[1].mean_batch - 1.0).abs() < 1e-12);
     }
 
@@ -392,13 +483,54 @@ mod tests {
     }
 
     #[test]
-    fn empty_fleet_reports_zeros() {
+    fn empty_fleet_reports_dashes_not_zeros() {
         let none: Vec<ShardStats> = Vec::new();
         let rep = FleetReport::from_shards(&none, 1.0, 1.0, 0.0);
         assert_eq!(rep.requests, 0);
-        assert_eq!(rep.latency_p99_s, 0.0);
+        // An idle fleet has *no* latency data — NaN, rendered "-", never
+        // a misleading 0.0 ("every request finished instantly").
+        assert!(rep.latency_p99_s.is_nan());
+        assert!(rep.latency_mean_s.is_nan());
+        assert!(rep.render().contains("p50=- ms"));
+        assert!(rep.table_cells().contains(&"-".to_string()));
         assert_eq!(rep.shed_rate(), 0.0);
         assert_eq!(rep.violation_rate(), 0.0);
         assert_eq!(rep.energy_mean_j, 0.0);
+    }
+
+    #[test]
+    fn analytic_shards_join_through_the_weighted_cdf_merge() {
+        use crate::obs::hist::Cdf;
+        // A synthetic closed-form law: U[2,3] latency, weight 100.
+        struct Unif;
+        impl Cdf for Unif {
+            fn cdf(&self, x: f64) -> f64 {
+                ((x - 2.0) / 1.0).clamp(0.0, 1.0)
+            }
+            fn upper_bound(&self) -> f64 {
+                3.0
+            }
+        }
+        let mut measured = ShardStats::default();
+        for i in 0..100 {
+            // U[0,1] on a grid: i/100 + 0.005.
+            measured.record_completion(i as f64 / 100.0 + 0.005, true, 0.0);
+        }
+        let analytic = ShardStats { completed: 100, ..ShardStats::default() };
+        let rep = FleetReport::from_mixed_shards(
+            [
+                ("ev", &measured, None),
+                ("an", &analytic, Some(AnalyticLatency { cdf: &Unif, mean_s: 2.5 })),
+            ],
+            1.0,
+            1.0,
+            0.0,
+        );
+        // 50/50 mixture of U[0,1] and U[2,3]: p25 = 0.5, p75 = 2.5.
+        assert!(close(rep.latency_p50_s, 1.0) || rep.latency_p50_s > 0.9);
+        assert!((rep.latency_mean_s - 1.5).abs() < 0.01);
+        // The analytic shard's breakdown row prices off its own law.
+        assert!((rep.per_server[1].latency_p50_s - 2.5).abs() < 0.01);
+        assert!(rep.per_server[1].latency_p95_s > 2.8);
     }
 }

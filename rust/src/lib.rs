@@ -40,6 +40,7 @@
 //! ```
 
 pub mod util;
+pub mod obs;
 pub mod config;
 pub mod dnn;
 pub mod wireless;

@@ -5,6 +5,9 @@
 //!   solve       solve one offline scenario and print the plan
 //!   serve       run the online serving coordinator (sim or real compute)
 //!   fleet       run the sharded multi-server fleet engine
+//!               (`--trace`/`--timeline` attach the obs:: telemetry spine)
+//!   report      render bench / trace / timeline artifacts into one
+//!               markdown run report
 //!   train       train a DDPG agent and print the learning curve
 //!   experiment  regenerate a paper table/figure (fig3 fig5 fig6 fig7
 //!               table3 fig8 table5 fleet fleet-hetero, or `all`)
@@ -20,6 +23,7 @@ use batchedge::experiments;
 use batchedge::fleet::{
     BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, FluidCfg, ServerProfile,
 };
+use batchedge::obs::{FileSink, LogHistogram, Tracer};
 use batchedge::rl::env::SchedulerAlg;
 use batchedge::rl::policy::{DdpgPolicy, FixedTwPolicy, LcPolicy, OnlinePolicy};
 use batchedge::rl::train::{train, TrainConfig};
@@ -28,6 +32,7 @@ use batchedge::scenario::{
     mixed_gpu_tiers, ArrivalKind, ArrivalProcess, PopulationArrivals, Scenario,
 };
 use batchedge::util::cli::{Cli, CliError};
+use batchedge::util::json::Json;
 use batchedge::util::rng::Rng;
 use batchedge::util::table::Table;
 
@@ -52,12 +57,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "solve" => cmd_solve(rest),
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
+        "report" => cmd_report(rest),
         "train" => cmd_train(rest),
         "experiment" => cmd_experiment(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "batchedge — multi-user co-inference with a batch-capable edge server\n\n\
-                 USAGE: batchedge <profile|solve|serve|fleet|train|experiment> [options]\n\
+                 USAGE: batchedge <profile|solve|serve|fleet|report|train|experiment> \
+                 [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -251,6 +258,10 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .opt("max-delay-ms", Some("10"), "dynamic batching: partial-batch delay")
         .opt("bandwidth-mhz", Some("20"), "serving uplink carrier per cell")
         .opt("seed", Some("1"), "rng seed")
+        .opt("trace", None, "write sampled request-lifecycle JSONL here")
+        .opt("trace-sample", Some("0.01"), "trace sampling rate in [0, 1]")
+        .opt("timeline", None, "write per-shard interval rollups (JSON) here")
+        .opt("timeline-dt-ms", Some("250"), "timeline interval width (ms)")
         .switch("skewed", "run the last quarter of servers at 0.25x speed")
         .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)")
         .switch("fluid", "fluid mode: stable shards closed-form, hot shards event-by-event");
@@ -269,6 +280,15 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             anyhow!("unknown policy {p} (rr|rand|jsq|p2c|deadline|jsq-count|p2c-count|all)")
         })?],
     };
+    let observing = args.str("trace").is_some() || args.str("timeline").is_some();
+    anyhow::ensure!(
+        !(observing && args.has("fluid")),
+        "--trace/--timeline need the event engine; drop --fluid"
+    );
+    anyhow::ensure!(
+        !observing || policies.len() == 1,
+        "--trace/--timeline want a single --policy, not `all`"
+    );
     anyhow::ensure!(
         !(args.has("skewed") && args.has("hetero")),
         "--skewed and --hetero are mutually exclusive"
@@ -342,7 +362,26 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
         };
-        let rep = FleetEngine::new(&cfg, fleet, policy.build(), arrivals).run();
+        let mut engine = FleetEngine::new(&cfg, fleet, policy.build(), arrivals);
+        if let Some(path) = args.str("trace") {
+            let sink = FileSink::create(std::path::Path::new(path))?;
+            engine.set_tracer(Tracer::new(args.f64("trace-sample")?, Box::new(sink)));
+        }
+        if args.str("timeline").is_some() {
+            let dt_ms = args.f64("timeline-dt-ms")?;
+            anyhow::ensure!(dt_ms > 0.0, "--timeline-dt-ms must be positive");
+            engine.set_timeline(dt_ms * 1e-3);
+        }
+        let names = engine.shard_names();
+        let rep = engine.run();
+        if let Some(path) = args.str("trace") {
+            println!("trace: wrote {path}");
+        }
+        if let Some(path) = args.str("timeline") {
+            let tl = engine.take_timeline().expect("timeline attached above");
+            tl.to_json(&names).write_file(std::path::Path::new(path))?;
+            println!("timeline: wrote {path}");
+        }
         println!("{}: {}", policy.name(), rep.render());
         let mut cells = vec![policy.name().to_string()];
         cells.extend(rep.table_cells());
@@ -359,6 +398,188 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             print!("{}", rep.server_table(&title).render());
         }
     }
+    Ok(())
+}
+
+/// `ns` rendered with a sensible unit (`ns`, `µs`, `ms`, `s`).
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    use std::fmt::Write as _;
+    let cli = Cli::new(
+        "batchedge report",
+        "render bench / trace / timeline artifacts into one markdown report",
+    )
+    .opt("dir", Some("."), "directory holding BENCH_*.json and BENCH_history.jsonl")
+    .opt("trace", None, "request-lifecycle JSONL from `fleet --trace`")
+    .opt("timeline", None, "per-shard timeline JSON from `fleet --timeline`")
+    .opt("out", Some("REPORT.md"), "output markdown path");
+    let args = cli.parse(argv)?;
+    let dir = std::path::PathBuf::from(args.str("dir").unwrap());
+    let mut md = String::from("# batchedge run report\n");
+
+    // ---- benchmark suites ------------------------------------------------
+    let mut suites: Vec<(String, Json)> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(&dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                suites.push((name, Json::from_file(&e.path())?));
+            }
+        }
+    }
+    suites.sort_by(|a, b| a.0.cmp(&b.0));
+    if suites.is_empty() {
+        md.push_str("\n_No `BENCH_*.json` suites found._\n");
+    } else {
+        md.push_str("\n## Benchmarks\n\n| suite | benchmark | mean | min | reps |\n");
+        md.push_str("|---|---|---:|---:|---:|\n");
+        for (_, doc) in &suites {
+            let suite = doc.get("suite").and_then(Json::as_str).unwrap_or("?");
+            for r in doc.get("results").and_then(Json::as_arr).unwrap_or_default() {
+                let name = r.get("name").and_then(Json::as_str).unwrap_or("?");
+                let mean = r.get("mean_ns").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let min = r.get("min_ns").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let reps = r.get("reps").and_then(Json::as_usize).unwrap_or(0);
+                let _ = writeln!(
+                    md,
+                    "| {suite} | {name} | {} | {} | {reps} |",
+                    fmt_ns(mean),
+                    fmt_ns(min)
+                );
+            }
+        }
+    }
+
+    // ---- bench history trajectory ---------------------------------------
+    let hist_path = dir.join("BENCH_history.jsonl");
+    if let Ok(text) = std::fs::read_to_string(&hist_path) {
+        // suite -> (records, latest ts, latest rev)
+        let mut per: std::collections::BTreeMap<String, (usize, String, String)> =
+            std::collections::BTreeMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let v = Json::parse(line)
+                .map_err(|e| anyhow!("{}: {e}", hist_path.display()))?;
+            let suite = v.get("suite").and_then(Json::as_str).unwrap_or("?").to_string();
+            let ts = v.get("ts").and_then(Json::as_str).unwrap_or("?").to_string();
+            let rev = v.get("rev").and_then(Json::as_str).unwrap_or("?").to_string();
+            let slot = per.entry(suite).or_insert((0, String::new(), String::new()));
+            slot.0 += 1;
+            slot.1 = ts;
+            slot.2 = rev;
+        }
+        md.push_str("\n## Bench history\n\n| suite | records | last run | last rev |\n");
+        md.push_str("|---|---:|---|---|\n");
+        for (suite, (n, ts, rev)) in &per {
+            let _ = writeln!(md, "| {suite} | {n} | {ts} | {rev} |");
+        }
+    }
+
+    // ---- request-lifecycle trace ----------------------------------------
+    if let Some(path) = args.str("trace") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let mut counts: std::collections::BTreeMap<String, u64> =
+            std::collections::BTreeMap::new();
+        let mut sheds: std::collections::BTreeMap<String, u64> =
+            std::collections::BTreeMap::new();
+        let mut lat = LogHistogram::latency();
+        let mut met = 0u64;
+        for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+            let v = Json::parse(line).map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
+            let ev = v
+                .get("ev")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{path}:{}: missing \"ev\"", i + 1))?;
+            match ev {
+                "arrive" | "enqueue" | "batch" => {}
+                "serve" => {
+                    let l = v
+                        .get("latency_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("{path}:{}: serve sans latency_s", i + 1))?;
+                    lat.record(l);
+                    met += u64::from(
+                        v.get("deadline_met").and_then(Json::as_bool).unwrap_or(false),
+                    );
+                }
+                "shed" => {
+                    let r = v.get("reason").and_then(Json::as_str).unwrap_or("?");
+                    *sheds.entry(r.to_string()).or_insert(0) += 1;
+                }
+                other => bail!("{path}:{}: unknown trace event {other:?}", i + 1),
+            }
+            *counts.entry(ev.to_string()).or_insert(0) += 1;
+        }
+        md.push_str("\n## Trace summary\n\n| event | lines |\n|---|---:|\n");
+        for (ev, n) in &counts {
+            let _ = writeln!(md, "| {ev} | {n} |");
+        }
+        for (reason, n) in &sheds {
+            let _ = writeln!(md, "| shed:{reason} | {n} |");
+        }
+        let _ = writeln!(
+            md,
+            "\nSampled serves: {} ({} met deadline); latency p50 = {} ms, \
+             p95 = {} ms, p99 = {} ms.",
+            lat.count(),
+            met,
+            batchedge::util::stats::fmt_ms(lat.percentile(50.0)),
+            batchedge::util::stats::fmt_ms(lat.percentile(95.0)),
+            batchedge::util::stats::fmt_ms(lat.percentile(99.0)),
+        );
+    }
+
+    // ---- per-shard timeline ----------------------------------------------
+    if let Some(path) = args.str("timeline") {
+        let v = Json::from_file(std::path::Path::new(path))?;
+        let dt = v.get("dt_s").and_then(Json::as_f64).unwrap_or(f64::NAN);
+        md.push_str("\n## Timeline\n\n");
+        let _ = writeln!(md, "Interval width {:.0} ms.\n", dt * 1e3);
+        md.push_str("| shard | intervals | served | shed | peak queue | mean util |\n");
+        md.push_str("|---|---:|---:|---:|---:|---:|\n");
+        for sh in v.get("shards").and_then(Json::as_arr).unwrap_or_default() {
+            let name = sh.get("name").and_then(Json::as_str).unwrap_or("?");
+            let iv = sh.get("intervals").and_then(Json::as_arr).unwrap_or_default();
+            let served: f64 = iv
+                .iter()
+                .filter_map(|r| r.get("served").and_then(Json::as_f64))
+                .sum();
+            let shed: f64 =
+                iv.iter().filter_map(|r| r.get("shed").and_then(Json::as_f64)).sum();
+            let peak_q = iv
+                .iter()
+                .filter_map(|r| r.get("queue_mean").and_then(Json::as_f64))
+                .fold(0.0_f64, f64::max);
+            let utils: Vec<f64> =
+                iv.iter().filter_map(|r| r.get("util").and_then(Json::as_f64)).collect();
+            let mean_util = batchedge::util::stats::mean(&utils);
+            let _ = writeln!(
+                md,
+                "| {name} | {} | {served:.0} | {shed:.0} | {peak_q:.1} | {mean_util:.2} |",
+                iv.len()
+            );
+        }
+    }
+
+    let out = std::path::PathBuf::from(args.str("out").unwrap());
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&out, &md)?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 

@@ -1,0 +1,427 @@
+//! Log-bucketed mergeable histograms with a bounded relative error.
+//!
+//! # Bucket scheme
+//!
+//! [`LogHistogram`] covers `(min_value, max_value)` with geometric buckets
+//! of ratio `γ = (1 + ε)²`: bucket `i` is `[min·γⁱ, min·γⁱ⁺¹)` and its
+//! representative value is the *geometric* midpoint `min·γ^(i+1/2)`. For
+//! any sample `x` landing in bucket `i`,
+//!
+//! ```text
+//! rep / x  ∈  [γ^(-1/2), γ^(1/2)]  =  [1/(1+ε), 1+ε]
+//! ```
+//!
+//! so every reconstructed sample is within relative error `ε` of the true
+//! value. Quantiles follow the same convention as
+//! [`crate::util::stats::percentile_sorted`] (the test oracle): the
+//! fractional rank `r = q·(n−1)` interpolates linearly between the order
+//! statistics at `⌊r⌋` and `⌈r⌉`, each reconstructed from its bucket
+//! representative. A convex combination of two values each within `ε`
+//! relative error is itself within `ε` of the same combination of the true
+//! order statistics, so the *quantile* error bound equals the per-sample
+//! bound. Representatives are additionally clamped to the exactly-tracked
+//! `[min_seen, max_seen]`, which can only shrink the error (the true order
+//! statistic always lies in that interval) and makes degenerate
+//! distributions (all samples equal) exact.
+//!
+//! The default latency configuration uses `ε = 0.005` over
+//! `[10⁻⁷ s, 10⁴ s]`, i.e. `⌈ln(10¹¹)/ln γ⌉ = 2540` buckets ≈ 20 KB of
+//! `u64` counters — fixed memory regardless of sample count, and a
+//! declared bound of **≤ 1 %** (2× headroom over the actual 0.5 % to
+//! absorb floating-point bucket-boundary rounding, which can shift a
+//! sample by at most one bucket).
+//!
+//! # Merging
+//!
+//! Two histograms with the same configuration merge by adding their `u64`
+//! bucket counts — an exact operation, so merged quantiles are bitwise
+//! independent of merge order and associativity holds exactly for counts
+//! and quantiles (the floating-point `sum` used for means is accumulated
+//! in merge order and is only approximately associative).
+//!
+//! Mixed pools (event-simulated shards + closed-form analytic shards)
+//! merge through the [`Cdf`] trait instead: [`merged_quantile`] inverts
+//! the weighted mixture CDF `F(x) = Σ wᵢ·Fᵢ(x) / Σ wᵢ` by monotone
+//! bisection, which is how fluid fleet reports combine measured
+//! histograms with `fleet::analytic::WaitDist` latency laws without ever
+//! pooling Monte-Carlo samples.
+
+/// Anything exposing a cumulative distribution function. Implemented by
+/// [`LogHistogram`] (empirical) and `fleet::analytic::WaitDist`
+/// (closed-form), so the two can be quantile-merged with weights.
+pub trait Cdf {
+    /// `P(X ≤ x)`. Must be monotone non-decreasing in `x`.
+    fn cdf(&self, x: f64) -> f64;
+    /// A value at (or beyond) which [`Cdf::cdf`] has reached its maximum.
+    fn upper_bound(&self) -> f64;
+}
+
+/// A mergeable histogram over geometric (log-spaced) buckets.
+///
+/// See the module docs for the bucket-scheme derivation and error bound.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Lower edge of bucket 0 (values below it count as underflow).
+    min_value: f64,
+    /// Geometric bucket ratio `γ = (1 + rel_err)²`.
+    gamma: f64,
+    ln_gamma: f64,
+    /// Declared relative-error bound `ε` (per sample and per quantile).
+    rel_err: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+    /// Exact running sum of the raw samples (means stay exact).
+    sum: f64,
+    min_seen: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// The canonical latency configuration: `ε = 0.005` over
+    /// `[0.1 µs, 10⁴ s]` (2540 buckets, ~20 KB). Every latency histogram
+    /// in the crate uses this one configuration so that shard histograms
+    /// always merge.
+    pub fn latency() -> LogHistogram {
+        LogHistogram::with_range(1e-7, 1e4, 0.005)
+    }
+
+    /// A histogram over `(min_value, max_value)` with per-sample relative
+    /// error at most `rel_err` (bucket ratio `(1 + rel_err)²`).
+    pub fn with_range(min_value: f64, max_value: f64, rel_err: f64) -> LogHistogram {
+        assert!(min_value > 0.0 && max_value > min_value, "bad histogram range");
+        assert!(rel_err > 0.0 && rel_err < 0.5, "bad histogram rel_err");
+        let gamma = (1.0 + rel_err) * (1.0 + rel_err);
+        let ln_gamma = gamma.ln();
+        let buckets = ((max_value / min_value).ln() / ln_gamma).ceil() as usize;
+        assert!(buckets > 0 && buckets <= 1 << 20, "histogram too fine");
+        LogHistogram {
+            min_value,
+            gamma,
+            ln_gamma,
+            rel_err,
+            counts: vec![0; buckets],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            min_seen: f64::INFINITY,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Number of buckets (the histogram's fixed memory footprint).
+    pub fn buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// The declared per-quantile relative-error bound.
+    pub fn rel_err(&self) -> f64 {
+        self.rel_err
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min_seen
+        }
+    }
+
+    /// Exact maximum recorded sample (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max_seen
+        }
+    }
+
+    /// Record one sample. Values below the range floor land in an
+    /// underflow counter (reported as `min_seen`); values at or above the
+    /// range ceiling land in an overflow counter (reported as `max_seen`).
+    pub fn record(&mut self, x: f64) {
+        assert!(x.is_finite(), "histogram sample must be finite, got {x}");
+        self.count += 1;
+        self.sum += x;
+        self.min_seen = self.min_seen.min(x);
+        self.max_seen = self.max_seen.max(x);
+        if x < self.min_value {
+            self.underflow += 1;
+        } else {
+            let i = ((x / self.min_value).ln() / self.ln_gamma) as usize;
+            if i >= self.counts.len() {
+                self.overflow += 1;
+            } else {
+                self.counts[i] += 1;
+            }
+        }
+    }
+
+    /// True when `other` uses the same bucket scheme and can be merged.
+    pub fn compatible(&self, other: &LogHistogram) -> bool {
+        self.min_value == other.min_value
+            && self.gamma == other.gamma
+            && self.counts.len() == other.counts.len()
+    }
+
+    /// Exact-count merge: bucket counts add as `u64`, so quantiles of the
+    /// result are bitwise independent of merge order.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(self.compatible(other), "merging incompatible histogram configs");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min_seen = self.min_seen.min(other.min_seen);
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+
+    /// Reconstructed value of the `k`-th order statistic (0-indexed,
+    /// `k < count`): the representative of the bucket holding it, clamped
+    /// to the exact `[min_seen, max_seen]`.
+    fn order_stat(&self, k: u64) -> f64 {
+        debug_assert!(k < self.count);
+        if k < self.underflow {
+            return self.min_seen;
+        }
+        let mut cum = self.underflow;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > k {
+                let rep = self.min_value * self.gamma.powf(i as f64 + 0.5);
+                return rep.clamp(self.min_seen, self.max_seen);
+            }
+        }
+        // Only the overflow region remains.
+        self.max_seen
+    }
+
+    /// Quantile `q ∈ [0, 1]` under the same fractional-rank convention as
+    /// [`crate::util::stats::percentile_sorted`]; NaN when empty. The
+    /// result is within `rel_err` (relative) of the sort-based oracle.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let r = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let lo_k = r.floor() as u64;
+        let hi_k = r.ceil() as u64;
+        let lo = self.order_stat(lo_k);
+        if hi_k == lo_k {
+            return lo;
+        }
+        let hi = self.order_stat(hi_k);
+        lo + (r - lo_k as f64) * (hi - lo)
+    }
+
+    /// Percentile `p ∈ [0, 100]` (NaN when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.quantile(p / 100.0)
+    }
+}
+
+impl Default for LogHistogram {
+    /// The canonical latency configuration ([`LogHistogram::latency`]).
+    fn default() -> LogHistogram {
+        LogHistogram::latency()
+    }
+}
+
+impl Cdf for LogHistogram {
+    /// Empirical CDF with log-linear interpolation inside the bucket
+    /// holding `x` (monotone; 0 below `min_seen`, 1 at `max_seen`).
+    fn cdf(&self, x: f64) -> f64 {
+        if self.count == 0 || x < self.min_seen {
+            return 0.0;
+        }
+        if x >= self.max_seen {
+            return 1.0;
+        }
+        let n = self.count as f64;
+        if x < self.min_value {
+            return self.underflow as f64 / n;
+        }
+        let pos = (x / self.min_value).ln() / self.ln_gamma;
+        let i = pos as usize;
+        if i >= self.counts.len() {
+            return (self.count - self.overflow) as f64 / n;
+        }
+        let below: u64 = self.underflow + self.counts[..i].iter().sum::<u64>();
+        (below as f64 + (pos - i as f64) * self.counts[i] as f64) / n
+    }
+
+    fn upper_bound(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_seen
+        }
+    }
+}
+
+/// Quantile of a weighted mixture of CDFs: the smallest `x` with
+/// `Σ wᵢ·Fᵢ(x) / Σ wᵢ ≥ q`, found by monotone bisection. Parts with
+/// non-positive weight are ignored; NaN when no weight remains. This is
+/// the hybrid-pool path: event shards contribute [`LogHistogram`]s
+/// (weight = completions), analytic shards contribute closed-form latency
+/// laws (weight = fluid completions).
+pub fn merged_quantile(parts: &[(f64, &dyn Cdf)], q: f64) -> f64 {
+    let total: f64 = parts.iter().map(|(w, _)| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let mixture = |x: f64| -> f64 {
+        parts
+            .iter()
+            .filter(|(w, _)| *w > 0.0)
+            .map(|(w, c)| w * c.cdf(x))
+            .sum::<f64>()
+            / total
+    };
+    let mut hi = parts
+        .iter()
+        .filter(|(w, _)| *w > 0.0)
+        .map(|(_, c)| c.upper_bound())
+        .fold(0.0_f64, f64::max);
+    if hi <= 0.0 {
+        return 0.0;
+    }
+    let mut lo = 0.0;
+    // 100 halvings drive the bracket far below any physical resolution.
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if mixture(mid) >= q {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Quantile of a single CDF via the same bisection (used for per-shard
+/// breakdown rows of analytic shards).
+pub fn cdf_quantile(c: &dyn Cdf, q: f64) -> f64 {
+    merged_quantile(&[(1.0, c)], q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn quantiles_track_the_sort_oracle_within_the_declared_bound() {
+        let mut rng = Rng::seed_from(11);
+        for n in [3usize, 47, 1000, 20_000] {
+            let mut h = LogHistogram::latency();
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| match rng.usize_below(3) {
+                    0 => rng.uniform(1e-4, 0.25),
+                    1 => rng.exponential(50.0),
+                    _ => (rng.normal() * 0.8).exp() * 0.01,
+                })
+                .collect();
+            for &x in &xs {
+                h.record(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [0.0, 10.0, 50.0, 95.0, 99.0, 99.9, 100.0] {
+                let oracle = percentile_sorted(&xs, p);
+                let got = h.percentile(p);
+                assert!(
+                    (got - oracle).abs() <= h.rel_err() * oracle.abs() + 1e-12,
+                    "n={n} p={p}: hist {got} vs oracle {oracle}"
+                );
+            }
+            assert!((h.mean() - xs.iter().sum::<f64>() / n as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn degenerate_and_out_of_range_samples_stay_exact_at_the_edges() {
+        let mut h = LogHistogram::latency();
+        for _ in 0..10 {
+            h.record(0.25);
+        }
+        assert_eq!(h.percentile(50.0).to_bits(), 0.25_f64.to_bits());
+        // Underflow/overflow are reported as the exact extremes.
+        h.record(1e-9);
+        h.record(5e4);
+        assert_eq!(h.percentile(0.0).to_bits(), 1e-9_f64.to_bits());
+        assert_eq!(h.percentile(100.0).to_bits(), 5e4_f64.to_bits());
+        assert!(LogHistogram::latency().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn merge_counts_are_exact_and_order_independent() {
+        let mut rng = Rng::seed_from(3);
+        let hs: Vec<LogHistogram> = (0..3)
+            .map(|_| {
+                let mut h = LogHistogram::latency();
+                for _ in 0..500 {
+                    h.record(rng.exponential(20.0));
+                }
+                h
+            })
+            .collect();
+        let mut ab_c = hs[0].clone();
+        ab_c.merge(&hs[1]);
+        ab_c.merge(&hs[2]);
+        let mut c_ba = hs[2].clone();
+        c_ba.merge(&hs[1]);
+        c_ba.merge(&hs[0]);
+        assert_eq!(ab_c.count(), c_ba.count());
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(ab_c.percentile(p).to_bits(), c_ba.percentile(p).to_bits());
+        }
+        assert!((ab_c.mean() - c_ba.mean()).abs() < 1e-12 * ab_c.mean().abs());
+    }
+
+    #[test]
+    fn mixture_bisection_inverts_a_known_two_component_cdf() {
+        // 50/50 mixture of U[0,1] (empirical) and U[2,3] (empirical):
+        // p25 = 0.5, p75 = 2.5 in the continuum limit.
+        let mut rng = Rng::seed_from(9);
+        let mut a = LogHistogram::latency();
+        let mut b = LogHistogram::latency();
+        for _ in 0..40_000 {
+            a.record(rng.uniform(1e-6, 1.0));
+            b.record(rng.uniform(2.0, 3.0));
+        }
+        let parts: [(f64, &dyn Cdf); 2] = [(1.0, &a), (1.0, &b)];
+        assert!((merged_quantile(&parts, 0.25) - 0.5).abs() < 0.02);
+        assert!((merged_quantile(&parts, 0.75) - 2.5).abs() < 0.05);
+        assert!(merged_quantile(&[(0.0, &a as &dyn Cdf)], 0.5).is_nan());
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability: the telemetry spine of the serving stack.
+//!
+//! Three small building blocks that the fleet and coordinator layers
+//! thread through their hot paths:
+//!
+//! * [`hist`] — log-bucketed mergeable histograms with a declared ≤ 1 %
+//!   relative-error bound and fixed O(buckets) memory. They replace the
+//!   pooled `Vec<f64>` + sort behind every latency percentile in
+//!   `fleet::report` and `coordinator::metrics`, merge exactly across
+//!   shards, and — through the [`hist::Cdf`] trait — quantile-merge with
+//!   the closed-form `fleet::analytic::WaitDist` latency laws so hybrid
+//!   analytic+event pools get principled tail percentiles.
+//! * [`trace`] — sampled per-request lifecycle events
+//!   (arrive → enqueue → batch → serve/shed) as schema-stable JSONL
+//!   through a pluggable sink. Sampling is a deterministic hash of the
+//!   request id, so a request is either fully traced or invisible.
+//! * [`timeline`] — fixed-interval per-shard rollups (queue depth,
+//!   utilization, batch-size mean, shed count, events/s), turning runs
+//!   into time series.
+//!
+//! Design rule: when disabled (the engine holds `Option`s), each
+//! instrument costs the hot loop exactly one branch per event and zero
+//! allocations. `batchedge report` and `scripts/render_report.py` render
+//! the emitted artifacts — plus the checked-in `BENCH_*.json` trajectory —
+//! into one markdown run report.
+
+pub mod hist;
+pub mod timeline;
+pub mod trace;
+
+pub use hist::{cdf_quantile, merged_quantile, Cdf, LogHistogram};
+pub use timeline::{IntervalStats, Timeline};
+pub use trace::{FileSink, MemSink, TraceSink, Tracer};

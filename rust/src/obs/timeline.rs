@@ -1,0 +1,305 @@
+//! Fixed-interval per-shard rollups: runs emit time series, not just
+//! end-of-run scalars.
+//!
+//! A [`Timeline`] divides simulation time into intervals of `dt_s` and
+//! accumulates, per shard and interval: admitted arrivals, served and
+//! shed requests, launched batches and their size sum, busy seconds
+//! (batch service spans split exactly across interval boundaries), the
+//! time-integral of queue depth (`∫ depth dt`, so `queue_area / dt` is
+//! the interval's mean queue depth), and the number of observed queue /
+//! batch operations (an events-per-second proxy). Counters are exact
+//! `u64`s, so per-interval `served`/`shed` sums equal the end-of-run
+//! [`crate::fleet::FleetReport`] totals — the conservation property the
+//! test suite pins.
+//!
+//! The engine holds `Option<Timeline>`: disabled runs pay one branch per
+//! event and allocate nothing.
+
+use crate::util::json::Json;
+
+/// One shard × interval cell. All counters are assigned to the interval
+/// containing the event time; only continuous quantities (`busy_s`,
+/// `queue_area`) are split across boundaries.
+#[derive(Debug, Clone, Default)]
+pub struct IntervalStats {
+    /// Requests admitted into the queue this interval.
+    pub arrivals: u64,
+    /// Requests completed (batch finished) this interval.
+    pub served: u64,
+    /// Requests shed this interval (queue-full + expired-at-launch).
+    pub shed: u64,
+    /// Batches launched this interval.
+    pub batches: u64,
+    /// Sum of launched batch sizes (mean batch = sum / batches).
+    pub batch_size_sum: u64,
+    /// Seconds of batch service overlapping this interval.
+    pub busy_s: f64,
+    /// `∫ depth dt` over this interval (mean depth = area / dt).
+    pub queue_area: f64,
+    /// Queue/batch operations observed (events-per-second proxy).
+    pub events: u64,
+}
+
+/// Per-shard fixed-interval rollups; see the module docs.
+#[derive(Debug)]
+pub struct Timeline {
+    dt_s: f64,
+    rows: Vec<Vec<IntervalStats>>,
+    depth: Vec<u64>,
+    depth_from_s: Vec<f64>,
+    end_s: f64,
+}
+
+impl Timeline {
+    pub fn new(dt_s: f64, shards: usize) -> Timeline {
+        assert!(dt_s > 0.0 && dt_s.is_finite(), "timeline dt must be positive");
+        Timeline {
+            dt_s,
+            rows: vec![Vec::new(); shards],
+            depth: vec![0; shards],
+            depth_from_s: vec![0.0; shards],
+            end_s: 0.0,
+        }
+    }
+
+    pub fn dt_s(&self) -> f64 {
+        self.dt_s
+    }
+
+    pub fn shards(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The rollup row for one shard (intervals in time order; trailing
+    /// intervals a shard never touched may be absent).
+    pub fn shard(&self, i: usize) -> &[IntervalStats] {
+        &self.rows[i]
+    }
+
+    fn cell_idx(&mut self, shard: usize, idx: usize) -> &mut IntervalStats {
+        let row = &mut self.rows[shard];
+        if row.len() <= idx {
+            row.resize_with(idx + 1, IntervalStats::default);
+        }
+        &mut row[idx]
+    }
+
+    fn cell(&mut self, shard: usize, t: f64) -> &mut IntervalStats {
+        self.end_s = self.end_s.max(t);
+        let idx = (t / self.dt_s) as usize;
+        self.cell_idx(shard, idx)
+    }
+
+    /// Spread `value`-per-second over `[from, to)`, split exactly across
+    /// interval boundaries, into the field chosen by `pick`.
+    ///
+    /// Walks by bucket *index* rather than re-deriving the index from `t`
+    /// each step: when a boundary `k·dt` divided by `dt` rounds below `k`,
+    /// the index-from-time form recomputes `edge == t` and would drop the
+    /// rest of the span. Segment lengths telescope, so the per-cell areas
+    /// always sum to `rate·(to − from)` exactly (up to fp addition).
+    fn spread(
+        &mut self,
+        shard: usize,
+        from: f64,
+        to: f64,
+        rate: f64,
+        pick: impl Fn(&mut IntervalStats) -> &mut f64,
+    ) {
+        if to <= from || rate == 0.0 {
+            return;
+        }
+        let dt = self.dt_s;
+        let mut t = from;
+        let mut idx = (t / dt) as usize;
+        while t < to {
+            let mut edge = (idx as f64 + 1.0) * dt;
+            // Float guard: `t` can sit at/after the edge of the bucket its
+            // quotient named; advance to the bucket that contains it.
+            while edge <= t {
+                idx += 1;
+                edge = (idx as f64 + 1.0) * dt;
+            }
+            let seg_end = edge.min(to);
+            *pick(self.cell_idx(shard, idx)) += rate * (seg_end - t);
+            t = seg_end;
+            idx += 1;
+        }
+        self.end_s = self.end_s.max(to);
+    }
+
+    /// Integrate the standing queue depth up to `t` (call before any
+    /// depth change).
+    fn settle_depth(&mut self, shard: usize, t: f64) {
+        let from = self.depth_from_s[shard];
+        let d = self.depth[shard];
+        if d > 0 {
+            self.spread(shard, from, t, d as f64, |c| &mut c.queue_area);
+        }
+        self.depth_from_s[shard] = t;
+    }
+
+    /// A request was admitted; `depth_after` is the queue depth after it.
+    pub fn observe_admit(&mut self, shard: usize, t: f64, depth_after: usize) {
+        self.settle_depth(shard, t);
+        self.depth[shard] = depth_after as u64;
+        let c = self.cell(shard, t);
+        c.arrivals += 1;
+        c.events += 1;
+    }
+
+    /// `n` requests were shed (admission rejection or expiry at launch).
+    pub fn observe_shed(&mut self, shard: usize, t: f64, n: u64) {
+        let c = self.cell(shard, t);
+        c.shed += n;
+        c.events += 1;
+    }
+
+    /// The queue depth changed to `depth` (e.g. a batch was pulled).
+    pub fn set_depth(&mut self, shard: usize, t: f64, depth: usize) {
+        self.settle_depth(shard, t);
+        self.depth[shard] = depth as u64;
+    }
+
+    /// A batch of `size` launched at `t`, busy for `service_s`.
+    pub fn observe_batch(&mut self, shard: usize, t: f64, size: u64, service_s: f64) {
+        {
+            let c = self.cell(shard, t);
+            c.batches += 1;
+            c.batch_size_sum += size;
+            c.events += 1;
+        }
+        self.spread(shard, t, t + service_s, 1.0, |c| &mut c.busy_s);
+    }
+
+    /// `n` requests completed at `t`.
+    pub fn observe_serve(&mut self, shard: usize, t: f64, n: u64) {
+        let c = self.cell(shard, t);
+        c.served += n;
+        c.events += 1;
+    }
+
+    /// Close the run at `span_s`: settle queue integrals on every shard.
+    pub fn finish(&mut self, span_s: f64) {
+        for shard in 0..self.rows.len() {
+            self.settle_depth(shard, span_s);
+        }
+        self.end_s = self.end_s.max(span_s);
+    }
+
+    /// `(arrivals, served, shed, batches)` summed over all cells — the
+    /// conservation side of the timeline.
+    pub fn totals(&self) -> (u64, u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64, 0u64);
+        for row in &self.rows {
+            for c in row {
+                t.0 += c.arrivals;
+                t.1 += c.served;
+                t.2 += c.shed;
+                t.3 += c.batches;
+            }
+        }
+        t
+    }
+
+    /// Render as JSON: `{dt_s, end_s, shards: [{name, intervals: [...]}]}`
+    /// with per-interval derived rates (`util`, `queue_mean`, `mean_batch`
+    /// as `null` when no batch launched, `events_per_s`).
+    pub fn to_json(&self, names: &[String]) -> Json {
+        assert_eq!(names.len(), self.rows.len());
+        let shards: Vec<Json> = self
+            .rows
+            .iter()
+            .zip(names)
+            .map(|(row, name)| {
+                let intervals: Vec<Json> = row
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        let mean_batch = if c.batches > 0 {
+                            c.batch_size_sum as f64 / c.batches as f64
+                        } else {
+                            f64::NAN
+                        };
+                        Json::obj(vec![
+                            ("t0_s", Json::Num(i as f64 * self.dt_s)),
+                            ("arrivals", Json::Num(c.arrivals as f64)),
+                            ("served", Json::Num(c.served as f64)),
+                            ("shed", Json::Num(c.shed as f64)),
+                            ("batches", Json::Num(c.batches as f64)),
+                            ("mean_batch", Json::num_or_null(mean_batch)),
+                            ("util", Json::Num(c.busy_s / self.dt_s)),
+                            ("queue_mean", Json::Num(c.queue_area / self.dt_s)),
+                            ("events_per_s", Json::Num(c.events as f64 / self.dt_s)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("intervals", Json::Arr(intervals)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("dt_s", Json::Num(self.dt_s)),
+            ("end_s", Json::Num(self.end_s)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_split_exactly_across_interval_boundaries() {
+        let mut tl = Timeline::new(1.0, 1);
+        // A 2.5 s batch starting at 0.75 touches intervals 0..=3.
+        tl.observe_batch(0, 0.75, 4, 2.5);
+        tl.finish(4.0);
+        let row = tl.shard(0);
+        assert!((row[0].busy_s - 0.25).abs() < 1e-12);
+        assert!((row[1].busy_s - 1.0).abs() < 1e-12);
+        assert!((row[2].busy_s - 1.0).abs() < 1e-12);
+        assert!((row[3].busy_s - 0.25).abs() < 1e-12);
+        let total: f64 = row.iter().map(|c| c.busy_s).sum();
+        assert!((total - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spread_conserves_mass_when_a_boundary_quotient_rounds_down() {
+        // With this dt, `t = 44·dt` divides back to 43.999…; the old
+        // time-derived walk recomputed `edge == t` at that boundary and
+        // dropped the remaining ~1.5 s of the span.
+        let (dt, from, to) =
+            (0.244_828_153_962_981_74, 8.474_337_369_372_327, 12.293_210_464_255_397);
+        let mut tl = Timeline::new(dt, 1);
+        tl.observe_batch(0, from, 1, to - from);
+        let total: f64 = tl.shard(0).iter().map(|c| c.busy_s).sum();
+        let want = to - from;
+        assert!(
+            (total - want).abs() < 1e-9,
+            "lost {} s of busy time",
+            want - total
+        );
+        for c in tl.shard(0) {
+            assert!(c.busy_s <= dt * (1.0 + 1e-12), "cell overfull: {}", c.busy_s);
+        }
+    }
+
+    #[test]
+    fn queue_depth_integrates_between_changes() {
+        let mut tl = Timeline::new(1.0, 1);
+        tl.observe_admit(0, 0.5, 1); // depth 1 from 0.5
+        tl.observe_admit(0, 1.0, 2); // depth 2 from 1.0
+        tl.set_depth(0, 2.0, 0); // drained at 2.0
+        tl.finish(3.0);
+        let row = tl.shard(0);
+        // ∫depth dt: [0.5,1.0)×1 = 0.5 in interval 0; [1.0,2.0)×2 = 2.0
+        // in interval 1; nothing after.
+        assert!((row[0].queue_area - 0.5).abs() < 1e-12);
+        assert!((row[1].queue_area - 2.0).abs() < 1e-12);
+        assert_eq!(tl.totals().0, 2);
+    }
+}

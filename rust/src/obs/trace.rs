@@ -1,0 +1,219 @@
+//! Sampled per-request lifecycle tracing as schema-stable JSONL.
+//!
+//! A [`Tracer`] decides *per request id* whether a request is traced, by
+//! hashing the id (splitmix64 finalizer) against a fixed threshold —
+//! deterministic, seed-free, and consistent across the whole lifecycle:
+//! either every hop of a request is emitted or none is. A batch record is
+//! emitted when any of its members is sampled. With the tracer detached
+//! (the engine holds `Option<Tracer>`), the hot event loop pays exactly
+//! one branch per event and zero allocations.
+//!
+//! # Schema (one JSON object per line, `"ev"` discriminates)
+//!
+//! | `ev`      | keys                                                            |
+//! |-----------|-----------------------------------------------------------------|
+//! | `arrive`  | `t, id, user, shard, deadline_s, upload_s, queued`              |
+//! | `enqueue` | `t, id, shard, queued`                                          |
+//! | `batch`   | `t, shard, batch, size, queued`                                 |
+//! | `serve`   | `t, id, shard, batch, size, latency_s, deadline_met`            |
+//! | `shed`    | `t, id, shard, reason` (`"queue_full"` or `"expired"`)          |
+//!
+//! `t` is simulation seconds; `queued` is the queue depth *after* the
+//! event; `batch` is a per-shard 1-based batch sequence number, so
+//! `(shard, batch)` joins `serve` rows to their `batch` row.
+//! `scripts/render_report.py --trace` validates this schema in CI.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::fleet::Request;
+
+/// Destination for trace lines. Implementations must not add or strip
+/// newlines beyond terminating each line.
+pub trait TraceSink {
+    fn write_line(&mut self, line: &str);
+    fn flush(&mut self) {}
+}
+
+/// Buffered file sink (the `batchedge fleet --trace PATH` target).
+pub struct FileSink {
+    w: BufWriter<File>,
+}
+
+impl FileSink {
+    /// Create (truncate) `path`, creating parent directories as needed.
+    pub fn create(path: &Path) -> std::io::Result<FileSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(FileSink { w: BufWriter::new(File::create(path)?) })
+    }
+}
+
+impl TraceSink for FileSink {
+    fn write_line(&mut self, line: &str) {
+        // An exhausted disk during tracing should not abort a simulation.
+        let _ = writeln!(self.w, "{line}");
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// In-memory sink sharing its lines through an `Arc<Mutex<_>>` — the
+/// test harness's window into what the engine emitted.
+pub struct MemSink {
+    lines: Arc<Mutex<Vec<String>>>,
+}
+
+impl MemSink {
+    /// Returns the sink and the shared buffer it appends to.
+    pub fn new() -> (MemSink, Arc<Mutex<Vec<String>>>) {
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        (MemSink { lines: Arc::clone(&lines) }, lines)
+    }
+}
+
+impl TraceSink for MemSink {
+    fn write_line(&mut self, line: &str) {
+        self.lines.lock().unwrap().push(line.to_string());
+    }
+}
+
+/// splitmix64 finalizer: a bijective avalanche of the request id, giving
+/// an unbiased Bernoulli(rate) over ids without touching the simulation's
+/// RNG streams.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Emits sampled lifecycle events to a [`TraceSink`].
+pub struct Tracer {
+    /// Sample iff `mix64(id) <= threshold`; 0 disables, `u64::MAX` is 100 %.
+    threshold: u64,
+    sink: Box<dyn TraceSink>,
+    lines: u64,
+}
+
+impl Tracer {
+    /// `sample_rate` is clamped to `[0, 1]`; 0 never samples, 1 always.
+    pub fn new(sample_rate: f64, sink: Box<dyn TraceSink>) -> Tracer {
+        let rate = sample_rate.clamp(0.0, 1.0);
+        let threshold = if rate >= 1.0 { u64::MAX } else { (rate * u64::MAX as f64) as u64 };
+        Tracer { threshold, sink, lines: 0 }
+    }
+
+    /// Whether request `id` is in the sampled population.
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        self.threshold != 0 && mix64(id) <= self.threshold
+    }
+
+    /// Lines emitted so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    pub fn flush(&mut self) {
+        self.sink.flush();
+    }
+
+    fn emit(&mut self, line: String) {
+        self.sink.write_line(&line);
+        self.lines += 1;
+    }
+
+    pub fn arrive(&mut self, t: f64, req: &Request, shard: usize, queued: usize) {
+        self.emit(format!(
+            "{{\"ev\":\"arrive\",\"t\":{t},\"id\":{},\"user\":{},\"shard\":{shard},\
+             \"deadline_s\":{},\"upload_s\":{},\"queued\":{queued}}}",
+            req.id, req.user, req.deadline_s, req.upload_s
+        ));
+    }
+
+    pub fn enqueue(&mut self, t: f64, id: u64, shard: usize, queued: usize) {
+        self.emit(format!(
+            "{{\"ev\":\"enqueue\",\"t\":{t},\"id\":{id},\"shard\":{shard},\"queued\":{queued}}}"
+        ));
+    }
+
+    pub fn batch(&mut self, t: f64, shard: usize, batch: u64, size: usize, queued: usize) {
+        self.emit(format!(
+            "{{\"ev\":\"batch\",\"t\":{t},\"shard\":{shard},\"batch\":{batch},\
+             \"size\":{size},\"queued\":{queued}}}"
+        ));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve(
+        &mut self,
+        t: f64,
+        id: u64,
+        shard: usize,
+        batch: u64,
+        size: usize,
+        latency_s: f64,
+        deadline_met: bool,
+    ) {
+        self.emit(format!(
+            "{{\"ev\":\"serve\",\"t\":{t},\"id\":{id},\"shard\":{shard},\"batch\":{batch},\
+             \"size\":{size},\"latency_s\":{latency_s},\"deadline_met\":{deadline_met}}}"
+        ));
+    }
+
+    /// `reason` must be one of the schema tokens (`queue_full`, `expired`).
+    pub fn shed(&mut self, t: f64, id: u64, shard: usize, reason: &str) {
+        self.emit(format!(
+            "{{\"ev\":\"shed\",\"t\":{t},\"id\":{id},\"shard\":{shard},\"reason\":\"{reason}\"}}"
+        ));
+    }
+}
+
+impl Drop for Tracer {
+    fn drop(&mut self) {
+        self.sink.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_rate_is_honored_over_the_id_space() {
+        let (sink, _) = MemSink::new();
+        let tr = Tracer::new(0.01, Box::new(sink));
+        let hits = (0..100_000u64).filter(|&id| tr.sampled(id)).count();
+        // Binomial(1e5, 0.01): mean 1000, sd ~31.5 — allow 6 sigma.
+        assert!((800..1200).contains(&hits), "hits={hits}");
+        let (sink, _) = MemSink::new();
+        let off = Tracer::new(0.0, Box::new(sink));
+        assert!((0..10_000u64).all(|id| !off.sampled(id)));
+        let (sink, _) = MemSink::new();
+        let all = Tracer::new(1.0, Box::new(sink));
+        assert!((0..10_000u64).all(|id| all.sampled(id)));
+    }
+
+    #[test]
+    fn lines_are_json_objects_with_the_documented_keys() {
+        let (sink, lines) = MemSink::new();
+        let mut tr = Tracer::new(1.0, Box::new(sink));
+        tr.enqueue(0.5, 7, 2, 3);
+        tr.shed(0.6, 8, 2, "queue_full");
+        let got = lines.lock().unwrap().clone();
+        assert_eq!(got.len(), 2);
+        let v = crate::util::json::Json::parse(&got[0]).unwrap();
+        assert_eq!(v.get("ev").and_then(|j| j.as_str()), Some("enqueue"));
+        assert_eq!(v.get("id").and_then(|j| j.as_f64()), Some(7.0));
+        assert_eq!(v.get("queued").and_then(|j| j.as_f64()), Some(3.0));
+        assert_eq!(tr.lines(), 2);
+    }
+}

@@ -104,6 +104,17 @@ impl Json {
 
     // ---------------------------------------------------------- constructors
 
+    /// `Json::Num` for finite values, `Json::Null` otherwise — the
+    /// canonical encoding for optional statistics (e.g. the NaN that
+    /// empty-sample percentiles report).
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -154,7 +165,12 @@ impl fmt::Display for Json {
             Json::Bool(true) => f.write_str("true"),
             Json::Bool(false) => f.write_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; emit the one
+                    // universally parseable spelling instead of breaking
+                    // the document. Prefer `num_or_null` at build time.
+                    f.write_str("null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     // Shortest round-trip repr Rust gives us.
@@ -464,6 +480,17 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(4.0).to_string(), "4");
         assert_eq!(Json::Num(4.25).to_string(), "4.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(2.5), Json::Num(2.5));
+        // The document stays parseable even with a NaN smuggled in.
+        let doc = Json::obj(vec![("p99", Json::Num(f64::NAN))]);
+        assert_eq!(Json::parse(&doc.to_string()).unwrap().get("p99"), Some(&Json::Null));
     }
 
     #[test]

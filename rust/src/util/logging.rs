@@ -1,11 +1,16 @@
 //! Minimal `log`-facade backend (env-filtered, stderr).
 //!
-//! `RUST_LOG=debug batchedge ...` raises verbosity; default level is `info`.
+//! `RUST_LOG=debug batchedge ...` raises verbosity; default level is
+//! `info`. Level names are case-insensitive (`Debug`, `DEBUG`, ... all
+//! work) and `off` silences logging entirely. An unrecognized value —
+//! e.g. a per-module filter like `RUST_LOG=fleet=debug`, which this
+//! minimal backend does not support — falls back to `info` and warns
+//! once, instead of being silently ignored.
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
+use log::{LevelFilter, Log, Metadata, Record};
 
 struct StderrLogger {
-    max: Level,
+    max: LevelFilter,
 }
 
 impl Log for StderrLogger {
@@ -27,27 +32,65 @@ impl Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse one `RUST_LOG` level token, case-insensitively. `None` means
+/// the value is not a level this backend understands.
+fn parse_level(raw: &str) -> Option<LevelFilter> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" => Some(LevelFilter::Info),
+        "off" | "none" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" | "warning" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 /// Install the logger once; later calls are no-ops.
 pub fn init() {
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("trace") => Level::Trace,
-        Ok("debug") => Level::Debug,
-        Ok("warn") => Level::Warn,
-        Ok("error") => Level::Error,
-        _ => Level::Info,
+    let raw = std::env::var("RUST_LOG").ok();
+    let (level, unrecognized) = match raw.as_deref() {
+        None => (LevelFilter::Info, None),
+        Some(s) => match parse_level(s) {
+            Some(l) => (l, None),
+            None => (LevelFilter::Info, Some(s.to_string())),
+        },
     };
-    let logger = Box::new(StderrLogger { max: level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+    if log::set_boxed_logger(Box::new(StderrLogger { max: level })).is_ok() {
+        log::set_max_level(level);
+        // Only the call that actually installed the logger reaches this
+        // branch, so the warning fires at most once per process.
+        if let Some(bad) = unrecognized {
+            log::warn!(
+                "unrecognized RUST_LOG value {bad:?}; defaulting to info \
+                 (expected one of off|error|warn|info|debug|trace)"
+            );
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn levels_parse_case_insensitively_with_off() {
+        assert_eq!(parse_level("Debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("TRACE"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level(" warn "), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("warning"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level(""), Some(LevelFilter::Info));
+        // Per-module filters and typos are flagged, not silently info'd.
+        assert_eq!(parse_level("fleet=debug"), None);
+        assert_eq!(parse_level("verbose"), None);
     }
 }

@@ -64,6 +64,11 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 
 /// Percentile of an **already sorted** slice — callers taking several
 /// percentiles of one large sample sort once and index repeatedly.
+///
+/// This is also the **oracle** for [`crate::obs::hist::LogHistogram`]:
+/// the histogram's `quantile` follows the same fractional-rank linear
+/// interpolation and the property suite pins it against this function
+/// within the histogram's declared relative-error bound.
 pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
     assert!(!v.is_empty(), "percentile of empty slice");
     let rank = (p / 100.0) * (v.len() - 1) as f64;
@@ -78,6 +83,16 @@ pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
 
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { f64::NAN } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Render seconds as `{:.1}` milliseconds, with NaN — the empty-sample
+/// percentile marker — shown as `-` instead of a misleading `0.0`.
+pub fn fmt_ms(x_s: f64) -> String {
+    if x_s.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.1}", x_s * 1e3)
+    }
 }
 
 /// Equal-width histogram over `[lo, hi]` with `bins` buckets.

@@ -1,0 +1,213 @@
+//! Observability-spine integration tests: the log-bucket histogram vs
+//! the sort oracle on randomized workloads, exact/order-independent
+//! merging, the weighted histogram⊕CDF quantile merge on a pinned
+//! mixture, timeline conservation against the fleet report, and
+//! request-lifecycle trace coverage at the sampling-rate extremes.
+
+use batchedge::experiments::fleet::serving_cfg;
+use batchedge::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine};
+use batchedge::obs::{merged_quantile, Cdf, LogHistogram, MemSink, Tracer};
+use batchedge::scenario::PopulationArrivals;
+use batchedge::util::json::Json;
+use batchedge::util::rng::Rng;
+use batchedge::util::stats::percentile_sorted;
+
+#[test]
+fn histogram_quantiles_track_the_sort_oracle_across_random_workloads() {
+    let mut rng = Rng::seed_from(0x0B5);
+    for &n in &[5usize, 100, 3_000, 50_000] {
+        let mut h = LogHistogram::latency();
+        let mut xs = Vec::with_capacity(n);
+        for i in 0..n {
+            // A lumpy mixture: broad uniform, exponential tail, and a
+            // narrow spike — the shapes fleet latency actually takes.
+            let x = match i % 3 {
+                0 => rng.uniform(1e-4, 2.0),
+                1 => 1e-6 + rng.exponential(10.0),
+                _ => 0.05 + rng.uniform(0.0, 1e-3),
+            };
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &p in &[0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            let oracle = percentile_sorted(&xs, p);
+            let got = h.percentile(p);
+            assert!(
+                (got - oracle).abs() <= h.rel_err() * oracle.abs() + 1e-12,
+                "n={n} p{p}: hist {got} vs oracle {oracle}"
+            );
+        }
+    }
+}
+
+#[test]
+fn histogram_merge_is_exact_commutative_and_associative() {
+    let mut rng = Rng::seed_from(7);
+    let mut parts: Vec<LogHistogram> = Vec::new();
+    let mut all = Vec::new();
+    for _ in 0..3 {
+        let mut h = LogHistogram::latency();
+        for _ in 0..5_000 {
+            let x = rng.uniform(1e-3, 3.0);
+            h.record(x);
+            all.push(x);
+        }
+        parts.push(h);
+    }
+    let merge_in = |order: &[usize]| {
+        let mut m = LogHistogram::latency();
+        for &i in order {
+            m.merge(&parts[i]);
+        }
+        m
+    };
+    let abc = merge_in(&[0, 1, 2]);
+    let cba = merge_in(&[2, 1, 0]);
+    // (a ⊕ b) ⊕ c against a ⊕ (b ⊕ c).
+    let mut bc = LogHistogram::latency();
+    bc.merge(&parts[1]);
+    bc.merge(&parts[2]);
+    let mut a_bc = LogHistogram::latency();
+    a_bc.merge(&parts[0]);
+    a_bc.merge(&bc);
+    assert_eq!(abc.count(), 15_000, "counts merge exactly (u64, no rounding)");
+    for q in [0.1, 0.5, 0.95, 0.999] {
+        let bits = abc.quantile(q).to_bits();
+        assert_eq!(bits, cba.quantile(q).to_bits(), "commutative at q={q}");
+        assert_eq!(bits, a_bc.quantile(q).to_bits(), "associative at q={q}");
+    }
+    // The merged histogram still tracks the pooled sort oracle.
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let oracle = percentile_sorted(&all, 95.0);
+    assert!((abc.percentile(95.0) - oracle).abs() <= abc.rel_err() * oracle);
+}
+
+/// Closed-form uniform CDF standing in for an analytic shard law.
+struct Unif {
+    lo: f64,
+    hi: f64,
+}
+
+impl Cdf for Unif {
+    fn cdf(&self, x: f64) -> f64 {
+        ((x - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0)
+    }
+
+    fn upper_bound(&self) -> f64 {
+        self.hi
+    }
+}
+
+#[test]
+fn weighted_cdf_merge_recovers_the_pinned_mixture_quantiles() {
+    // 0.9 · U[0,1] (measured histogram) ⊕ 0.1 · U[2,3] (analytic law):
+    // F(x) = 0.9x on [0,1] and 0.9 + 0.1(x−2) on [2,3], so
+    // p50 = 5/9, p99 = 2.9, p99.5 = 2.95 — the pinned answers.
+    let mut h = LogHistogram::latency();
+    let n = 90_000;
+    for i in 0..n {
+        h.record((i as f64 + 0.5) / n as f64);
+    }
+    let tail = Unif { lo: 2.0, hi: 3.0 };
+    let parts: [(f64, &dyn Cdf); 2] = [(n as f64, &h), (n as f64 / 9.0, &tail)];
+    let p50 = merged_quantile(&parts, 0.50);
+    assert!((p50 - 5.0 / 9.0).abs() < 0.01, "p50 {p50}");
+    // Beyond the histogram's support the merge is exact to bisection
+    // precision — the tail quantiles come purely from the analytic law.
+    let p99 = merged_quantile(&parts, 0.99);
+    assert!((p99 - 2.9).abs() < 1e-6, "p99 {p99}");
+    let p995 = merged_quantile(&parts, 0.995);
+    assert!((p995 - 2.95).abs() < 1e-6, "p99.5 {p995}");
+}
+
+/// The shared obs workload: a skewed two-server pool with a tight queue,
+/// so completions, queue-full sheds and expiry sheds all occur.
+fn obs_engine(cfg: &std::sync::Arc<batchedge::config::SystemConfig>, horizon_s: f64) -> FleetEngine {
+    let batch = BatchPolicy { max_queue: 24, ..BatchPolicy::default() };
+    let fleet = FleetCfg {
+        servers: 2,
+        speeds: vec![1.0, 0.25],
+        batch,
+        horizon_s,
+        seed: 5,
+        ..FleetCfg::default()
+    };
+    let arrivals = PopulationArrivals::stationary("mobilenet_v2", 30_000, 0.05);
+    FleetEngine::new(cfg, fleet, DispatchPolicy::RoundRobin.build(), arrivals)
+}
+
+#[test]
+fn timeline_intervals_conserve_the_fleet_report_totals() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let mut engine = obs_engine(&cfg, 2.0);
+    engine.set_timeline(0.25);
+    let names = engine.shard_names();
+    let rep = engine.run();
+    let tl = engine.take_timeline().expect("timeline attached");
+    assert!(rep.completed > 0 && rep.shed > 0, "workload exercises both paths: {}", rep.render());
+
+    let (admitted, served, shed, batches) = tl.totals();
+    assert_eq!(served, rep.completed, "every completion lands in an interval");
+    assert_eq!(shed, rep.shed, "every shed lands in an interval");
+    assert!(batches > 0);
+    // Admissions sit between completions (some admitted jobs expire) and
+    // offered load (queue-full rejects are never admitted).
+    assert!(admitted >= rep.completed && admitted <= rep.requests);
+
+    // The JSON rollup carries the same totals, shard by shard.
+    let doc = tl.to_json(&names);
+    assert_eq!(doc.get("dt_s").and_then(Json::as_f64), Some(0.25));
+    let shards = doc.get("shards").and_then(Json::as_arr).unwrap();
+    assert_eq!(shards.len(), 2);
+    let mut json_served = 0.0;
+    for sh in shards {
+        for iv in sh.get("intervals").and_then(Json::as_arr).unwrap() {
+            json_served += iv.get("served").and_then(Json::as_f64).unwrap();
+            let util = iv.get("util").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0 + 1e-9).contains(&util), "util bounded: {util}");
+        }
+    }
+    assert_eq!(json_served as u64, rep.completed);
+}
+
+#[test]
+fn full_rate_trace_covers_the_lifecycle_and_zero_rate_is_silent() {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let base = obs_engine(&cfg, 1.0).run();
+
+    let (sink, lines) = MemSink::new();
+    let mut engine = obs_engine(&cfg, 1.0);
+    engine.set_tracer(Tracer::new(1.0, Box::new(sink)));
+    let rep = engine.run();
+    // Tracing must not perturb the simulation: splitmix sampling never
+    // touches the engine's RNG streams.
+    assert_eq!(rep.completed, base.completed);
+    assert_eq!(rep.shed, base.shed);
+    assert_eq!(rep.latency_p50_s.to_bits(), base.latency_p50_s.to_bits());
+    assert_eq!(rep.latency_p99_s.to_bits(), base.latency_p99_s.to_bits());
+
+    let lines = lines.lock().unwrap().clone();
+    let mut count = std::collections::BTreeMap::new();
+    for line in &lines {
+        let v = Json::parse(line).expect("trace lines are JSON objects");
+        let ev = v.get("ev").and_then(Json::as_str).expect("ev key").to_string();
+        assert!(
+            ["arrive", "enqueue", "batch", "serve", "shed"].contains(&ev.as_str()),
+            "unknown event {ev}"
+        );
+        *count.entry(ev).or_insert(0u64) += 1;
+    }
+    let of = |ev: &str| count.get(ev).copied().unwrap_or(0);
+    assert_eq!(of("arrive"), rep.requests, "one arrive line per offered request");
+    assert_eq!(of("serve"), rep.completed, "one serve line per completion");
+    assert_eq!(of("shed"), rep.shed, "one shed line per shed");
+    assert!(of("batch") > 0 && of("enqueue") > 0);
+
+    let (sink, silent) = MemSink::new();
+    let mut engine = obs_engine(&cfg, 1.0);
+    engine.set_tracer(Tracer::new(0.0, Box::new(sink)));
+    let rep0 = engine.run();
+    assert_eq!(rep0.completed, base.completed, "rate 0 is also non-perturbing");
+    assert!(silent.lock().unwrap().is_empty(), "rate 0 emits nothing");
+}

@@ -18,13 +18,53 @@ CI run has recorded real numbers). Names in the baseline but missing
 from the results are warned about, not failed — quick-mode knobs
 (`BATCHEDGE_BENCH_MAX_M`) legitimately drop points.
 
+With `--history PATH`, every run (pass or fail) also appends one JSONL
+record per suite — `{"ts", "rev", "suite", "results"}` — so trajectories
+accumulate across commits and `batchedge report` /
+`scripts/render_report.py` can render them without scraping CI logs.
+
 Usage:
-    check_bench.py --baseline ci/bench-baseline.json BENCH_algo.json BENCH_fleet.json
+    check_bench.py --baseline ci/bench-baseline.json \
+        [--history BENCH_history.jsonl] BENCH_algo.json BENCH_fleet.json
 """
 
 import argparse
+import datetime
 import json
+import os
+import subprocess
 import sys
+
+
+def git_rev():
+    """Best-effort commit id: git, then CI env, then 'unknown'."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")[:12] or "unknown"
+
+
+def append_history(path, result_paths):
+    ts = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
+    rev = git_rev()
+    with open(path, "a") as f:
+        for rp in result_paths:
+            with open(rp) as rf:
+                data = json.load(rf)
+            rec = {
+                "ts": ts,
+                "rev": rev,
+                "suite": data.get("suite", rp),
+                "results": data.get("results", []),
+            }
+            f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+    print(f"history: appended {len(result_paths)} record(s) to {path} @ {rev}")
 
 
 def load_results(path):
@@ -40,6 +80,10 @@ def load_results(path):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="baseline json path")
+    ap.add_argument(
+        "--history",
+        help="JSONL path to append {ts, rev, suite, results} records to",
+    )
     ap.add_argument("results", nargs="+", help="BENCH_<suite>.json files")
     args = ap.parse_args()
 
@@ -71,6 +115,11 @@ def main():
     for suite, base in suites.items():
         for name in sorted(set(base) - seen.get(suite, set())):
             print(f"  warn   {suite:>6} | {name}: in baseline but not in results")
+
+    # Record the trajectory point before gating — a failing run is still
+    # a data point worth keeping.
+    if args.history:
+        append_history(args.history, args.results)
 
     if failures:
         print(f"\n{len(failures)} bench regression(s) beyond {ratio:g}x the baseline:")

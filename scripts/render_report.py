@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Render one markdown run report from the observability artifacts.
+
+Python mirror of `batchedge report`, used by CI so a job can validate
+trace/timeline output and publish a human-readable summary without a
+second cargo invocation. Inputs (all optional, all combined into one
+document):
+
+  * `BENCH_<suite>.json` files found in `--dir` — the per-commit bench
+    records written by the Rust bench binaries,
+  * `BENCH_history.jsonl` in `--dir` — the trajectory appended by
+    `scripts/check_bench.py --history`,
+  * `--trace trace.jsonl` — a request-lifecycle trace from
+    `batchedge fleet --trace`; the schema is validated strictly and any
+    violation (unknown event kind, missing required key, non-JSON line)
+    exits 1, which is what makes the CI trace-smoke leg a real gate,
+  * `--timeline timeline.json` — the interval rollup from
+    `batchedge fleet --timeline`.
+
+Usage:
+    render_report.py [--dir .] [--trace trace.jsonl]
+        [--timeline timeline.json] [--out REPORT.md]
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# Required keys per trace event kind — the schema contract the Rust
+# emitter (`obs::trace`) promises and downstream tooling relies on.
+TRACE_SCHEMA = {
+    "arrive": {"t", "id", "user", "shard", "deadline_s", "upload_s", "queued"},
+    "enqueue": {"t", "id", "shard", "queued"},
+    "batch": {"t", "shard", "batch", "size", "queued"},
+    "serve": {"t", "id", "shard", "batch", "size", "latency_s", "deadline_met"},
+    "shed": {"t", "id", "shard", "reason"},
+}
+SHED_REASONS = {"queue_full", "expired"}
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.3f} s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.3f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.3f} µs"
+    return f"{ns:.1f} ns"
+
+
+def bench_section(dirpath, out):
+    paths = sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json")))
+    paths = [p for p in paths if not p.endswith(".jsonl")]
+    if not paths:
+        return
+    out.append("## Benchmarks\n")
+    out.append("| suite | benchmark | mean | min | reps |")
+    out.append("|---|---|---:|---:|---:|")
+    for path in paths:
+        with open(path) as f:
+            data = json.load(f)
+        suite = data.get("suite", os.path.basename(path))
+        for rec in data.get("results", []):
+            out.append(
+                f"| {suite} | {rec['name']} | {fmt_ns(rec['mean_ns'])} "
+                f"| {fmt_ns(rec['min_ns'])} | {rec.get('reps', '-')} |"
+            )
+    out.append("")
+
+
+def history_section(dirpath, out):
+    path = os.path.join(dirpath, "BENCH_history.jsonl")
+    if not os.path.exists(path):
+        return
+    per_suite = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            s = per_suite.setdefault(rec["suite"], {"n": 0})
+            s["n"] += 1
+            s["ts"], s["rev"] = rec.get("ts", "-"), rec.get("rev", "-")
+    if not per_suite:
+        return
+    out.append("## Bench history\n")
+    out.append("| suite | records | last run | last rev |")
+    out.append("|---|---:|---|---|")
+    for suite in sorted(per_suite):
+        s = per_suite[suite]
+        out.append(f"| {suite} | {s['n']} | {s['ts']} | {s['rev']} |")
+    out.append("")
+
+
+def trace_section(path, out):
+    counts, reasons = {}, {}
+    met, latencies = 0, []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                sys.exit(f"{path}:{lineno}: not JSON: {e}")
+            kind = ev.get("ev")
+            if kind not in TRACE_SCHEMA:
+                sys.exit(f"{path}:{lineno}: unknown event kind {kind!r}")
+            missing = TRACE_SCHEMA[kind] - set(ev)
+            if missing:
+                sys.exit(
+                    f"{path}:{lineno}: {kind} missing keys {sorted(missing)}"
+                )
+            counts[kind] = counts.get(kind, 0) + 1
+            if kind == "shed":
+                reason = ev["reason"]
+                if reason not in SHED_REASONS:
+                    sys.exit(f"{path}:{lineno}: unknown shed reason {reason!r}")
+                reasons[reason] = reasons.get(reason, 0) + 1
+            elif kind == "serve":
+                latencies.append(float(ev["latency_s"]))
+                met += bool(ev["deadline_met"])
+    out.append("## Trace summary\n")
+    out.append("| event | count |")
+    out.append("|---|---:|")
+    for kind in ("arrive", "enqueue", "batch", "serve", "shed"):
+        if kind in counts:
+            out.append(f"| {kind} | {counts[kind]} |")
+    for reason in sorted(reasons):
+        out.append(f"| shed/{reason} | {reasons[reason]} |")
+    out.append("")
+    if latencies:
+        latencies.sort()
+
+        def pct(p):
+            # Fractional-rank interpolation, matching util::stats.
+            r = p / 100.0 * (len(latencies) - 1)
+            lo, hi = int(r), min(int(r) + 1, len(latencies) - 1)
+            return latencies[lo] + (r - lo) * (latencies[hi] - latencies[lo])
+
+        out.append(
+            f"Sampled completions: {len(latencies)} "
+            f"({met} met deadline) — latency p50 {pct(50) * 1e3:.2f} ms, "
+            f"p95 {pct(95) * 1e3:.2f} ms, p99 {pct(99) * 1e3:.2f} ms.\n"
+        )
+    print(f"trace: {sum(counts.values())} events validated against schema")
+
+
+def timeline_section(path, out):
+    with open(path) as f:
+        doc = json.load(f)
+    out.append("## Timeline\n")
+    out.append(f"Interval width: {doc.get('dt_s', '?')} s.\n")
+    out.append("| shard | intervals | served | shed | peak queue | mean util |")
+    out.append("|---|---:|---:|---:|---:|---:|")
+    for sh in doc.get("shards", []):
+        ivs = sh.get("intervals", [])
+        served = sum(iv.get("served", 0) for iv in ivs)
+        shed = sum(iv.get("shed", 0) for iv in ivs)
+        peak_q = max((iv.get("queue_mean", 0.0) for iv in ivs), default=0.0)
+        utils = [iv.get("util", 0.0) for iv in ivs]
+        mean_u = sum(utils) / len(utils) if utils else 0.0
+        out.append(
+            f"| {sh.get('name', '?')} | {len(ivs)} | {served} | {shed} "
+            f"| {peak_q:.1f} | {mean_u:.3f} |"
+        )
+    out.append("")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".", help="where BENCH_*.json live")
+    ap.add_argument("--trace", help="trace JSONL to validate and summarize")
+    ap.add_argument("--timeline", help="timeline JSON to summarize")
+    ap.add_argument("--out", default="REPORT.md", help="markdown output path")
+    args = ap.parse_args()
+
+    out = ["# batchedge run report\n"]
+    bench_section(args.dir, out)
+    history_section(args.dir, out)
+    if args.trace:
+        trace_section(args.trace, out)
+    if args.timeline:
+        timeline_section(args.timeline, out)
+    if len(out) == 1:
+        out.append("_No artifacts found._\n")
+    parent = os.path.dirname(args.out)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(out))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()
