@@ -21,7 +21,7 @@ use batchedge::experiments::fleet::{
     run_fleet, run_fleet_cfg, run_fleet_fluid, serving_cfg, skewed_speeds,
 };
 use batchedge::fleet::{
-    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FluidCfg, ServerProfile,
+    BatchPolicy, DispatchPolicy, FaultPlan, FleetCfg, FleetEngine, FluidCfg, ServerProfile,
 };
 use batchedge::obs::{FileSink, Tracer};
 use batchedge::scenario::{mixed_gpu_tiers, PopulationArrivals};
@@ -49,6 +49,7 @@ fn main() {
                     0.05,
                     horizon,
                     42,
+                    &FaultPlan::default(),
                 );
                 println!("{:>10}: {}", policy.name(), rep.render());
                 p95.push((policy.name(), rep.latency_p95_s));
@@ -103,6 +104,7 @@ fn main() {
                 0.05,
                 horizon,
                 7,
+                &FaultPlan::default(),
             );
             std::hint::black_box(rep.completed);
         }));
@@ -125,6 +127,7 @@ fn main() {
                 0.05,
                 horizon,
                 7,
+                &FaultPlan::default(),
             );
             let dt = t0.elapsed().as_secs_f64();
             let ns_ev = dt * 1e9 / rep.events as f64;
@@ -195,6 +198,50 @@ fn main() {
         });
     }
 
+    // --- Same workload under a stochastic fault plan (crash/recover at
+    //     mean 2 s up / 0.5 s down per server) — the chaos overhead point:
+    //     fault events, failovers and re-dispatches all ride the same
+    //     index-heap core, so ns/event should stay in the same decade.
+    {
+        let users = if quick { 20_000 } else { 100_000 };
+        let faults = FaultPlan {
+            mtbf_s: Some(2.0),
+            mttr_s: Some(0.5),
+            max_retries: 2,
+            ..FaultPlan::default()
+        };
+        let (mut mean_ns_ev, mut min_ns_ev) = (0.0f64, f64::INFINITY);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let rep = run_fleet(
+                &cfg,
+                DispatchPolicy::ShortestQueue,
+                8,
+                Vec::new(),
+                users,
+                0.05,
+                horizon,
+                7,
+                &faults,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            let ns_ev = dt * 1e9 / rep.events as f64;
+            mean_ns_ev += ns_ev / reps as f64;
+            min_ns_ev = min_ns_ev.min(ns_ev);
+            std::hint::black_box((rep.completed, rep.shed_failure, rep.lost_batches));
+        }
+        println!(
+            "bench fleet/event-core ns/event faulty              mean {mean_ns_ev:>10.1} ns  \
+             min {min_ns_ev:>10.1} ns"
+        );
+        recs.push(common::Record {
+            name: format!("fleet/event-core ns-per-event faulty U={users}"),
+            mean_s: mean_ns_ev * 1e-9,
+            min_s: min_ns_ev * 1e-9,
+            reps,
+        });
+    }
+
     // --- Fluid mode: the whole pool is one closed-form solve + MC draws;
     //     512 servers / 10M users should cost about what 8 servers do.
     {
@@ -214,7 +261,8 @@ fn main() {
                     seed: 7,
                     ..FleetCfg::default()
                 };
-                let out = run_fleet_fluid(&cfg, fleet, 20_000 * servers, 0.05, &FluidCfg::default());
+                let out = run_fleet_fluid(&cfg, fleet, 20_000 * servers, 0.05, &FluidCfg::default())
+                    .expect("fluid run");
                 std::hint::black_box(out.report.completed);
             });
         recs.push(rec);

@@ -24,8 +24,8 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::fleet::{
-    run_fluid, BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, FluidCfg,
-    FluidOutcome, ServerProfile,
+    run_fluid, BatchPolicy, DispatchPolicy, FaultPlan, FleetCfg, FleetEngine, FleetReport,
+    FluidCfg, FluidOutcome, ServerProfile,
 };
 use crate::scenario::{mixed_gpu_tiers, PopulationArrivals};
 use crate::util::json::Json;
@@ -42,6 +42,9 @@ pub struct Params {
     /// Model-time horizon per run (s).
     pub horizon_s: f64,
     pub seed: u64,
+    /// Fault plan applied to every event-engine run; when non-empty the
+    /// fluid sections are skipped (the oracle is fault-free).
+    pub faults: FaultPlan,
 }
 
 impl Default for Params {
@@ -52,6 +55,7 @@ impl Default for Params {
             rate_per_user_hz: 0.05,
             horizon_s: 10.0,
             seed: 0xF1EE7,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -93,6 +97,7 @@ pub fn run_fleet(
     rate_per_user_hz: f64,
     horizon_s: f64,
     seed: u64,
+    faults: &FaultPlan,
 ) -> FleetReport {
     let fleet = FleetCfg {
         servers,
@@ -100,6 +105,7 @@ pub fn run_fleet(
         batch: BatchPolicy { shed_expired: false, max_queue: 1 << 20, ..BatchPolicy::default() },
         horizon_s,
         seed,
+        faults: faults.clone(),
         ..FleetCfg::default()
     };
     run_fleet_cfg(cfg, policy, fleet, population, rate_per_user_hz)
@@ -121,13 +127,14 @@ pub fn run_fleet_cfg(
 /// One fluid-mode run: stable shards through the closed-form oracle
 /// ([`crate::fleet::analytic`]), hot shards event-by-event. Shared by the
 /// experiment, the CLI's `--fluid` flag, the bench and the example.
+/// Errors when `fleet.faults` is non-empty — the oracle is fault-free.
 pub fn run_fleet_fluid(
     cfg: &Arc<SystemConfig>,
     fleet: FleetCfg,
     population: usize,
     rate_per_user_hz: f64,
     fl: &FluidCfg,
-) -> FluidOutcome {
+) -> Result<FluidOutcome> {
     let arrivals = PopulationArrivals::stationary(&cfg.net.name, population, rate_per_user_hz);
     run_fluid(cfg, &fleet, &arrivals, fl)
 }
@@ -178,6 +185,7 @@ pub fn run(p: &Params) -> Result<()> {
                 p.rate_per_user_hz,
                 p.horizon_s,
                 p.seed,
+                &p.faults,
             );
             let mut cells = vec![policy.name().to_string()];
             cells.extend(r.table_cells());
@@ -203,6 +211,7 @@ pub fn run(p: &Params) -> Result<()> {
             p.rate_per_user_hz,
             p.horizon_s,
             p.seed,
+            &p.faults,
         );
         let mut cells = vec![format!("jsq U={users}")];
         cells.extend(r.table_cells());
@@ -212,7 +221,17 @@ pub fn run(p: &Params) -> Result<()> {
     rep.table("scaling", t);
 
     // --- 3. Fluid mode: closed form vs the event engine on the same
-    //        pool, then fleet scales the event core would grind on.
+    //        pool, then fleet scales the event core would grind on. The
+    //        closed-form oracle is fault-free, so a fault plan skips
+    //        these sections entirely (the event sweeps above already ran
+    //        under the plan).
+    if !p.faults.is_empty() {
+        rep.text(
+            "fluid sections skipped: fault plan active (the closed-form oracle \
+             assumes fault-free stationary servers)",
+        );
+        return rep.save();
+    }
     let batch = BatchPolicy {
         shed_expired: false,
         max_queue: 1 << 20,
@@ -233,7 +252,7 @@ pub fn run(p: &Params) -> Result<()> {
         p.rate_per_user_hz
     ));
     let ev = run_fleet_cfg(&cfg, DispatchPolicy::Random, fleet.clone(), users, p.rate_per_user_hz);
-    let fl = run_fleet_fluid(&cfg, fleet, users, p.rate_per_user_hz, &FluidCfg::default());
+    let fl = run_fleet_fluid(&cfg, fleet, users, p.rate_per_user_hz, &FluidCfg::default())?;
     for (mode, r) in [("event", &ev), ("fluid", &fl.report)] {
         let mut cells = vec![mode.to_string()];
         cells.extend(r.table_cells());
@@ -267,7 +286,8 @@ pub fn run(p: &Params) -> Result<()> {
             seed: p.seed,
             ..FleetCfg::default()
         };
-        let out = run_fleet_fluid(&cfg, fleet, 20_000 * n, p.rate_per_user_hz, &FluidCfg::default());
+        let out =
+            run_fleet_fluid(&cfg, fleet, 20_000 * n, p.rate_per_user_hz, &FluidCfg::default())?;
         let mut cells = vec![format!("fluid N={n}")];
         cells.extend(out.report.table_cells());
         t.row(cells);
@@ -331,6 +351,7 @@ pub fn run_hetero(p: &HeteroParams) -> Result<()> {
                 batch,
                 horizon_s: p.horizon_s,
                 seed: p.seed,
+                faults: FaultPlan::default(),
             };
             let r = run_fleet_cfg(&cfg, policy, fleet, p.population, p.rate_per_user_hz);
             let mut cells = vec![policy.name().to_string()];

@@ -79,12 +79,15 @@
 //! shards' histograms through the weighted quantile merge in
 //! [`crate::obs::hist`] — no Monte-Carlo latency pooling. Monte-Carlo
 //! draws remain only for the violation and energy estimates. A per-shard
-//! conservation ledger (`arrivals = served + shed + in-flight`) makes
+//! conservation ledger (`arrivals = served + shed + shed_failure +
+//! in-flight`) makes
 //! the hybrid accounting auditable at any horizon.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+use anyhow::{bail, Result};
 
 use crate::config::SystemConfig;
 use crate::obs::hist::Cdf;
@@ -92,6 +95,7 @@ use crate::scenario::PopulationArrivals;
 use crate::util::rng::Rng;
 
 use super::engine::{FleetCfg, FleetEngine};
+use super::faults::FaultPlan;
 use super::profile::{self, ResolvedServer, ServerProfile};
 use super::queue::BatchPolicy;
 use super::report::{AnalyticLatency, FleetReport, ShardStats};
@@ -710,13 +714,19 @@ pub struct ShardLedger {
     pub arrivals: u64,
     pub served: u64,
     pub shed: u64,
+    /// Requests terminally lost to server failures ([`super::faults`]);
+    /// always 0 on the fluid path (the oracle is fault-free), carried so
+    /// event-shard ledgers stay auditable under chaos.
+    pub shed_failure: u64,
+    /// Failover hops taken from this shard.
+    pub retries: u64,
     pub in_flight: u64,
 }
 
 impl ShardLedger {
-    /// `arrivals = served + shed + in_flight`, exactly.
+    /// `arrivals = served + shed + shed_failure + in_flight`, exactly.
     pub fn balanced(&self) -> bool {
-        self.arrivals == self.served + self.shed + self.in_flight
+        self.arrivals == self.served + self.shed + self.shed_failure + self.in_flight
     }
 }
 
@@ -740,13 +750,22 @@ pub struct FluidOutcome {
 /// the event engine when the dispatch policy is the object of study.
 /// Analytic shards model `max_delay_s = 0` batching; with a positive
 /// delay the fluid numbers are an approximation (see module docs). The
-/// arrival process must be stationary (`peak_factor == 1`).
+/// arrival process must be stationary (`peak_factor == 1`), and the
+/// fault plan must be empty — the closed-form oracle models a
+/// fault-free stationary server, so faulty runs must use the event
+/// engine.
 pub fn run_fluid(
     cfg: &Arc<SystemConfig>,
     fleet: &FleetCfg,
     arrivals: &PopulationArrivals,
     fluid: &FluidCfg,
-) -> FluidOutcome {
+) -> Result<FluidOutcome> {
+    if !fleet.faults.is_empty() {
+        bail!(
+            "fluid mode cannot model fault plans (the closed-form oracle assumes a \
+             fault-free stationary server); drop --fluid or the fault options"
+        );
+    }
     assert!(
         arrivals.peak_factor == 1.0,
         "fluid mode needs a stationary stream (peak_factor == 1)"
@@ -820,6 +839,7 @@ pub fn run_fluid(
             batch: fleet.batch,
             horizon_s: fleet.horizon_s,
             seed: fleet.seed.wrapping_add(0xF1D + i as u64),
+            faults: FaultPlan::default(),
         };
         let engine = FleetEngine::new(
             cfg,
@@ -836,9 +856,11 @@ pub fn run_fluid(
             name: if name.is_empty() { format!("s{i}") } else { name.clone() },
             fluid: false,
             rho: model.rho(),
-            arrivals: stats.completed + stats.shed,
+            arrivals: stats.completed + stats.shed + stats.shed_failure,
             served: stats.completed,
             shed: stats.shed,
+            shed_failure: stats.shed_failure,
+            retries: stats.retries,
             in_flight: 0, // the event engine drains before reporting
         });
         rows[i] = Some((name, stats));
@@ -907,6 +929,8 @@ pub fn run_fluid(
             arrivals: offered,
             served,
             shed: 0,
+            shed_failure: 0,
+            retries: 0,
             in_flight,
         });
         analytic[i] = Some((Arc::clone(shard_law), mean_upload + sol.mean_response_s));
@@ -929,7 +953,7 @@ pub fn run_fluid(
     report.events = events;
     let ledger: Vec<ShardLedger> = ledger.into_iter().map(|l| l.unwrap()).collect();
     let fluid_shards = ledger.iter().filter(|l| l.fluid).count();
-    FluidOutcome { report, ledger, fluid_shards, event_shards: n - fluid_shards }
+    Ok(FluidOutcome { report, ledger, fluid_shards, event_shards: n - fluid_shards })
 }
 
 #[cfg(test)]

@@ -36,6 +36,11 @@ pub struct ServerView {
     /// Marginal service estimate for one more request on this server
     /// (`Σ_n F_n(b_eff) / b_eff / speed` of its own profile).
     pub est_service_s: f64,
+    /// Health gate from [`super::faults`]: `false` for crashed and
+    /// partitioned servers. Every policy skips unroutable servers and
+    /// falls back to its natural pick only when *no* server is routable
+    /// (the engine's failover path then sheds the request).
+    pub routable: bool,
 }
 
 impl ServerView {
@@ -158,9 +163,20 @@ impl Dispatcher for RoundRobin {
     }
 
     fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, _rng: &mut Rng) -> usize {
-        let s = self.next % servers.len();
-        self.next = (self.next + 1) % servers.len();
-        s
+        let n = servers.len();
+        let start = self.next % n;
+        self.next = (start + 1) % n;
+        // First routable server at or after the cursor; `k = 0` is the
+        // fault-free path and reproduces the classic cycle exactly (the
+        // cursor always advances by one, so recoveries rejoin the cycle
+        // in their original phase).
+        for k in 0..n {
+            let s = (start + k) % n;
+            if servers[s].routable {
+                return s;
+            }
+        }
+        start
     }
 }
 
@@ -176,18 +192,45 @@ impl Dispatcher for Random {
     }
 
     fn pick(&mut self, _req: &Request, servers: &[ServerView], _now: f64, rng: &mut Rng) -> usize {
-        rng.usize_below(servers.len())
+        let s = rng.usize_below(servers.len());
+        if servers[s].routable {
+            return s;
+        }
+        // Re-draw among the routable subset: uniform over survivors, and
+        // the extra draw only ever happens in a faulty interval, so the
+        // fault-free RNG stream is untouched.
+        let up: Vec<usize> = (0..servers.len()).filter(|&i| servers[i].routable).collect();
+        if up.is_empty() {
+            s
+        } else {
+            up[rng.usize_below(up.len())]
+        }
     }
 }
 
+/// Argmin under `less` over the *routable* servers; when none is
+/// routable, the raw argmin (the engine sheds the pick downstream). On
+/// an all-routable fleet this is exactly the classic first-wins scan.
 fn argmin_by(servers: &[ServerView], less: impl Fn(&ServerView, &ServerView) -> bool) -> usize {
-    let mut best = 0;
-    for i in 1..servers.len() {
-        if less(&servers[i], &servers[best]) {
-            best = i;
+    let mut best: Option<usize> = None;
+    for (i, v) in servers.iter().enumerate() {
+        if !v.routable {
+            continue;
+        }
+        match best {
+            Some(b) if !less(v, &servers[b]) => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or_else(|| {
+        let mut b = 0;
+        for i in 1..servers.len() {
+            if less(&servers[i], &servers[b]) {
+                b = i;
+            }
+        }
+        b
+    })
 }
 
 fn two_choices(
@@ -199,15 +242,24 @@ fn two_choices(
     if n < 2 {
         return 0;
     }
+    // Always exactly two draws, so the RNG stream is identical with and
+    // without faults; health only changes which sample wins.
     let i = rng.usize_below(n);
     let mut j = rng.usize_below(n - 1);
     if j >= i {
         j += 1;
     }
-    if less(&servers[j], &servers[i]) {
-        j
-    } else {
-        i
+    match (servers[i].routable, servers[j].routable) {
+        (true, false) => i,
+        (false, true) => j,
+        (false, false) => argmin_by(servers, less),
+        (true, true) => {
+            if less(&servers[j], &servers[i]) {
+                j
+            } else {
+                i
+            }
+        }
     }
 }
 
@@ -285,8 +337,9 @@ impl Dispatcher for DeadlineAware {
         // Feasibility includes the request's own service: a server whose
         // backlog drains in time but whose batch then finishes late is not
         // a server that meets the deadline.
-        let feasible =
-            |v: &ServerView| now + req.upload_s + v.expected_completion_s() <= req.due_s();
+        let feasible = |v: &ServerView| {
+            v.routable && now + req.upload_s + v.expected_completion_s() <= req.due_s()
+        };
         let mut best: Option<usize> = None;
         for (i, v) in servers.iter().enumerate() {
             if !feasible(v) {
@@ -318,7 +371,12 @@ mod tests {
             speed: 1.0,
             est_backlog_s: est,
             est_service_s: service,
+            routable: true,
         }
+    }
+
+    fn down(v: ServerView) -> ServerView {
+        ServerView { routable: false, ..v }
     }
 
     fn req(deadline: f64) -> Request {
@@ -329,6 +387,7 @@ mod tests {
             deadline_s: deadline,
             upload_s: 0.0,
             tx_energy_j: 0.0,
+            retries: 0,
         }
     }
 
@@ -429,6 +488,49 @@ mod tests {
         for &c in &counts {
             assert!((c as f64 - 1000.0).abs() < 150.0, "{counts:?}");
         }
+    }
+
+    #[test]
+    fn every_policy_skips_unroutable_servers() {
+        // Server 0 would win every comparator, but it is down; every
+        // policy must land on the sole routable server 1.
+        let views = vec![down(view(0, 0, 0.0)), view(9, 1, 1.0), down(view(0, 0, 0.0))];
+        for policy in DispatchPolicy::ALL {
+            let mut d = policy.build();
+            let mut rng = Rng::seed_from(11);
+            for _ in 0..50 {
+                assert_eq!(d.pick(&req(1.0), &views, 0.0, &mut rng), 1, "{}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn all_unroutable_falls_back_in_range_without_panicking() {
+        let views = vec![down(view(1, 0, 0.5)), down(view(2, 0, 0.1))];
+        for policy in DispatchPolicy::ALL {
+            let mut d = policy.build();
+            let mut rng = Rng::seed_from(5);
+            for _ in 0..20 {
+                let s = d.pick(&req(1.0), &views, 0.0, &mut rng);
+                assert!(s < views.len(), "{}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_keeps_phase_across_an_outage() {
+        // With server 1 down the cursor still advances one per pick, so
+        // after recovery the cycle resumes in its original phase.
+        let mut rr = RoundRobin::default();
+        let mut rng = Rng::seed_from(1);
+        let degraded = vec![view(0, 0, 0.0), down(view(0, 0, 0.0)), view(0, 0, 0.0)];
+        let healthy = vec![view(0, 0, 0.0); 3];
+        let first: Vec<usize> =
+            (0..3).map(|_| rr.pick(&req(1.0), &degraded, 0.0, &mut rng)).collect();
+        assert_eq!(first, vec![0, 2, 2], "down server skipped to its successor");
+        let after: Vec<usize> =
+            (0..3).map(|_| rr.pick(&req(1.0), &healthy, 0.0, &mut rng)).collect();
+        assert_eq!(after, vec![0, 1, 2]);
     }
 
     #[test]

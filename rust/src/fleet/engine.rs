@@ -19,10 +19,18 @@
 //! Request lifecycle: `Arrival` (dispatcher routes, upload begins) →
 //! `Enqueue` (admission control at the chosen server) → batch launch
 //! (full batch or `max_delay_s` timer) → `BatchDone` (completion
-//! accounting, next launch). Two independent seeded RNG streams — one for
-//! the workload (arrival times, channels), one for dispatch sampling —
-//! keep the offered load bit-identical across policies, so policy
+//! accounting, next launch). Three independent seeded RNG streams — one
+//! for the workload (arrival times, channels), one for dispatch
+//! sampling, one for fault schedules — keep the offered load
+//! bit-identical across policies *and* fault plans, so policy and chaos
 //! comparisons at a fixed seed are paired.
+//!
+//! Fault injection ([`super::faults`]) rides the same event core: a
+//! non-empty [`FaultPlan`] is materialized once at run start and its
+//! crash/recover/brownout/partition transitions pop as ordinary events
+//! (scheduled first, so at an equal timestamp a fault preempts a timer
+//! or arrival). An empty plan schedules nothing and leaves reports and
+//! traces bitwise identical to the fault-free engine.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,6 +43,7 @@ use crate::util::rng::Rng;
 
 use super::dispatch::{Dispatcher, ServerView};
 use super::events::{EventId, EventQueue};
+use super::faults::{FaultEvent, FaultKind, FaultPlan, Health};
 use super::profile::{self, ServerProfile};
 use super::queue::{BatchPolicy, BatchQueue};
 use super::report::{FleetReport, ShardStats};
@@ -58,8 +67,11 @@ pub struct FleetCfg {
     /// Model time during which arrivals are generated (s); in-flight work
     /// is drained to completion afterwards.
     pub horizon_s: f64,
-    /// Seed for the workload and dispatch RNG streams.
+    /// Seed for the workload, dispatch and fault RNG streams.
     pub seed: u64,
+    /// Fault schedule and failover retry budget ([`super::faults`]); an
+    /// empty plan keeps the run bitwise identical to a fault-free one.
+    pub faults: FaultPlan,
 }
 
 impl Default for FleetCfg {
@@ -71,6 +83,7 @@ impl Default for FleetCfg {
             batch: BatchPolicy::default(),
             horizon_s: 10.0,
             seed: 1,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -88,6 +101,8 @@ enum Ev {
     /// A batch finished serving. `bid` is the server-local 1-based batch
     /// sequence number (trace joins `serve` rows to their `batch` row).
     BatchDone { server: usize, bid: u64, batch: Vec<Request> },
+    /// A scheduled fault transition ([`super::faults`]).
+    Fault(FaultEvent),
 }
 
 struct Server {
@@ -103,19 +118,42 @@ struct Server {
     /// handle cancels the event eagerly when a launch consumes the queue
     /// front.
     timer: Option<(f64, EventId)>,
+    /// Handle of the pending `BatchDone`, if a batch is in flight; a
+    /// crash cancels it and recovers the batch payload from the heap.
+    done: Option<EventId>,
+    /// Fault state ([`super::faults`]); `Up` on a fault-free run.
+    health: Health,
+    /// Effective speed: `cap.speed` scaled by the brownout multiplier.
+    /// Initialized to `cap.speed` and mutated only by fault transitions,
+    /// so fault-free pricing is bitwise unchanged.
+    eff_speed: f64,
     stats: ShardStats,
 }
 
 impl Server {
     fn view(&self, now: f64) -> ServerView {
+        if !self.health.can_serve() {
+            // A crashed server advertises infinite completion time and
+            // is unroutable; dispatchers skip it without extra state.
+            return ServerView {
+                queued: self.queue.len(),
+                in_flight: 0,
+                busy_until_s: now,
+                speed: 0.0,
+                est_backlog_s: f64::INFINITY,
+                est_service_s: f64::INFINITY,
+                routable: false,
+            };
+        }
         ServerView {
             queued: self.queue.len(),
             in_flight: self.in_flight,
             busy_until_s: self.busy_until,
-            speed: self.cap.speed,
+            speed: self.eff_speed,
             est_backlog_s: (self.busy_until - now).max(0.0)
-                + self.queue.len() as f64 * self.cap.per_item_s / self.cap.speed,
-            est_service_s: self.cap.per_item_s / self.cap.speed,
+                + self.queue.len() as f64 * self.cap.per_item_s / self.eff_speed,
+            est_service_s: self.cap.per_item_s / self.eff_speed,
+            routable: self.health.routable(),
         }
     }
 }
@@ -130,8 +168,12 @@ pub struct FleetEngine {
     events: EventQueue<Ev>,
     /// Workload stream: arrival process + per-request channel draws.
     work_rng: Rng,
-    /// Dispatch stream: sampling policies (p2c).
+    /// Dispatch stream: sampling policies (p2c) and failover re-picks.
     disp_rng: Rng,
+    /// Fault stream: stochastic crash/recover schedules. Forked last so
+    /// the workload and dispatch streams are unchanged from the
+    /// pre-fault engine.
+    fault_rng: Rng,
     next_id: u64,
     /// Sampled lifecycle tracer ([`crate::obs::trace`]); `None` keeps the
     /// hot loop at one branch per event.
@@ -161,9 +203,11 @@ impl FleetEngine {
             fleet.profiles.is_empty() || fleet.speeds.is_empty(),
             "give speeds or profiles, not both"
         );
+        fleet.faults.validate(fleet.servers).expect("invalid fault plan");
         let mut seed_rng = Rng::seed_from(fleet.seed);
         let work_rng = seed_rng.fork(0x0A11);
         let disp_rng = seed_rng.fork(0xD15);
+        let fault_rng = seed_rng.fork(0xFA17);
         let profiles: Vec<ServerProfile> = if fleet.profiles.is_empty() {
             (0..fleet.servers)
                 .map(|i| ServerProfile::at_speed(fleet.speeds.get(i).copied().unwrap_or(1.0)))
@@ -175,10 +219,13 @@ impl FleetEngine {
             .into_iter()
             .map(|cap| Server {
                 queue: BatchQueue::new(cap.batch),
-                cap,
                 busy_until: 0.0,
                 in_flight: 0,
                 timer: None,
+                done: None,
+                health: Health::Up,
+                eff_speed: cap.speed,
+                cap,
                 stats: ShardStats::default(),
             })
             .collect();
@@ -191,6 +238,7 @@ impl FleetEngine {
             events: EventQueue::new(),
             work_rng,
             disp_rng,
+            fault_rng,
             next_id: 0,
             tracer: None,
             timeline: None,
@@ -232,6 +280,19 @@ impl FleetEngine {
     /// Serve the whole horizon (plus drain) and report.
     pub fn run(&mut self) -> FleetReport {
         let wall0 = Instant::now();
+        // Materialize the fault plan first: fault events get the smallest
+        // sequence numbers, so at an equal timestamp a fault pops before
+        // any timer or arrival (a crash scripted exactly at a launch
+        // epoch preempts the launch). An empty plan schedules zero
+        // events, keeping the event order bitwise identical to a
+        // fault-free run.
+        if !self.fleet.faults.is_empty() {
+            let horizon = self.fleet.horizon_s;
+            let n = self.servers.len();
+            for fe in self.fleet.faults.materialize(n, horizon, &mut self.fault_rng) {
+                self.events.schedule(fe.at_s, Ev::Fault(fe));
+            }
+        }
         let first = self.arrivals.next_after(0.0, &mut self.work_rng);
         if first.at_s <= self.fleet.horizon_s {
             self.events.schedule(first.at_s, Ev::Arrival(first));
@@ -240,6 +301,12 @@ impl FleetEngine {
             match ev {
                 Ev::Arrival(a) => self.on_arrival(a, now),
                 Ev::Enqueue { server, req } => {
+                    if !self.servers[server].health.can_serve() {
+                        // The assigned server crashed while the upload was
+                        // in flight: fail over through the live policy.
+                        self.redispatch(req, server, now);
+                        continue;
+                    }
                     let id = req.id;
                     let admitted = self.servers[server].queue.admit(req, now);
                     if admitted {
@@ -275,6 +342,7 @@ impl FleetEngine {
                     let s = &mut self.servers[server];
                     s.in_flight = 0;
                     s.busy_until = now;
+                    s.done = None;
                     for req in &batch {
                         let latency = now - req.arrival_s;
                         s.stats.record_completion(
@@ -285,6 +353,9 @@ impl FleetEngine {
                     }
                     if let Some(tl) = &mut self.timeline {
                         tl.observe_serve(server, now, size as u64);
+                        for req in &batch {
+                            tl.observe_latency(server, now, now - req.arrival_s);
+                        }
                     }
                     if let Some(tr) = &mut self.tracer {
                         for req in &batch {
@@ -297,6 +368,7 @@ impl FleetEngine {
                     }
                     self.try_launch(server, now);
                 }
+                Ev::Fault(fe) => self.on_fault(fe, now),
             }
         }
         // The event clock ends at the last drain completion; utilization
@@ -375,6 +447,133 @@ impl FleetEngine {
             deadline_s: a.deadline_s,
             upload_s,
             tx_energy_j,
+            retries: 0,
+        }
+    }
+
+    /// Failover: re-route a request orphaned by a crash (lost batch,
+    /// drained queue, or an upload landing on a dead server) through the
+    /// live dispatch policy, spending one hop of its retry budget.
+    /// Admission is remaining-deadline-aware: the retry proceeds only
+    /// when the pick is routable and its expected completion still beats
+    /// the request's absolute deadline; otherwise the request terminates
+    /// as shed-by-failure on the server it was orphaned at. A retry
+    /// re-pays the upload leg (the input re-uploads to the new server).
+    fn redispatch(&mut self, mut req: Request, from: usize, now: f64) {
+        if req.retries < self.fleet.faults.max_retries {
+            let views: Vec<ServerView> = self.servers.iter().map(|s| s.view(now)).collect();
+            let sid = self.dispatcher.pick(&req, &views, now, &mut self.disp_rng);
+            assert!(
+                sid < self.servers.len(),
+                "dispatcher '{}' picked server {sid} of a {}-server fleet",
+                self.dispatcher.name(),
+                self.servers.len()
+            );
+            let eta = now + req.upload_s + views[sid].expected_completion_s();
+            if views[sid].routable && eta <= req.due_s() + 1e-12 {
+                req.retries += 1;
+                self.servers[from].stats.retries += 1;
+                if let Some(tr) = &mut self.tracer {
+                    if tr.sampled(req.id) {
+                        tr.retry(now, req.id, from, sid, req.retries);
+                    }
+                }
+                self.events.schedule(now + req.upload_s, Ev::Enqueue { server: sid, req });
+                return;
+            }
+        }
+        self.servers[from].stats.shed_failure += 1;
+        if let Some(tl) = &mut self.timeline {
+            tl.observe_shed_failure(from, now, 1);
+        }
+        if let Some(tr) = &mut self.tracer {
+            if tr.sampled(req.id) {
+                tr.shed(now, req.id, from, "failure");
+            }
+        }
+    }
+
+    /// Apply one fault transition; see [`super::faults`] for semantics.
+    fn on_fault(&mut self, fe: FaultEvent, now: f64) {
+        let sid = fe.server;
+        match fe.kind {
+            FaultKind::Crash => {
+                if !self.servers[sid].health.can_serve() {
+                    return; // already down
+                }
+                self.servers[sid].health = Health::Crashed;
+                if let Some(tr) = &mut self.tracer {
+                    tr.fail(now, sid, "crash");
+                }
+                if let Some(tl) = &mut self.timeline {
+                    tl.observe_failure(sid, now);
+                }
+                // The in-flight batch is lost: cancel its completion and
+                // recover the payload straight from the event heap.
+                let mut orphans: Vec<Request> = Vec::new();
+                if let Some(id) = self.servers[sid].done.take() {
+                    if let Some(Ev::BatchDone { batch, .. }) = self.events.cancel(id) {
+                        let s = &mut self.servers[sid];
+                        s.stats.lost_batches += 1;
+                        // Refund the unserved remainder of the batch span
+                        // so utilization reflects work actually done.
+                        s.stats.busy_s -= (s.busy_until - now).max(0.0);
+                        orphans.extend(batch);
+                    }
+                }
+                if let Some((_, tid)) = self.servers[sid].timer.take() {
+                    self.events.cancel(tid);
+                }
+                self.servers[sid].busy_until = now;
+                self.servers[sid].in_flight = 0;
+                // The waiting queue fails over too, FIFO order.
+                orphans.extend(self.servers[sid].queue.drain());
+                if let Some(tl) = &mut self.timeline {
+                    tl.set_depth(sid, now, 0);
+                }
+                for req in orphans {
+                    self.redispatch(req, sid, now);
+                }
+            }
+            FaultKind::Recover => {
+                if self.servers[sid].health == Health::Up {
+                    return;
+                }
+                self.servers[sid].health = Health::Up;
+                self.servers[sid].eff_speed = self.servers[sid].cap.speed;
+                if let Some(tr) = &mut self.tracer {
+                    tr.recover(now, sid);
+                }
+                self.try_launch(sid, now);
+            }
+            FaultKind::Brownout(mult) => {
+                if !self.servers[sid].health.can_serve() {
+                    return; // only Recover revives a crashed server
+                }
+                self.servers[sid].health = Health::Brownout(mult);
+                // Reprices future launches; a batch already in flight
+                // keeps its launch-time service span.
+                self.servers[sid].eff_speed = self.servers[sid].cap.speed * mult;
+                if let Some(tr) = &mut self.tracer {
+                    tr.fail(now, sid, "brownout");
+                }
+                if let Some(tl) = &mut self.timeline {
+                    tl.observe_failure(sid, now);
+                }
+            }
+            FaultKind::Partition => {
+                if !self.servers[sid].health.can_serve() {
+                    return;
+                }
+                self.servers[sid].health = Health::Partitioned;
+                self.servers[sid].eff_speed = self.servers[sid].cap.speed;
+                if let Some(tr) = &mut self.tracer {
+                    tr.fail(now, sid, "partition");
+                }
+                if let Some(tl) = &mut self.timeline {
+                    tl.observe_failure(sid, now);
+                }
+            }
         }
     }
 
@@ -382,6 +581,9 @@ impl FleetEngine {
     /// partial-batch timer.
     fn try_launch(&mut self, sid: usize, now: f64) {
         loop {
+            if !self.servers[sid].health.can_serve() {
+                return; // crashed: the queue was drained to failover
+            }
             if self.servers[sid].busy_until > now + 1e-12 || self.servers[sid].queue.is_empty() {
                 return;
             }
@@ -426,7 +628,9 @@ impl FleetEngine {
                 self.events.cancel(id);
             }
             let s = &mut self.servers[sid];
-            let service_s = s.cap.occupancy.total(batch.len()) / s.cap.speed;
+            // Priced at the effective (possibly browned-out) speed; equal
+            // to `cap.speed` bitwise on a fault-free run.
+            let service_s = s.cap.occupancy.total(batch.len()) / s.eff_speed;
             s.busy_until = now + service_s;
             s.in_flight = batch.len();
             s.stats.batches += 1;
@@ -442,7 +646,9 @@ impl FleetEngine {
                     tr.batch(now, sid, bid, batch.len(), depth);
                 }
             }
-            self.events.schedule(now + service_s, Ev::BatchDone { server: sid, bid, batch });
+            let done =
+                self.events.schedule(now + service_s, Ev::BatchDone { server: sid, bid, batch });
+            self.servers[sid].done = Some(done);
             return;
         }
     }
@@ -586,6 +792,7 @@ mod tests {
                     deadline_s: 1.0,
                     upload_s: 0.0,
                     tx_energy_j: 0.0,
+                    retries: 0,
                 };
                 assert!(eng.servers[sid].queue.admit(req, 0.0));
             }

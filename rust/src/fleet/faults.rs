@@ -1,0 +1,379 @@
+//! Fault injection for the fleet engine: crash/recover, brownout and
+//! partition timelines, plus the retry semantics of the failover path.
+//!
+//! # Fault model
+//!
+//! A [`FaultPlan`] is a schedule of per-server [`FaultEvent`]s, scripted
+//! (`--faults "crash@2:0.5-1.2,brown@0:0.3-0.9:0.25"`) and/or drawn from
+//! seeded exponential up/down cycles (`--mtbf-s`/`--mttr-s`). The engine
+//! materializes the plan once at the start of a run and feeds the events
+//! through the same index-heap event core as arrivals and batch timers,
+//! so fault timelines are deterministic under a fixed seed and totally
+//! ordered against the rest of the simulation. Fault events scheduled at
+//! the same timestamp as a timer or arrival pop *first* (they are
+//! scheduled earliest, and the event core breaks time ties by schedule
+//! order), so a crash scripted exactly at a batch-launch epoch preempts
+//! the launch.
+//!
+//! Three kinds of degradation, tracked per server as a [`Health`] state:
+//!
+//! * **Crash** — the server goes dark: the in-flight batch is lost
+//!   (counted in `lost_batches`, its unserved busy span refunded), the
+//!   waiting queue is drained, and every orphaned request enters the
+//!   re-dispatch path below. Uploads that land on a crashed server are
+//!   re-dispatched too. Crashed servers advertise infinite backlog and
+//!   `routable = false`, so every dispatch policy skips them.
+//! * **Brownout(m)** — thermal throttling: the server keeps serving but
+//!   its effective speed is repriced to `m · speed`, which scales the
+//!   whole `F_n(b)` latency profile (`occupancy.total(b) / eff_speed`).
+//!   Batches already in flight keep their launch-time pricing. Browned
+//!   servers stay routable — dispatchers see the degraded speed through
+//!   `ServerView` and price expected completion accordingly.
+//! * **Partition** — reachable but unroutable: the server finishes its
+//!   queue and in-flight work (uploads already en route still land), but
+//!   `routable = false` hides it from all dispatch policies.
+//!
+//! **Recover** returns a server to full health (`Up`, native speed) from
+//! any state and immediately re-checks its queue for a launchable batch.
+//!
+//! # Retry semantics
+//!
+//! Every [`super::Request`] carries a retry counter against the plan's
+//! `max_retries` budget. When a crash orphans a request (in-flight batch
+//! or queue drain) or an upload lands on a dead server, the engine
+//! re-routes it through the *live* dispatch policy with remaining-
+//! deadline-aware admission: the retry proceeds only when the picked
+//! server is routable and `now + upload_s + expected_completion_s`
+//! still beats the request's absolute deadline. A retry re-pays the
+//! upload leg (the input is re-sent to the new server); the transmit
+//! energy ledger keeps the first upload's cost. Requests that exhaust
+//! the budget, miss the deadline check, or find no routable server are
+//! terminally **shed-by-failure** (`shed_failure`) — a state distinct
+//! from admission shed, so the conservation identity becomes
+//! `arrivals = served + shed_admission + shed_failure + in_flight`,
+//! with `retries` counting hops (one request can contribute several).
+//!
+//! # Zero-fault anchor
+//!
+//! An empty plan ([`FaultPlan::is_empty`]) schedules **zero** events and
+//! leaves every per-event branch on its fault-free arm: reports and
+//! traces are bitwise identical to the pre-fault engine. The stochastic
+//! generator draws from a dedicated RNG stream (forked after the
+//! workload and dispatch streams), so enabling faults never perturbs
+//! arrival times or request payloads — a faulty run sees the exact same
+//! request population as its fault-free twin, which is what the chaos
+//! tests pin.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// What happens to a server at one fault epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Server goes dark; in-flight batch lost, queue drained to failover.
+    Crash,
+    /// Server returns to full health from any degraded state.
+    Recover,
+    /// Speed multiplier `m ∈ (0, ∞)` repricing the effective profile.
+    Brownout(f64),
+    /// Reachable but unroutable: serves its backlog, takes no new work.
+    Partition,
+}
+
+/// One scheduled fault transition on one server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulation time of the transition, seconds.
+    pub at_s: f64,
+    /// Target server index.
+    pub server: usize,
+    /// The transition.
+    pub kind: FaultKind,
+}
+
+/// Per-server health state maintained by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Health {
+    /// Full health: serving and routable at native speed.
+    #[default]
+    Up,
+    /// Dark: neither serving nor routable.
+    Crashed,
+    /// Serving and routable at `multiplier · speed`.
+    Brownout(f64),
+    /// Serving its backlog but unroutable.
+    Partitioned,
+}
+
+impl Health {
+    /// Can this server make progress on queued / in-flight work?
+    pub fn can_serve(self) -> bool {
+        !matches!(self, Health::Crashed)
+    }
+
+    /// May the dispatcher route *new* work here?
+    pub fn routable(self) -> bool {
+        matches!(self, Health::Up | Health::Brownout(_))
+    }
+
+    /// Effective-speed multiplier in this state (1 unless browned out).
+    pub fn speed_factor(self) -> f64 {
+        match self {
+            Health::Brownout(m) => m,
+            _ => 1.0,
+        }
+    }
+}
+
+/// A fault schedule: scripted events plus optional seeded-stochastic
+/// crash/recover cycles, and the failover retry budget.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Scripted transitions (any order; materialization sorts by time).
+    pub events: Vec<FaultEvent>,
+    /// Mean time between failures for the stochastic generator (per
+    /// server, exponential up-times). Requires `mttr_s`.
+    pub mtbf_s: Option<f64>,
+    /// Mean time to recovery for the stochastic generator (per server,
+    /// exponential down-times). Requires `mtbf_s`.
+    pub mttr_s: Option<f64>,
+    /// Failover budget: how many re-dispatch hops one request may take
+    /// before it is terminally shed-by-failure.
+    pub max_retries: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { events: Vec::new(), mtbf_s: None, mttr_s: None, max_retries: 2 }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing: the engine schedules zero
+    /// fault events and stays on the bitwise zero-fault path. (The
+    /// retry budget alone does not make a plan non-empty — with no
+    /// faults there is never anything to retry.)
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && !(self.mtbf_s.is_some() && self.mttr_s.is_some())
+    }
+
+    /// Parse a scripted spec: comma-separated clauses of
+    ///
+    /// * `crash@S:T0` — server `S` crashes at `T0` and stays down,
+    /// * `crash@S:T0-T1` — down over `[T0, T1)`,
+    /// * `part@S:T0[-T1]` — partitioned (unroutable) from `T0`,
+    /// * `brown@S:T0-T1:M` — browned out to `M · speed` over `[T0, T1)`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}': expected KIND@S:SPAN"))?;
+            let (server, span) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}': expected KIND@S:SPAN"))?;
+            let server: usize = server
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause '{clause}': bad server '{server}'"))?;
+            let parse_t = |s: &str| -> Result<f64> {
+                let t: f64 = s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault clause '{clause}': bad time '{s}'"))?;
+                ensure!(t.is_finite() && t >= 0.0, "fault clause '{clause}': time must be >= 0");
+                Ok(t)
+            };
+            let push_span = |events: &mut Vec<FaultEvent>, span: &str, kind| -> Result<()> {
+                match span.split_once('-') {
+                    Some((t0, t1)) => {
+                        let (t0, t1) = (parse_t(t0)?, parse_t(t1)?);
+                        ensure!(t1 > t0, "fault clause '{clause}': span end must be > start");
+                        events.push(FaultEvent { at_s: t0, server, kind });
+                        events.push(FaultEvent { at_s: t1, server, kind: FaultKind::Recover });
+                    }
+                    None => events.push(FaultEvent { at_s: parse_t(span)?, server, kind }),
+                }
+                Ok(())
+            };
+            match kind {
+                "crash" => push_span(&mut events, span, FaultKind::Crash)?,
+                "part" => push_span(&mut events, span, FaultKind::Partition)?,
+                "brown" => {
+                    let (span, mult) = span.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("fault clause '{clause}': expected brown@S:T0-T1:M")
+                    })?;
+                    let m: f64 = mult.parse().map_err(|_| {
+                        anyhow::anyhow!("fault clause '{clause}': bad multiplier '{mult}'")
+                    })?;
+                    ensure!(
+                        m.is_finite() && m > 0.0,
+                        "fault clause '{clause}': multiplier must be > 0"
+                    );
+                    push_span(&mut events, span, FaultKind::Brownout(m))?;
+                }
+                other => bail!("fault clause '{clause}': unknown kind '{other}'"),
+            }
+        }
+        Ok(FaultPlan { events, ..FaultPlan::default() })
+    }
+
+    /// Validate against a fleet size; called by the engine constructor
+    /// and the CLI before a run starts.
+    pub fn validate(&self, servers: usize) -> Result<()> {
+        for ev in &self.events {
+            ensure!(
+                ev.server < servers,
+                "fault event targets server {} of a {servers}-server fleet",
+                ev.server
+            );
+            ensure!(ev.at_s.is_finite() && ev.at_s >= 0.0, "fault event time must be >= 0");
+            if let FaultKind::Brownout(m) = ev.kind {
+                ensure!(m.is_finite() && m > 0.0, "brownout multiplier must be > 0");
+            }
+        }
+        ensure!(
+            self.mtbf_s.is_some() == self.mttr_s.is_some(),
+            "--mtbf-s and --mttr-s must be given together"
+        );
+        if let (Some(mtbf), Some(mttr)) = (self.mtbf_s, self.mttr_s) {
+            ensure!(mtbf.is_finite() && mtbf > 0.0, "mtbf must be > 0");
+            ensure!(mttr.is_finite() && mttr > 0.0, "mttr must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Expand the plan into a concrete, time-sorted event list for one
+    /// run: scripted events verbatim plus, when `mtbf_s`/`mttr_s` are
+    /// set, per-server alternating crash/recover cycles with exponential
+    /// up-times (mean `mtbf_s`) and down-times (mean `mttr_s`). Each
+    /// server forks its own RNG stream, so the timeline of server `k`
+    /// is independent of the fleet size-ordering and deterministic
+    /// under the engine seed. Crashes past `horizon_s` are dropped; a
+    /// recovery may land past the horizon so drains can still finish.
+    pub fn materialize(&self, servers: usize, horizon_s: f64, rng: &mut Rng) -> Vec<FaultEvent> {
+        let mut out = self.events.clone();
+        if let (Some(mtbf), Some(mttr)) = (self.mtbf_s, self.mttr_s) {
+            for server in 0..servers {
+                let mut r = rng.fork(server as u64);
+                let mut t = 0.0;
+                loop {
+                    t += r.exponential(1.0 / mtbf);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    out.push(FaultEvent { at_s: t, server, kind: FaultKind::Crash });
+                    t += r.exponential(1.0 / mttr);
+                    out.push(FaultEvent { at_s: t, server, kind: FaultKind::Recover });
+                }
+            }
+        }
+        // Stable: equal-time events keep scripted-before-stochastic,
+        // low-server-first order, so materialization is deterministic.
+        out.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_materializes_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        let mut rng = Rng::seed_from(1);
+        assert!(plan.materialize(8, 10.0, &mut rng).is_empty());
+        // A retry budget alone injects nothing.
+        let plan = FaultPlan { max_retries: 9, ..FaultPlan::default() };
+        assert!(plan.is_empty());
+        // mtbf without mttr is rejected by validate and stays "empty".
+        let plan = FaultPlan { mtbf_s: Some(1.0), ..FaultPlan::default() };
+        assert!(plan.is_empty());
+        assert!(plan.validate(4).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrips_spans_and_kinds() {
+        let plan = FaultPlan::parse("crash@2:0.5-1.25, brown@0:0.3-0.9:0.25, part@1:2.0").unwrap();
+        assert_eq!(plan.events.len(), 5);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { at_s: 0.5, server: 2, kind: FaultKind::Crash }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent { at_s: 1.25, server: 2, kind: FaultKind::Recover }
+        );
+        assert_eq!(
+            plan.events[2],
+            FaultEvent { at_s: 0.3, server: 0, kind: FaultKind::Brownout(0.25) }
+        );
+        assert_eq!(
+            plan.events[4],
+            FaultEvent { at_s: 2.0, server: 1, kind: FaultKind::Partition }
+        );
+        assert!(!plan.is_empty());
+        assert!(plan.validate(3).is_ok());
+        assert!(plan.validate(2).is_err()); // server 2 out of range
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "melt@0:1.0",       // unknown kind
+            "crash@x:1.0",      // bad server
+            "crash@0:1.0-0.5",  // inverted span
+            "brown@0:0.1-0.2",  // missing multiplier
+            "brown@0:0.1-0.2:0",// zero multiplier
+            "crash@0",          // no span
+            "crash@0:-1.0",     // negative time parses as span with empty t0
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn materialize_is_deterministic_and_alternates() {
+        let plan = FaultPlan {
+            mtbf_s: Some(0.5),
+            mttr_s: Some(0.2),
+            ..FaultPlan::default()
+        };
+        let a = plan.materialize(4, 5.0, &mut Rng::seed_from(42));
+        let b = plan.materialize(4, 5.0, &mut Rng::seed_from(42));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Sorted by time.
+        for w in a.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        // Per server: alternating crash/recover starting with a crash,
+        // crashes strictly inside the horizon.
+        for sid in 0..4 {
+            let evs: Vec<&FaultEvent> = a.iter().filter(|e| e.server == sid).collect();
+            let mut expect_crash = true;
+            let mut last = 0.0;
+            for ev in evs {
+                if expect_crash {
+                    assert_eq!(ev.kind, FaultKind::Crash);
+                    assert!(ev.at_s < 5.0);
+                } else {
+                    assert_eq!(ev.kind, FaultKind::Recover);
+                }
+                assert!(ev.at_s >= last);
+                last = ev.at_s;
+                expect_crash = !expect_crash;
+            }
+        }
+    }
+
+    #[test]
+    fn health_predicates() {
+        assert!(Health::Up.can_serve() && Health::Up.routable());
+        assert!(!Health::Crashed.can_serve() && !Health::Crashed.routable());
+        assert!(Health::Brownout(0.5).can_serve() && Health::Brownout(0.5).routable());
+        assert!(Health::Partitioned.can_serve() && !Health::Partitioned.routable());
+        assert_eq!(Health::Brownout(0.25).speed_factor(), 0.25);
+        assert_eq!(Health::Partitioned.speed_factor(), 1.0);
+    }
+}

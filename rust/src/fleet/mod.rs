@@ -28,6 +28,10 @@
 //!   (own `F_n(b)` latency table, memory-capped batches, per-server
 //!   batching overrides), with one shared occupancy table per distinct
 //!   profile;
+//! * [`faults`] — injectable crash/brownout/partition schedules
+//!   ([`FaultPlan`]) with deadline-aware failover and per-request retry
+//!   budgets; an empty plan keeps the engine bitwise identical to the
+//!   fault-free path;
 //! * [`engine`] — the event-driven fleet simulator tying the above to the
 //!   paper's batch occupancy model `Σ_n F_n(b)` and radio substrate;
 //! * [`pool`] — a slot-driven pool of full
@@ -52,6 +56,7 @@ pub mod analytic;
 pub mod dispatch;
 pub mod engine;
 pub mod events;
+pub mod faults;
 pub mod pool;
 pub mod profile;
 pub mod queue;
@@ -63,6 +68,7 @@ pub use analytic::{
 };
 pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
 pub use engine::{FleetCfg, FleetEngine};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, Health};
 pub use pool::{CoordinatorPool, PoolCfg};
 pub use profile::ServerProfile;
 pub use queue::{BatchPolicy, BatchQueue};
@@ -83,6 +89,9 @@ pub struct Request {
     pub upload_s: f64,
     /// User-side transmit energy for the upload (J).
     pub tx_energy_j: f64,
+    /// Failover hops consumed so far (see [`faults`]); 0 on first
+    /// dispatch, bounded by the plan's `max_retries`.
+    pub retries: u32,
 }
 
 impl Request {

@@ -17,11 +17,13 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::coordinator::Coordinator;
+use crate::obs::trace::Tracer;
 use crate::rl::env::SchedulerAlg;
 use crate::rl::policy::OnlinePolicy;
 use crate::scenario::ArrivalProcess;
 
 use super::report::{FleetReport, ShardStats};
+use super::Request;
 
 /// Pool topology.
 #[derive(Debug, Clone)]
@@ -44,6 +46,11 @@ pub struct CoordinatorPool {
     /// Wall-clock accumulated across `run` calls, matching the cumulative
     /// metrics the report aggregates.
     wall_s: f64,
+    /// Optional lifecycle tracer (same JSONL schema as the fleet engine);
+    /// `traced_upto[i]` marks how many of shard `i`'s records were
+    /// already emitted, so repeated `run` calls never double-trace.
+    tracer: Option<Tracer>,
+    traced_upto: Vec<usize>,
 }
 
 impl CoordinatorPool {
@@ -82,7 +89,23 @@ impl CoordinatorPool {
                 Arc::clone(&tables),
             )?);
         }
-        Ok(CoordinatorPool { shards, slot_s: pool.slot_s, slots_run: 0, wall_s: 0.0 })
+        let traced_upto = vec![0; pool.shards];
+        Ok(CoordinatorPool {
+            shards,
+            slot_s: pool.slot_s,
+            slots_run: 0,
+            wall_s: 0.0,
+            tracer: None,
+            traced_upto,
+        })
+    }
+
+    /// Attach a lifecycle tracer. Pool shards are slotted and never shed,
+    /// so only `arrive` and `serve` events are emitted — one pair per
+    /// sampled completed request, reconstructed from the coordinator's
+    /// per-request records after each `run` call.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
     }
 
     pub fn shards(&self) -> &[Coordinator] {
@@ -104,6 +127,34 @@ impl CoordinatorPool {
         }
         self.slots_run += slots;
         self.wall_s += wall0.elapsed().as_secs_f64();
+        if let Some(tr) = &mut self.tracer {
+            for (i, c) in self.shards.iter().enumerate() {
+                let from = self.traced_upto[i];
+                for (k, r) in c.metrics.records.iter().enumerate().skip(from) {
+                    // Shard-local record index widened into a pool-unique
+                    // id (shard in the high bits) for consistent sampling.
+                    let id = ((i as u64) << 40) | k as u64;
+                    if !tr.sampled(id) {
+                        continue;
+                    }
+                    let t_arr = r.arrival_slot as f64 * self.slot_s;
+                    let req = Request {
+                        id,
+                        user: r.user,
+                        arrival_s: t_arr,
+                        deadline_s: r.deadline_s,
+                        upload_s: 0.0,
+                        tx_energy_j: 0.0,
+                        retries: 0,
+                    };
+                    tr.arrive(t_arr, &req, i, 0);
+                    let met = r.latency_s <= r.deadline_s + 1e-9;
+                    tr.serve(t_arr + r.latency_s, id, i, 0, 1, r.latency_s, met);
+                }
+                self.traced_upto[i] = c.metrics.records.len();
+            }
+            tr.flush();
+        }
         let stats: Vec<ShardStats> = self.shards.iter().map(shard_stats).collect();
         let horizon_s = self.slots_run as f64 * self.slot_s;
         Ok(FleetReport::from_shards(&stats, horizon_s, horizon_s, self.wall_s))
@@ -190,6 +241,28 @@ mod tests {
         assert!(rep.completed > 0);
         assert_eq!(rep.shed, 0, "slotted shards never shed");
         assert!(rep.energy_mean_j > 0.0);
+    }
+
+    #[test]
+    fn full_rate_trace_matches_coordinator_metrics() {
+        use crate::obs::trace::MemSink;
+        let mut p = pool(6, 2, 11);
+        let (sink, lines) = MemSink::new();
+        p.set_tracer(Tracer::new(1.0, Box::new(sink)));
+        let rep = p.run(200).unwrap();
+        let rep2 = p.run(100).unwrap();
+        let got = lines.lock().unwrap().clone();
+        let records: usize = p.shards().iter().map(|c| c.metrics.records.len()).sum();
+        assert_eq!(records as u64, rep2.completed);
+        assert!(rep2.completed > rep.completed, "second run added records");
+        let arrives = got.iter().filter(|l| l.contains("\"ev\":\"arrive\"")).count();
+        let serves = got.iter().filter(|l| l.contains("\"ev\":\"serve\"")).count();
+        assert_eq!(arrives, records, "one arrive per completed request");
+        assert_eq!(serves, records, "one serve per completed request");
+        assert_eq!(got.len(), 2 * records, "no other event kinds from a pool");
+        for l in &got {
+            crate::util::json::Json::parse(l).expect("trace lines are JSON");
+        }
     }
 
     #[test]

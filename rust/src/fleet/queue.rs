@@ -113,6 +113,12 @@ impl BatchQueue {
         }
         (batch, shed)
     }
+
+    /// Remove every waiting request in FIFO order — the crash-failover
+    /// path: the queue of a dead server re-enters dispatch.
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).map(|(_, req)| req).collect()
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +133,7 @@ mod tests {
             deadline_s: deadline,
             upload_s: 0.0,
             tx_energy_j: 0.0,
+            retries: 0,
         }
     }
 
@@ -178,6 +185,17 @@ mod tests {
         let (batch, shed) = q.take_batch(0.1);
         assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn drain_empties_the_queue_in_fifo_order() {
+        let mut q = BatchQueue::new(policy());
+        for i in 0..5 {
+            assert!(q.admit(req(i, 0.0, 1.0), 0.0));
+        }
+        let drained = q.drain();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -30,6 +30,14 @@ pub struct ShardStats {
     pub completed: u64,
     /// Requests dropped by admission control or deadline shedding.
     pub shed: u64,
+    /// Requests terminally lost to server failures: orphaned by a crash
+    /// and not retryable within budget/deadline ([`super::faults`]).
+    pub shed_failure: u64,
+    /// Failover hops taken from this shard (one request may retry
+    /// several times; each hop counts once, at the server it left).
+    pub retries: u64,
+    /// In-flight batches destroyed by crashes on this server.
+    pub lost_batches: u64,
     /// Completed requests that finished past their deadline.
     pub violations: u64,
     /// Batches launched.
@@ -92,6 +100,8 @@ pub struct ServerBreakdown {
     pub name: String,
     pub completed: u64,
     pub shed: u64,
+    /// Requests terminally shed by failure on this server.
+    pub shed_failure: u64,
     pub deadline_violations: u64,
     /// Mean launched batch size on this server.
     pub mean_batch: f64,
@@ -107,10 +117,18 @@ pub struct ServerBreakdown {
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub servers: usize,
-    /// Completed + shed — every request that entered the system.
+    /// Completed + shed + shed_failure — every request that entered the
+    /// system (the conservation identity the chaos tests pin).
     pub requests: u64,
     pub completed: u64,
     pub shed: u64,
+    /// Requests terminally lost to server failures ([`super::faults`]);
+    /// 0 on a fault-free run.
+    pub shed_failure: u64,
+    /// Total failover hops taken across the fleet.
+    pub retries: u64,
+    /// In-flight batches destroyed by crashes.
+    pub lost_batches: u64,
     pub deadline_violations: u64,
     /// Fleet latency percentiles (s; NaN when nothing completed).
     pub latency_p50_s: f64,
@@ -185,6 +203,7 @@ impl FleetReport {
         I: IntoIterator<Item = (&'a str, &'a ShardStats, Option<AnalyticLatency<'a>>)>,
     {
         let (mut completed, mut shed, mut violations) = (0u64, 0u64, 0u64);
+        let (mut shed_failure, mut retries, mut lost_batches) = (0u64, 0u64, 0u64);
         let (mut batches, mut batch_sum) = (0u64, 0u64);
         let mut energy = 0.0;
         let mut per_server: Vec<ServerBreakdown> = Vec::new();
@@ -195,6 +214,9 @@ impl FleetReport {
         for (name, s, law) in shards {
             completed += s.completed;
             shed += s.shed;
+            shed_failure += s.shed_failure;
+            retries += s.retries;
+            lost_batches += s.lost_batches;
             violations += s.violations;
             batches += s.batches;
             batch_sum += s.batch_size_sum;
@@ -222,6 +244,7 @@ impl FleetReport {
                 },
                 completed: s.completed,
                 shed: s.shed,
+                shed_failure: s.shed_failure,
                 deadline_violations: s.violations,
                 mean_batch: if s.batches == 0 {
                     0.0
@@ -258,9 +281,12 @@ impl FleetReport {
         };
         FleetReport {
             servers: utilization.len(),
-            requests: completed + shed,
+            requests: completed + shed + shed_failure,
             completed,
             shed,
+            shed_failure,
+            retries,
+            lost_batches,
             deadline_violations: violations,
             latency_p50_s: p50,
             latency_p95_s: p95,
@@ -282,6 +308,15 @@ impl FleetReport {
             0.0
         } else {
             self.shed as f64 / self.requests as f64
+        }
+    }
+
+    /// Fraction of offered requests terminally lost to failures.
+    pub fn failure_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed_failure as f64 / self.requests as f64
         }
     }
 
@@ -322,9 +357,10 @@ impl FleetReport {
         }
     }
 
-    /// One-line summary (bench / CLI output).
+    /// One-line summary (bench / CLI output). Failure counters append
+    /// only when any is nonzero, so fault-free lines are unchanged.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "servers={} requests={} completed={} shed={:.2}% viol={:.2}% \
              p50={} ms p95={} ms p99={} ms batch={:.2} util={:.0}% \
              energy/req={:.4} J thru={:.0} req/s wall={:.2} s",
@@ -341,7 +377,14 @@ impl FleetReport {
             self.energy_mean_j,
             self.throughput(),
             self.wall_s,
-        )
+        );
+        if self.shed_failure > 0 || self.lost_batches > 0 || self.retries > 0 {
+            line.push_str(&format!(
+                " shedF={} lost={} retries={}",
+                self.shed_failure, self.lost_batches, self.retries
+            ));
+        }
+        line
     }
 
     /// Row cells for the sweep tables (aligned with [`Self::table_header`]).
@@ -453,6 +496,29 @@ mod tests {
         assert_eq!(rep.per_server[1].shed, 1);
         assert!(close(rep.per_server[0].latency_p50_s, 0.020));
         assert!((rep.per_server[1].mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_counters_extend_conservation_and_render() {
+        let mut a = ShardStats::default();
+        a.record_completion(0.010, true, 1.0);
+        a.shed = 2;
+        a.shed_failure = 3;
+        a.retries = 5;
+        a.lost_batches = 1;
+        let b = ShardStats { shed_failure: 1, ..ShardStats::default() };
+        let rep = FleetReport::from_shards(&[a, b], 1.0, 1.0, 0.0);
+        // Extended identity: requests = completed + shed + shed_failure.
+        assert_eq!(rep.requests, 1 + 2 + 4);
+        assert_eq!(rep.shed_failure, 4);
+        assert_eq!(rep.retries, 5);
+        assert_eq!(rep.lost_batches, 1);
+        assert!((rep.failure_rate() - 4.0 / 7.0).abs() < 1e-12);
+        assert!(rep.render().contains("shedF=4 lost=1 retries=5"));
+        assert_eq!(rep.per_server[0].shed_failure, 3);
+        // A fault-free report keeps the legacy line verbatim.
+        let clean = ShardStats::default();
+        assert!(!FleetReport::from_shards(&[clean], 1.0, 1.0, 0.0).render().contains("shedF"));
     }
 
     #[test]

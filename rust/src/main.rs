@@ -21,7 +21,8 @@ use batchedge::config::SystemConfig;
 use batchedge::coordinator::Coordinator;
 use batchedge::experiments;
 use batchedge::fleet::{
-    BatchPolicy, DispatchPolicy, FleetCfg, FleetEngine, FleetReport, FluidCfg, ServerProfile,
+    BatchPolicy, DispatchPolicy, FaultPlan, FleetCfg, FleetEngine, FleetReport, FluidCfg,
+    ServerProfile,
 };
 use batchedge::obs::{FileSink, LogHistogram, Tracer};
 use batchedge::rl::env::SchedulerAlg;
@@ -262,6 +263,10 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .opt("trace-sample", Some("0.01"), "trace sampling rate in [0, 1]")
         .opt("timeline", None, "write per-shard interval rollups (JSON) here")
         .opt("timeline-dt-ms", Some("250"), "timeline interval width (ms)")
+        .opt("faults", None, "scripted faults: crash@S:T0[-T1],brown@S:T0-T1:M,part@S:T0[-T1]")
+        .opt("mtbf-s", None, "stochastic crashes: mean time between failures per server (s)")
+        .opt("mttr-s", None, "stochastic crashes: mean time to recovery (s)")
+        .opt("retries", Some("2"), "failover retry budget per request")
         .switch("skewed", "run the last quarter of servers at 0.25x speed")
         .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)")
         .switch("fluid", "fluid mode: stable shards closed-form, hot shards event-by-event");
@@ -292,6 +297,18 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     anyhow::ensure!(
         !(args.has("skewed") && args.has("hetero")),
         "--skewed and --hetero are mutually exclusive"
+    );
+    let mut faults = match args.str("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::default(),
+    };
+    faults.mtbf_s = if args.str("mtbf-s").is_some() { Some(args.f64("mtbf-s")?) } else { None };
+    faults.mttr_s = if args.str("mttr-s").is_some() { Some(args.f64("mttr-s")?) } else { None };
+    faults.max_retries = args.usize("retries")? as u32;
+    faults.validate(servers)?;
+    anyhow::ensure!(
+        faults.is_empty() || !args.has("fluid"),
+        "fault plans need the event engine; drop --fluid or the fault options"
     );
     anyhow::ensure!(
         !args.has("hetero") || servers >= 2,
@@ -327,6 +344,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             batch,
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
+            faults,
         };
         let out = experiments::fleet::run_fleet_fluid(
             &cfg,
@@ -334,7 +352,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             users,
             args.f64("rate")?,
             &FluidCfg::default(),
-        );
+        )?;
         println!("fluid: {}", out.report.render());
         println!(
             "fluid shards: {} analytic / {} event; ledger balanced: {}",
@@ -361,6 +379,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             batch,
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
+            faults: faults.clone(),
         };
         let mut engine = FleetEngine::new(&cfg, fleet, policy.build(), arrivals);
         if let Some(path) = args.str("trace") {
@@ -502,7 +521,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("{path}:{}: missing \"ev\"", i + 1))?;
             match ev {
-                "arrive" | "enqueue" | "batch" => {}
+                "arrive" | "enqueue" | "batch" | "fail" | "recover" | "retry" => {}
                 "serve" => {
                     let l = v
                         .get("latency_s")

@@ -12,9 +12,17 @@
 //! [`crate::fleet::FleetReport`] totals — the conservation property the
 //! test suite pins.
 //!
+//! Each cell also carries a [`LogHistogram`] of completion latencies and
+//! fault counters (`failures`: crash/brownout/partition transitions;
+//! `shed_failure`: requests shed on the failover path, see
+//! [`crate::fleet::faults`]). Histograms use the canonical latency
+//! buckets, so merging every interval's histogram reproduces the
+//! run-total latency distribution exactly — including its quantiles.
+//!
 //! The engine holds `Option<Timeline>`: disabled runs pay one branch per
 //! event and allocate nothing.
 
+use crate::obs::hist::LogHistogram;
 use crate::util::json::Json;
 
 /// One shard × interval cell. All counters are assigned to the interval
@@ -38,6 +46,13 @@ pub struct IntervalStats {
     pub queue_area: f64,
     /// Queue/batch operations observed (events-per-second proxy).
     pub events: u64,
+    /// Fault transitions (crash/brownout/partition) hitting this shard.
+    pub failures: u64,
+    /// Requests shed on the failover path (retry budget or deadline lost).
+    pub shed_failure: u64,
+    /// Completion latencies of requests served this interval (canonical
+    /// latency buckets, so interval merges equal the run total exactly).
+    pub latency: LogHistogram,
 }
 
 /// Per-shard fixed-interval rollups; see the module docs.
@@ -179,6 +194,26 @@ impl Timeline {
         c.events += 1;
     }
 
+    /// A fault transition (crash, brownout, or partition) hit `shard`.
+    pub fn observe_failure(&mut self, shard: usize, t: f64) {
+        let c = self.cell(shard, t);
+        c.failures += 1;
+        c.events += 1;
+    }
+
+    /// `n` requests were shed on the failover path (retry budget
+    /// exhausted or no server could still meet the deadline).
+    pub fn observe_shed_failure(&mut self, shard: usize, t: f64, n: u64) {
+        let c = self.cell(shard, t);
+        c.shed_failure += n;
+        c.events += 1;
+    }
+
+    /// One request completed at `t` with the given end-to-end latency.
+    pub fn observe_latency(&mut self, shard: usize, t: f64, latency_s: f64) {
+        self.cell(shard, t).latency.record(latency_s);
+    }
+
     /// Close the run at `span_s`: settle queue integrals on every shard.
     pub fn finish(&mut self, span_s: f64) {
         for shard in 0..self.rows.len() {
@@ -197,6 +232,19 @@ impl Timeline {
                 t.1 += c.served;
                 t.2 += c.shed;
                 t.3 += c.batches;
+            }
+        }
+        t
+    }
+
+    /// `(failures, shed_failure)` summed over all cells — the fault side
+    /// of the timeline's conservation check.
+    pub fn fault_totals(&self) -> (u64, u64) {
+        let mut t = (0u64, 0u64);
+        for row in &self.rows {
+            for c in row {
+                t.0 += c.failures;
+                t.1 += c.shed_failure;
             }
         }
         t
@@ -231,6 +279,10 @@ impl Timeline {
                             ("util", Json::Num(c.busy_s / self.dt_s)),
                             ("queue_mean", Json::Num(c.queue_area / self.dt_s)),
                             ("events_per_s", Json::Num(c.events as f64 / self.dt_s)),
+                            ("failures", Json::Num(c.failures as f64)),
+                            ("shed_failure", Json::Num(c.shed_failure as f64)),
+                            ("latency_p50_s", Json::num_or_null(c.latency.quantile(0.50))),
+                            ("latency_p95_s", Json::num_or_null(c.latency.quantile(0.95))),
                         ])
                     })
                     .collect();
@@ -301,5 +353,41 @@ mod tests {
         assert!((row[0].queue_area - 0.5).abs() < 1e-12);
         assert!((row[1].queue_area - 2.0).abs() < 1e-12);
         assert_eq!(tl.totals().0, 2);
+    }
+
+    #[test]
+    fn interval_latency_histograms_merge_to_the_run_total() {
+        let mut tl = Timeline::new(1.0, 2);
+        let mut total = LogHistogram::latency();
+        // Latencies landing in different shards and intervals.
+        for (shard, t, lat) in
+            [(0, 0.2, 0.004), (0, 1.7, 0.031), (1, 0.9, 0.0007), (1, 2.5, 0.25), (0, 2.5, 0.019)]
+        {
+            tl.observe_latency(shard, t, lat);
+            total.record(lat);
+        }
+        let mut merged = LogHistogram::latency();
+        for shard in 0..tl.shards() {
+            for c in tl.shard(shard) {
+                merged.merge(&c.latency);
+            }
+        }
+        assert_eq!(merged.count(), total.count());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q).to_bits(), total.quantile(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_total() {
+        let mut tl = Timeline::new(1.0, 2);
+        tl.observe_failure(0, 0.5);
+        tl.observe_failure(1, 1.5);
+        tl.observe_shed_failure(0, 0.6, 3);
+        tl.finish(2.0);
+        assert_eq!(tl.shard(0)[0].failures, 1);
+        assert_eq!(tl.shard(0)[0].shed_failure, 3);
+        assert_eq!(tl.shard(1)[1].failures, 1);
+        assert_eq!(tl.fault_totals(), (2, 3));
     }
 }

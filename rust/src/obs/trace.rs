@@ -16,11 +16,18 @@
 //! | `enqueue` | `t, id, shard, queued`                                          |
 //! | `batch`   | `t, shard, batch, size, queued`                                 |
 //! | `serve`   | `t, id, shard, batch, size, latency_s, deadline_met`            |
-//! | `shed`    | `t, id, shard, reason` (`"queue_full"` or `"expired"`)          |
+//! | `shed`    | `t, id, shard, reason` (`"queue_full"`, `"expired"`, `"failure"`) |
+//! | `fail`    | `t, shard, kind` (`"crash"`, `"brownout"`, `"partition"`)       |
+//! | `recover` | `t, shard`                                                      |
+//! | `retry`   | `t, id, from, to, retries`                                      |
 //!
 //! `t` is simulation seconds; `queued` is the queue depth *after* the
 //! event; `batch` is a per-shard 1-based batch sequence number, so
-//! `(shard, batch)` joins `serve` rows to their `batch` row.
+//! `(shard, batch)` joins `serve` rows to their `batch` row. `fail` and
+//! `recover` are per-*shard* fault transitions (always emitted when a
+//! tracer is attached — they are not tied to a request id); `retry` is a
+//! failover hop of request `id` from shard `from` to shard `to`, with
+//! `retries` the hop count after this one.
 //! `scripts/render_report.py --trace` validates this schema in CI.
 
 use std::fs::File;
@@ -169,10 +176,31 @@ impl Tracer {
         ));
     }
 
-    /// `reason` must be one of the schema tokens (`queue_full`, `expired`).
+    /// `reason` must be one of the schema tokens (`queue_full`,
+    /// `expired`, `failure`).
     pub fn shed(&mut self, t: f64, id: u64, shard: usize, reason: &str) {
         self.emit(format!(
             "{{\"ev\":\"shed\",\"t\":{t},\"id\":{id},\"shard\":{shard},\"reason\":\"{reason}\"}}"
+        ));
+    }
+
+    /// A fault transition degraded `shard`; `kind` must be one of the
+    /// schema tokens (`crash`, `brownout`, `partition`).
+    pub fn fail(&mut self, t: f64, shard: usize, kind: &str) {
+        self.emit(format!("{{\"ev\":\"fail\",\"t\":{t},\"shard\":{shard},\"kind\":\"{kind}\"}}"));
+    }
+
+    /// `shard` returned to full health.
+    pub fn recover(&mut self, t: f64, shard: usize) {
+        self.emit(format!("{{\"ev\":\"recover\",\"t\":{t},\"shard\":{shard}}}"));
+    }
+
+    /// Failover hop: request `id` re-dispatched from `from` to `to`;
+    /// `retries` is its hop count including this one.
+    pub fn retry(&mut self, t: f64, id: u64, from: usize, to: usize, retries: u32) {
+        self.emit(format!(
+            "{{\"ev\":\"retry\",\"t\":{t},\"id\":{id},\"from\":{from},\"to\":{to},\
+             \"retries\":{retries}}}"
         ));
     }
 }
@@ -215,5 +243,26 @@ mod tests {
         assert_eq!(v.get("id").and_then(|j| j.as_f64()), Some(7.0));
         assert_eq!(v.get("queued").and_then(|j| j.as_f64()), Some(3.0));
         assert_eq!(tr.lines(), 2);
+    }
+
+    #[test]
+    fn fault_lifecycle_events_follow_the_schema() {
+        let (sink, lines) = MemSink::new();
+        let mut tr = Tracer::new(1.0, Box::new(sink));
+        tr.fail(0.1, 3, "crash");
+        tr.retry(0.1, 42, 3, 1, 1);
+        tr.recover(0.4, 3);
+        let got = lines.lock().unwrap().clone();
+        assert_eq!(got.len(), 3);
+        let v = crate::util::json::Json::parse(&got[0]).unwrap();
+        assert_eq!(v.get("ev").and_then(|j| j.as_str()), Some("fail"));
+        assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("crash"));
+        let v = crate::util::json::Json::parse(&got[1]).unwrap();
+        assert_eq!(v.get("ev").and_then(|j| j.as_str()), Some("retry"));
+        assert_eq!(v.get("from").and_then(|j| j.as_f64()), Some(3.0));
+        assert_eq!(v.get("to").and_then(|j| j.as_f64()), Some(1.0));
+        assert_eq!(v.get("retries").and_then(|j| j.as_f64()), Some(1.0));
+        let v = crate::util::json::Json::parse(&got[2]).unwrap();
+        assert_eq!(v.get("ev").and_then(|j| j.as_str()), Some("recover"));
     }
 }

@@ -19,8 +19,8 @@ use std::sync::Arc;
 use batchedge::config::SystemConfig;
 use batchedge::experiments::fleet::serving_cfg;
 use batchedge::fleet::{
-    run_fluid, BatchPolicy, BatchQueueAnalysis, BatchQueueModel, DispatchPolicy, FleetCfg,
-    FleetEngine, FluidCfg, ServerProfile,
+    run_fluid, BatchPolicy, BatchQueueAnalysis, BatchQueueModel, DispatchPolicy, FaultPlan,
+    FleetCfg, FleetEngine, FluidCfg, ServerProfile,
 };
 use batchedge::scenario::PopulationArrivals;
 use batchedge::util::rng::Rng;
@@ -113,6 +113,7 @@ fn engine_converges_to_the_closed_form_across_randomized_configs() {
             batch,
             horizon_s: horizon,
             seed: 0xC0FE + i as u64,
+            faults: FaultPlan::default(),
         };
         let arrivals = PopulationArrivals::stationary(c.net, users, rate);
         let rep = FleetEngine::new(&cfg, fleet, c.policy.build(), arrivals).run();
@@ -181,6 +182,7 @@ fn fluid_pool(horizon_s: f64, speeds: Vec<f64>) -> (Arc<SystemConfig>, FleetCfg,
         batch: batch_policy(16),
         horizon_s,
         seed: 9,
+        faults: FaultPlan::default(),
     };
     let arrivals = PopulationArrivals::stationary("mobilenet_v2", 160_000, 0.05);
     (cfg, fleet, arrivals)
@@ -190,7 +192,7 @@ fn fluid_pool(horizon_s: f64, speeds: Vec<f64>) -> (Arc<SystemConfig>, FleetCfg,
 fn fluid_ledger_conserves_requests_at_every_horizon() {
     for horizon in [2.0, 5.0, 10.0] {
         let (cfg, fleet, arrivals) = fluid_pool(horizon, Vec::new());
-        let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+        let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default()).unwrap();
         assert_eq!(out.fluid_shards, 8, "homogeneous ρ≈0.7 pool is all-analytic");
         let mut total_arrivals = 0u64;
         for l in &out.ledger {
@@ -223,7 +225,7 @@ fn fluid_matches_the_event_engine_on_a_homogeneous_pool() {
         arrivals.clone(),
     )
     .run();
-    let fluid = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+    let fluid = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default()).unwrap();
 
     let e_p50 = rel(fluid.report.latency_p50_s, event.latency_p50_s);
     assert!(
@@ -262,7 +264,7 @@ fn hybrid_fluid_routes_hot_shards_to_the_event_engine() {
     // while the six fast shards stay analytic.
     let speeds = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.25, 0.25];
     let (cfg, fleet, arrivals) = fluid_pool(2.0, speeds.clone());
-    let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default());
+    let out = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default()).unwrap();
     assert_eq!(out.fluid_shards, 6);
     assert_eq!(out.event_shards, 2);
     for (i, l) in out.ledger.iter().enumerate() {
@@ -274,6 +276,18 @@ fn hybrid_fluid_routes_hot_shards_to_the_event_engine() {
         }
     }
     assert!(out.report.events > 0, "hybrid runs count their event-shard events");
+}
+
+#[test]
+fn fluid_mode_rejects_fault_plans() {
+    let (cfg, mut fleet, arrivals) = fluid_pool(2.0, Vec::new());
+    fleet.faults = FaultPlan {
+        mtbf_s: Some(1.0),
+        mttr_s: Some(0.25),
+        ..FaultPlan::default()
+    };
+    let err = run_fluid(&cfg, &fleet, &arrivals, &FluidCfg::default()).unwrap_err();
+    assert!(err.to_string().contains("fault"), "diagnostic names the fault plan: {err}");
 }
 
 #[test]

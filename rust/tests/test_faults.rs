@@ -1,0 +1,253 @@
+//! Chaos suite for `fleet::faults`: the zero-fault bitwise anchor, the
+//! extended conservation identity under scripted and stochastic fault
+//! plans, failover/retry accounting against full-rate traces, and the
+//! drain edges (crash at a launch epoch, recover past the horizon,
+//! all-servers-down).
+//!
+//! The anchor is the contract that lets the fault machinery live inside
+//! the hot engine: with an empty [`FaultPlan`] the engine must produce
+//! **bitwise** identical reports and traces regardless of the fault
+//! knobs, across seeds and policies.
+
+use batchedge::experiments::fleet::serving_cfg;
+use batchedge::fleet::{
+    DispatchPolicy, FaultEvent, FaultKind, FaultPlan, FleetCfg, FleetEngine, FleetReport,
+};
+use batchedge::obs::{MemSink, Tracer};
+use batchedge::scenario::PopulationArrivals;
+use batchedge::util::json::Json;
+
+/// The shared chaos workload: ~1000 req/s over 2 s of model time —
+/// heavy enough that every server is busy when a fault lands.
+fn engine_with(
+    policy: DispatchPolicy,
+    servers: usize,
+    seed: u64,
+    faults: FaultPlan,
+) -> FleetEngine {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let arrivals = PopulationArrivals::stationary("mobilenet_v2", 2000, 0.5);
+    let fleet = FleetCfg { servers, horizon_s: 2.0, seed, faults, ..FleetCfg::default() };
+    FleetEngine::new(&cfg, fleet, policy.build(), arrivals)
+}
+
+/// Every request reaches exactly one terminal state.
+fn assert_conserved(rep: &FleetReport, ctx: &str) {
+    assert_eq!(
+        rep.requests,
+        rep.completed + rep.shed + rep.shed_failure,
+        "{ctx}: conservation: {} != {} + {} + {}",
+        rep.requests,
+        rep.completed,
+        rep.shed,
+        rep.shed_failure
+    );
+}
+
+fn assert_bitwise_equal(a: &FleetReport, b: &FleetReport, ctx: &str) {
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.shed_failure, b.shed_failure, "{ctx}: shed_failure");
+    assert_eq!(a.retries, b.retries, "{ctx}: retries");
+    assert_eq!(a.lost_batches, b.lost_batches, "{ctx}: lost_batches");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.deadline_violations, b.deadline_violations, "{ctx}: violations");
+    assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits(), "{ctx}: mean_batch");
+    assert_eq!(a.latency_mean_s.to_bits(), b.latency_mean_s.to_bits(), "{ctx}: mean");
+    assert_eq!(a.latency_p50_s.to_bits(), b.latency_p50_s.to_bits(), "{ctx}: p50");
+    assert_eq!(a.latency_p95_s.to_bits(), b.latency_p95_s.to_bits(), "{ctx}: p95");
+    assert_eq!(a.latency_p99_s.to_bits(), b.latency_p99_s.to_bits(), "{ctx}: p99");
+    assert_eq!(
+        a.utilization_mean().to_bits(),
+        b.utilization_mean().to_bits(),
+        "{ctx}: utilization"
+    );
+}
+
+#[test]
+fn zero_fault_plan_is_a_bitwise_anchor_across_seeds_and_policies() {
+    // An empty plan must not perturb a single bit of the simulation, no
+    // matter how the other fault knobs are set: same reports AND the
+    // same full-rate trace, line for line.
+    for policy in [DispatchPolicy::ShortestQueue, DispatchPolicy::PowerOfTwo] {
+        for seed in 1..=8u64 {
+            let ctx = format!("{} seed {seed}", policy.name());
+            let (sink_a, lines_a) = MemSink::new();
+            let mut ea = engine_with(policy, 4, seed, FaultPlan::default());
+            ea.set_tracer(Tracer::new(1.0, Box::new(sink_a)));
+            let ra = ea.run();
+
+            let knobs = FaultPlan { max_retries: 7, ..FaultPlan::default() };
+            assert!(knobs.is_empty(), "retry budget alone schedules nothing");
+            let (sink_b, lines_b) = MemSink::new();
+            let mut eb = engine_with(policy, 4, seed, knobs);
+            eb.set_tracer(Tracer::new(1.0, Box::new(sink_b)));
+            let rb = eb.run();
+
+            assert_bitwise_equal(&ra, &rb, &ctx);
+            assert_eq!(ra.shed_failure, 0, "{ctx}: no failure path taken");
+            assert_eq!(ra.lost_batches, 0, "{ctx}");
+            assert_eq!(ra.retries, 0, "{ctx}");
+            let (la, lb) = (lines_a.lock().unwrap(), lines_b.lock().unwrap());
+            assert_eq!(*la, *lb, "{ctx}: traces diverge");
+            assert!(
+                la.iter().all(|l| !l.contains("\"ev\":\"fail\"")),
+                "{ctx}: a zero-fault run emits no fault events"
+            );
+        }
+    }
+}
+
+#[test]
+fn scripted_crash_recover_conserves_and_accounts_every_failover() {
+    // Crash server 1 mid-run, recover it 0.7 s later. The same-seed
+    // request population must be untouched (faults draw from their own
+    // RNG stream), the in-flight batch is lost, and every orphan either
+    // retries onto a live server or sheds by failure — counted exactly.
+    let baseline = engine_with(DispatchPolicy::ShortestQueue, 4, 17, FaultPlan::default()).run();
+
+    let plan = FaultPlan::parse("crash@1:0.5-1.2").unwrap();
+    let (sink, lines) = MemSink::new();
+    let mut engine = engine_with(DispatchPolicy::ShortestQueue, 4, 17, plan);
+    engine.set_tracer(Tracer::new(1.0, Box::new(sink)));
+    engine.set_timeline(0.25);
+    let rep = engine.run();
+    let tl = engine.take_timeline().expect("timeline attached");
+
+    assert_eq!(
+        rep.requests, baseline.requests,
+        "fault injection must not perturb the workload stream"
+    );
+    assert_conserved(&rep, "scripted crash");
+    assert!(rep.lost_batches >= 1, "a busy server loses its in-flight batch");
+    assert!(rep.retries > 0, "orphans with deadline headroom fail over");
+    assert!(rep.completed > 0);
+
+    // Full-rate trace agrees with the report, counter by counter.
+    let lines = lines.lock().unwrap();
+    let count = |pred: &dyn Fn(&Json) -> bool| {
+        lines.iter().filter(|l| pred(&Json::parse(l).expect("trace is JSON"))).count() as u64
+    };
+    let ev_is = |v: &Json, k: &str| v.get("ev").and_then(Json::as_str) == Some(k);
+    assert_eq!(count(&|v| ev_is(v, "arrive")), rep.requests);
+    assert_eq!(count(&|v| ev_is(v, "serve")), rep.completed);
+    assert_eq!(count(&|v| ev_is(v, "retry")), rep.retries);
+    let shed_failure = count(&|v| {
+        ev_is(v, "shed") && v.get("reason").and_then(Json::as_str) == Some("failure")
+    });
+    assert_eq!(shed_failure, rep.shed_failure);
+    let shed_admission = count(&|v| {
+        ev_is(v, "shed") && v.get("reason").and_then(Json::as_str) != Some("failure")
+    });
+    assert_eq!(shed_admission, rep.shed, "admission sheds stay a separate state");
+    assert_eq!(count(&|v| ev_is(v, "fail")), 1, "one scripted crash");
+    assert_eq!(count(&|v| ev_is(v, "recover")), 1, "one scripted recover");
+
+    // Timeline carries the same fault counters per interval.
+    let (failures, tl_shed_failure) = tl.fault_totals();
+    assert_eq!(failures, 1);
+    assert_eq!(tl_shed_failure, rep.shed_failure);
+}
+
+#[test]
+fn crash_exactly_at_a_batch_launch_epoch_stays_conserved() {
+    // Find a real launch epoch from a traced fault-free run, then script
+    // a crash at exactly that timestamp on that shard. Fault events are
+    // scheduled before the first arrival, so at an equal timestamp the
+    // crash pops first and preempts the launch — either way, no request
+    // may leak.
+    let (sink, lines) = MemSink::new();
+    let mut probe = engine_with(DispatchPolicy::ShortestQueue, 4, 29, FaultPlan::default());
+    probe.set_tracer(Tracer::new(1.0, Box::new(sink)));
+    probe.run();
+    let (t, shard) = lines
+        .lock()
+        .unwrap()
+        .iter()
+        .find_map(|l| {
+            let v = Json::parse(l).ok()?;
+            if v.get("ev").and_then(Json::as_str) != Some("batch") {
+                return None;
+            }
+            Some((v.get("t").and_then(Json::as_f64)?, v.get("shard").and_then(Json::as_f64)?))
+        })
+        .expect("a loaded run launches batches");
+
+    let plan = FaultPlan {
+        events: vec![FaultEvent { at_s: t, server: shard as usize, kind: FaultKind::Crash }],
+        ..FaultPlan::default()
+    };
+    let rep = engine_with(DispatchPolicy::ShortestQueue, 4, 29, plan).run();
+    assert_conserved(&rep, "crash at launch epoch");
+    assert!(rep.completed > 0);
+}
+
+#[test]
+fn recover_scheduled_past_the_horizon_drains_cleanly() {
+    // The crash lands mid-run, the recover never does (the server stays
+    // down through the drain). Everything must still balance and no
+    // report field may go NaN.
+    let plan = FaultPlan::parse("crash@0:1.0-10.0").unwrap();
+    let rep = engine_with(DispatchPolicy::ShortestQueue, 2, 3, plan).run();
+    assert_conserved(&rep, "recover past horizon");
+    assert!(rep.completed > 0);
+    assert!(rep.shed_failure > 0 || rep.retries > 0, "the outage was felt");
+    assert!(rep.utilization_mean().is_finite(), "no NaN utilization");
+    assert!(rep.mean_batch.is_finite());
+}
+
+#[test]
+fn all_servers_down_interval_sheds_by_failure_and_balances() {
+    // Both servers crash at 0.5 s and recover at 1.5 s: during the
+    // outage every arrival has nowhere to go and sheds by failure, yet
+    // the ledger stays exact and the fleet resumes after recovery.
+    let plan = FaultPlan::parse("crash@0:0.5-1.5,crash@1:0.5-1.5").unwrap();
+    let rep = engine_with(DispatchPolicy::ShortestQueue, 2, 41, plan).run();
+    assert_conserved(&rep, "all servers down");
+    assert!(rep.shed_failure > 0, "outage arrivals shed by failure");
+    assert!(rep.completed > 0, "pre-crash and post-recovery work completes");
+    assert!(rep.utilization_mean().is_finite());
+
+    // Single server, crash forever: the degenerate pool has no failover
+    // target, so every orphan and post-crash arrival sheds by failure.
+    let plan = FaultPlan::parse("crash@0:0.5").unwrap();
+    let rep = engine_with(DispatchPolicy::ShortestQueue, 1, 41, plan).run();
+    assert_conserved(&rep, "single server crash forever");
+    assert!(rep.completed > 0);
+    assert!(rep.shed_failure > 0);
+    assert_eq!(rep.retries, 0, "no live server means no retry ever admits");
+}
+
+#[test]
+fn stochastic_fault_schedules_are_deterministic_under_a_seed() {
+    let plan = || FaultPlan {
+        mtbf_s: Some(0.8),
+        mttr_s: Some(0.2),
+        max_retries: 2,
+        ..FaultPlan::default()
+    };
+    let mut a = engine_with(DispatchPolicy::PowerOfTwo, 4, 5, plan());
+    a.set_timeline(0.5);
+    let ra = a.run();
+    let tla = a.take_timeline().unwrap();
+    let rb = engine_with(DispatchPolicy::PowerOfTwo, 4, 5, plan()).run();
+    assert_bitwise_equal(&ra, &rb, "stochastic plan, same seed");
+    assert_conserved(&ra, "stochastic plan");
+    let (failures, _) = tla.fault_totals();
+    assert!(failures > 0, "mtbf 0.8 s over 2 s × 4 servers fires faults");
+}
+
+#[test]
+fn every_policy_survives_chaos_with_an_exact_ledger() {
+    // Brownouts, partitions and crash churn across the whole policy
+    // surface: the conservation identity is policy-independent.
+    let spec = "crash@0:0.3-0.8,brown@1:0.2-1.5:0.25,part@2:0.4-1.0,crash@3:1.1-1.6";
+    for policy in DispatchPolicy::ALL {
+        let plan = FaultPlan::parse(spec).unwrap();
+        let rep = engine_with(policy, 4, 23, plan).run();
+        assert_conserved(&rep, policy.name());
+        assert!(rep.completed > 0, "{}: work still completes under chaos", policy.name());
+        assert!(rep.utilization_mean().is_finite(), "{}", policy.name());
+    }
+}

@@ -172,6 +172,30 @@ fn timeline_intervals_conserve_the_fleet_report_totals() {
 }
 
 #[test]
+fn interval_latency_histograms_merge_to_the_report_quantiles() {
+    // Satellite of the fault PR: each timeline cell carries a latency
+    // histogram in the canonical buckets; merging every interval must
+    // reproduce the run-total distribution bitwise — count and quantiles.
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let mut engine = obs_engine(&cfg, 2.0);
+    engine.set_timeline(0.25);
+    let rep = engine.run();
+    let tl = engine.take_timeline().expect("timeline attached");
+    assert!(rep.completed > 0);
+
+    let mut merged = LogHistogram::latency();
+    for shard in 0..tl.shards() {
+        for c in tl.shard(shard) {
+            merged.merge(&c.latency);
+        }
+    }
+    assert_eq!(merged.count(), rep.completed, "every completion recorded a latency");
+    assert_eq!(merged.quantile(0.50).to_bits(), rep.latency_p50_s.to_bits());
+    assert_eq!(merged.quantile(0.95).to_bits(), rep.latency_p95_s.to_bits());
+    assert_eq!(merged.quantile(0.99).to_bits(), rep.latency_p99_s.to_bits());
+}
+
+#[test]
 fn full_rate_trace_covers_the_lifecycle_and_zero_rate_is_silent() {
     let cfg = serving_cfg("mobilenet_v2").unwrap();
     let base = obs_engine(&cfg, 1.0).run();

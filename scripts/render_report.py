@@ -36,8 +36,12 @@ TRACE_SCHEMA = {
     "batch": {"t", "shard", "batch", "size", "queued"},
     "serve": {"t", "id", "shard", "batch", "size", "latency_s", "deadline_met"},
     "shed": {"t", "id", "shard", "reason"},
+    "fail": {"t", "shard", "kind"},
+    "recover": {"t", "shard"},
+    "retry": {"t", "id", "from", "to", "retries"},
 }
-SHED_REASONS = {"queue_full", "expired"}
+SHED_REASONS = {"queue_full", "expired", "failure"}
+FAIL_KINDS = {"crash", "brownout", "partition"}
 
 
 def fmt_ns(ns):
@@ -121,13 +125,17 @@ def trace_section(path, out):
                 if reason not in SHED_REASONS:
                     sys.exit(f"{path}:{lineno}: unknown shed reason {reason!r}")
                 reasons[reason] = reasons.get(reason, 0) + 1
+            elif kind == "fail":
+                fk = ev["kind"]
+                if fk not in FAIL_KINDS:
+                    sys.exit(f"{path}:{lineno}: unknown fail kind {fk!r}")
             elif kind == "serve":
                 latencies.append(float(ev["latency_s"]))
                 met += bool(ev["deadline_met"])
     out.append("## Trace summary\n")
     out.append("| event | count |")
     out.append("|---|---:|")
-    for kind in ("arrive", "enqueue", "batch", "serve", "shed"):
+    for kind in ("arrive", "enqueue", "batch", "serve", "shed", "fail", "recover", "retry"):
         if kind in counts:
             out.append(f"| {kind} | {counts[kind]} |")
     for reason in sorted(reasons):
@@ -155,18 +163,23 @@ def timeline_section(path, out):
         doc = json.load(f)
     out.append("## Timeline\n")
     out.append(f"Interval width: {doc.get('dt_s', '?')} s.\n")
-    out.append("| shard | intervals | served | shed | peak queue | mean util |")
-    out.append("|---|---:|---:|---:|---:|---:|")
+    out.append(
+        "| shard | intervals | served | shed | shedF | faults "
+        "| peak queue | mean util |"
+    )
+    out.append("|---|---:|---:|---:|---:|---:|---:|---:|")
     for sh in doc.get("shards", []):
         ivs = sh.get("intervals", [])
         served = sum(iv.get("served", 0) for iv in ivs)
         shed = sum(iv.get("shed", 0) for iv in ivs)
+        shed_f = sum(iv.get("shed_failure", 0) for iv in ivs)
+        fails = sum(iv.get("failures", 0) for iv in ivs)
         peak_q = max((iv.get("queue_mean", 0.0) for iv in ivs), default=0.0)
         utils = [iv.get("util", 0.0) for iv in ivs]
         mean_u = sum(utils) / len(utils) if utils else 0.0
         out.append(
             f"| {sh.get('name', '?')} | {len(ivs)} | {served} | {shed} "
-            f"| {peak_q:.1f} | {mean_u:.3f} |"
+            f"| {shed_f} | {fails} | {peak_q:.1f} | {mean_u:.3f} |"
         )
     out.append("")
 
