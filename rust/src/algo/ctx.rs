@@ -57,6 +57,7 @@
 use std::sync::Arc;
 
 use crate::config::SystemConfig;
+use crate::fleet::profile::OccupancyTable;
 use crate::scenario::{Scenario, User};
 
 use super::ipssa::{self, GroupSolution};
@@ -72,8 +73,11 @@ pub struct ProfileTables {
     cfg: Arc<SystemConfig>,
     /// `f[(sub-1) * (b_cap+1) + b] = F_sub(b)`, `b = 0..=b_cap`.
     f: Vec<f64>,
-    /// `occupancy[b] = Σ_n F_n(b)` (eq. 20), `b = 0..=b_cap`.
-    occupancy: Vec<f64>,
+    /// `Σ_n F_n(b)` (eq. 20) for `b = 0..=b_cap` — the same dense
+    /// [`OccupancyTable`] the fleet layer prices through
+    /// ([`pricing::ServiceModel`](crate::fleet::pricing::ServiceModel)),
+    /// so solver and serving paths share one occupancy authority.
+    occupancy: Arc<OccupancyTable>,
     /// `prefix_t_fmax[p] = α Σ_{n≤p} F_n(1)` (eq. 22), `p = 0..=N`.
     prefix_t_fmax: Vec<f64>,
     /// `prefix_e_fmax[p] = Σ_{n≤p} e_n(f_max)` (eq. 21), `p = 0..=N`.
@@ -98,7 +102,7 @@ impl ProfileTables {
                 f.push(cfg.profile.f(sub, b));
             }
         }
-        let occupancy = (0..=b_cap).map(|b| cfg.profile.total(b)).collect();
+        let occupancy = Arc::new(OccupancyTable::new(&cfg.profile, b_cap));
         let mut prefix_t_fmax = vec![0.0; n + 1];
         let mut prefix_e_fmax = vec![0.0; n + 1];
         for p in 1..=n {
@@ -147,7 +151,7 @@ impl ProfileTables {
     #[inline]
     pub fn occupancy(&self, b: usize) -> f64 {
         debug_assert!(b <= self.b_cap, "batch {b} beyond table cap {}", self.b_cap);
-        self.occupancy[b]
+        self.occupancy.total(b)
     }
 
     /// Eq.-17 batch starts into a caller-provided buffer (alloc-free

@@ -130,6 +130,18 @@ impl LatencyProfile {
         )
     }
 
+    /// The profile as executed at a relative DVFS frequency `fr ∈ (0, 1]`:
+    /// under the linear-latency clock model every `F_n(b)` stretches by
+    /// `1/fr` — [`Self::rescaled`] with both scales at `1/fr`. The fleet
+    /// layer prices frequency without materializing rescaled profiles
+    /// ([`fleet::pricing`](crate::fleet::pricing) divides by `speed · fr`
+    /// instead); this helper is for callers that want a standalone
+    /// derated-clock profile, e.g. to tabulate or plot one ladder step.
+    pub fn at_frequency(&self, fr: f64) -> LatencyProfile {
+        assert!(fr > 0.0 && fr <= 1.0, "relative frequency must be in (0, 1]: {fr}");
+        self.rescaled(1.0 / fr, 1.0 / fr)
+    }
+
     /// Collapse to a single-sub-task profile (IP-SSA-NP view): the whole
     /// task is one batchable unit with `F(b) = Σ_n F_n(b)`.
     pub fn unpartitioned(&self, k: usize) -> LatencyProfile {
@@ -239,6 +251,20 @@ mod tests {
                 assert!((half.f(sub, b) - 0.5 * p.f(sub, b)).abs() < 1e-15);
             }
         }
+    }
+
+    #[test]
+    fn at_frequency_stretches_by_inverse_clock() {
+        let p = profile();
+        let half = p.at_frequency(0.5);
+        for sub in 1..=p.n() {
+            for b in 1..=4 {
+                assert!((half.f(sub, b) - 2.0 * p.f(sub, b)).abs() < 1e-12);
+            }
+        }
+        // f = 1.0 is the profile unchanged (up to the rescale identity).
+        let same = p.at_frequency(1.0);
+        assert!((same.total(4) - p.total(4)).abs() < 1e-15);
     }
 
     #[test]

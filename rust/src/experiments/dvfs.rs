@@ -1,0 +1,199 @@
+//! `dvfs`: the server-energy / latency Pareto frontier across frequency
+//! governors.
+//!
+//! Sweeps every [`FreqGovernor`] over a fixed DVFS ladder on two JSQ
+//! pools — homogeneous and speed-skewed — with the cubic power model on
+//! ([`fleet::pricing`](crate::fleet::pricing)), and reports the
+//! `(server energy, p95 latency)` frontier. Race-to-idle must strictly
+//! dominate fixed-f_max on energy at bitwise-equal p95: batches run at
+//! `f_max` either way, but race-to-idle gates the clock to the idle floor
+//! between batches while the fixed governor keeps paying `P_dyn·f³`. The
+//! run doubles as a perf record: wall-clock per cell lands in
+//! `BENCH_dvfs.json` for the CI bench gate.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::fleet::{BatchPolicy, DispatchPolicy, FleetCfg, FreqGovernor, FreqLadder, PowerModel};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::fleet::{run_fleet_cfg, serving_cfg, skewed_speeds};
+use super::report::Report;
+
+pub struct Params {
+    pub servers: usize,
+    pub population: usize,
+    pub rate_per_user_hz: f64,
+    pub horizon_s: f64,
+    pub seed: u64,
+    pub ladder: FreqLadder,
+    pub power: PowerModel,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            servers: 8,
+            population: 70_000,
+            rate_per_user_hz: 0.05,
+            horizon_s: 10.0,
+            seed: 0xD3F5,
+            ladder: FreqLadder::parse("0.4,0.6,0.8,1.0").expect("static ladder"),
+            // RTX3090-ish shape: ~50 W board floor, ~250 W dynamic swing.
+            power: PowerModel { idle_w: 50.0, dyn_w: 250.0 },
+        }
+    }
+}
+
+/// The governors swept per pool: the legacy baseline, two pinned steps
+/// (0.6 and 0.8 on the default ladder), and the two adaptive rules.
+const GOVERNORS: &[FreqGovernor] = &[
+    FreqGovernor::FixedMax,
+    FreqGovernor::Fixed(1),
+    FreqGovernor::Fixed(2),
+    FreqGovernor::DeadlineAware,
+    FreqGovernor::RaceToIdle,
+];
+
+pub fn run(p: &Params) -> Result<()> {
+    let mut rep = Report::new("dvfs");
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let mut bench: Vec<(String, f64)> = Vec::new();
+
+    for (pool, speeds) in
+        [("homogeneous", Vec::new()), ("skewed", skewed_speeds(p.servers))]
+    {
+        let mut t = Table::new(&format!(
+            "dvfs frontier — {pool} pool, {} servers, ladder {:?}, JSQ, {} users × {} Hz",
+            p.servers,
+            p.ladder.steps(),
+            p.population,
+            p.rate_per_user_hz
+        ))
+        .header(&["governor", "p50 ms", "p95 ms", "shed %", "srvE J", "srvE/req J", "frontier"]);
+        let mut grid = Vec::new();
+        for &gov in GOVERNORS {
+            let batch = BatchPolicy {
+                shed_expired: false,
+                max_queue: 1 << 20,
+                governor: gov,
+                ..BatchPolicy::default()
+            };
+            let fleet = FleetCfg {
+                servers: p.servers,
+                speeds: speeds.clone(),
+                batch,
+                ladder: p.ladder.clone(),
+                power: Some(p.power),
+                horizon_s: p.horizon_s,
+                seed: p.seed,
+                ..FleetCfg::default()
+            };
+            let t0 = Instant::now();
+            let r = run_fleet_cfg(
+                &cfg,
+                DispatchPolicy::ShortestQueue,
+                fleet,
+                p.population,
+                p.rate_per_user_hz,
+            );
+            bench.push((format!("{pool}/{}", gov.name()), t0.elapsed().as_secs_f64()));
+            grid.push((gov.name(), r));
+        }
+
+        // Pareto frontier over (server energy, p95 latency): a governor is
+        // on the frontier iff no other is at least as good on both axes
+        // and strictly better on one.
+        let pts: Vec<(f64, f64)> =
+            grid.iter().map(|(_, r)| (r.server_energy_j, r.latency_p95_s)).collect();
+        let dominated = |i: usize| {
+            pts.iter().enumerate().any(|(j, &(e, l))| {
+                j != i && e <= pts[i].0 && l <= pts[i].1 && (e < pts[i].0 || l < pts[i].1)
+            })
+        };
+        for (i, (name, r)) in grid.iter().enumerate() {
+            t.row(vec![
+                name.clone(),
+                format!("{:.1}", r.latency_p50_s * 1e3),
+                format!("{:.1}", r.latency_p95_s * 1e3),
+                format!("{:.2}", r.shed_rate() * 100.0),
+                format!("{:.1}", r.server_energy_j),
+                format!("{:.4}", r.server_energy_per_req_j()),
+                if dominated(i) { "" } else { "*" }.to_string(),
+            ]);
+        }
+        rep.table(&format!("frontier_{pool}"), t);
+        rep.json(
+            &format!("frontier_{pool}"),
+            Json::Obj(
+                grid.iter()
+                    .enumerate()
+                    .map(|(i, (name, r))| {
+                        (
+                            name.clone(),
+                            Json::obj(vec![
+                                ("p95_s", Json::num_or_null(r.latency_p95_s)),
+                                ("server_energy_j", Json::Num(r.server_energy_j)),
+                                ("energy_per_req_j", Json::Num(r.server_energy_per_req_j())),
+                                ("pareto", Json::Num(f64::from(u8::from(!dominated(i))))),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+
+        // The headline invariant: race-to-idle batches at f_max (latency
+        // bitwise equal to the baseline) but strictly saves idle energy.
+        let fmax = &grid[0].1;
+        let race = &grid.iter().find(|(n, _)| n == "race").expect("race in GOVERNORS").1;
+        anyhow::ensure!(
+            race.latency_p95_s.to_bits() == fmax.latency_p95_s.to_bits(),
+            "{pool}: race-to-idle must keep fixed-f_max latency bitwise"
+        );
+        anyhow::ensure!(
+            race.server_energy_j < fmax.server_energy_j,
+            "{pool}: race-to-idle must strictly beat fixed-f_max on server energy"
+        );
+        rep.text(format!(
+            "{pool}: race-to-idle dominates fixed-f_max — p95 bitwise equal at {:.1} ms, \
+             server energy {:.1} J vs {:.1} J",
+            race.latency_p95_s * 1e3,
+            race.server_energy_j,
+            fmax.server_energy_j
+        ));
+    }
+
+    save_bench(&bench)?;
+    rep.save()
+}
+
+/// Persist wall-clock timings as `BENCH_dvfs.json` at the repo root —
+/// the same schema the bench harness writes, so `scripts/check_bench.py`
+/// and `report` consume it unchanged.
+fn save_bench(records: &[(String, f64)]) -> Result<()> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_dvfs.json");
+    let results = records
+        .iter()
+        .map(|(name, secs)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("mean_ns", Json::Num(secs * 1e9)),
+                ("min_ns", Json::Num(secs * 1e9)),
+                ("reps", Json::Num(1.0)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("suite", Json::Str("dvfs".to_string())),
+        ("results", Json::Arr(results)),
+    ]);
+    json.write_file(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

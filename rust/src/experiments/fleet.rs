@@ -351,7 +351,7 @@ pub fn run_hetero(p: &HeteroParams) -> Result<()> {
                 batch,
                 horizon_s: p.horizon_s,
                 seed: p.seed,
-                faults: FaultPlan::default(),
+                ..FleetCfg::default()
             };
             let r = run_fleet_cfg(&cfg, policy, fleet, p.population, p.rate_per_user_hz);
             let mut cells = vec![policy.name().to_string()];

@@ -3,6 +3,7 @@
 //! experiment index and pass criteria.
 
 pub mod ablations;
+pub mod dvfs;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;
@@ -27,6 +28,7 @@ pub const ALL: &[&str] = &[
     "ablations",
     "fleet",
     "fleet-hetero",
+    "dvfs",
 ];
 
 /// Run an experiment by id with default (paper-scale) parameters; `quick`
@@ -101,6 +103,14 @@ pub fn run(id: &str, quick: bool) -> Result<()> {
                 p.horizon_s = 2.0;
             }
             fleet::run_hetero(&p)
+        }
+        "dvfs" => {
+            let mut p = dvfs::Params::default();
+            if quick {
+                p.population = 20_000;
+                p.horizon_s = 3.0;
+            }
+            dvfs::run(&p)
         }
         "all" => {
             for id in ALL {

@@ -6,9 +6,11 @@
 //! [`engine`](super::engine) with one shard and `max_delay_s = 0`:
 //! Poisson(λ) request arrivals, a batch cap `K = max_batch`, and
 //! deterministic batch-size-dependent service
-//! `s(b) = Σ_n F_n(b) / speed` — the paper's batch occupancy (eq. 20)
-//! priced off the server's own [`ServerProfile`](super::ServerProfile)
-//! table. Whenever the server goes idle with a non-empty queue it launches
+//! `s(b) = Σ_n F_n(b) / (speed · f)` — the paper's batch occupancy
+//! (eq. 20) priced off the server's own
+//! [`ServerProfile`](super::ServerProfile) table at the governor's DVFS
+//! ladder frequency `f` (see [`super::pricing`]; `f = 1.0` on the default
+//! single-step ladder). Whenever the server goes idle with a non-empty queue it launches
 //! `min(queue, K)` immediately. This is exactly the *dynamic batching*
 //! policy analysed by Inoue, "Queueing analysis of GPU-based inference
 //! servers with dynamic batching: a closed-form characterization"
@@ -175,8 +177,17 @@ impl BatchQueueModel {
     /// Price the model off a resolved server: `s(b)` from its own
     /// occupancy table and speed, `K` from its effective batch policy.
     pub fn from_resolved(rs: &ResolvedServer, lambda_hz: f64) -> BatchQueueModel {
+        Self::from_resolved_at(rs, lambda_hz, 1.0)
+    }
+
+    /// [`Self::from_resolved`] at a DVFS ladder frequency `fr`: every
+    /// service time is `T(b, fr) = Σ_n F_n(b) / (speed · fr)`, matching
+    /// [`pricing::ServiceModel::service_at`](super::pricing::ServiceModel)
+    /// exactly — `fr = 1.0` is bitwise the legacy pricing.
+    pub fn from_resolved_at(rs: &ResolvedServer, lambda_hz: f64, fr: f64) -> BatchQueueModel {
+        assert!(fr > 0.0, "frequency must be positive");
         let k = rs.batch.max_batch;
-        let service = (1..=k).map(|b| rs.occupancy.total(b) / rs.speed).collect();
+        let service = (1..=k).map(|b| rs.occupancy.total(b) / (rs.speed * fr)).collect();
         BatchQueueModel::new(lambda_hz, service, k)
     }
 
@@ -766,6 +777,12 @@ pub fn run_fluid(
              fault-free stationary server); drop --fluid or the fault options"
         );
     }
+    if fleet.power.is_some() {
+        bail!(
+            "fluid mode cannot account server energy (idle/busy splits need the \
+             event engine); drop --fluid or the power options"
+        );
+    }
     assert!(
         arrivals.peak_factor == 1.0,
         "fluid mode needs a stationary stream (peak_factor == 1)"
@@ -794,17 +811,26 @@ pub fn run_fluid(
     let mut atom_rng = root.fork(0xA70);
     let uploads = upload_atoms(cfg, &mut atom_rng, 128);
 
-    // Solve each distinct (occupancy, speed, K) once; shards sharing a
-    // tier share the solution, its tabulated wait distribution, and the
-    // convolved end-to-end latency law.
-    type Key = (usize, u64, usize);
+    // Solve each distinct (occupancy, speed, frequency, K) once; shards
+    // sharing a tier share the solution, its tabulated wait distribution,
+    // and the convolved end-to-end latency law. Analytic shards price at
+    // the governor's *nominal* ladder frequency (`Fixed(i)` pins a step;
+    // deadline-aware and race-to-idle governors batch at f_max, which is
+    // exact for race-to-idle latency and optimistic for deadline-aware).
+    type Key = (usize, u64, u64, usize);
+    let fr_of = |rs: &ResolvedServer| rs.batch.governor.nominal_fr(&fleet.ladder);
     let key_of = |rs: &ResolvedServer| -> Key {
-        (Arc::as_ptr(&rs.occupancy) as usize, rs.speed.to_bits(), rs.batch.max_batch)
+        (
+            Arc::as_ptr(&rs.occupancy) as usize,
+            rs.speed.to_bits(),
+            fr_of(rs).to_bits(),
+            rs.batch.max_batch,
+        )
     };
     let mut solutions: HashMap<Key, Option<Arc<FluidShardLaw>>> = HashMap::new();
     for rs in &resolved {
         solutions.entry(key_of(rs)).or_insert_with(|| {
-            let model = BatchQueueModel::from_resolved(rs, lambda_shard);
+            let model = BatchQueueModel::from_resolved_at(rs, lambda_shard, fr_of(rs));
             if model.rho() > fluid.hot_rho {
                 return None; // hot by policy — no need to solve
             }
@@ -840,6 +866,9 @@ pub fn run_fluid(
             horizon_s: fleet.horizon_s,
             seed: fleet.seed.wrapping_add(0xF1D + i as u64),
             faults: FaultPlan::default(),
+            ladder: fleet.ladder.clone(),
+            // Power was rejected above; hot shards stay energy-free.
+            power: None,
         };
         let engine = FleetEngine::new(
             cfg,
@@ -851,7 +880,7 @@ pub fn run_fluid(
         span_s = span_s.max(shard_span);
         events += shard_events;
         let (name, stats) = shards.pop().expect("one shard per hot server");
-        let model = BatchQueueModel::from_resolved(rs, lambda_shard);
+        let model = BatchQueueModel::from_resolved_at(rs, lambda_shard, fr_of(rs));
         ledger[i] = Some(ShardLedger {
             name: if name.is_empty() { format!("s{i}") } else { name.clone() },
             fluid: false,

@@ -28,7 +28,9 @@ pub struct ServerView {
     pub in_flight: usize,
     /// Absolute finish time of the in-flight batch (≤ now when idle).
     pub busy_until_s: f64,
-    /// Relative service speed (1.0 = reference profile).
+    /// Effective relative service speed (1.0 = reference profile at
+    /// f_max) — `speed · governor_fr · brownout_fr` as cached by the
+    /// engine off [`pricing::ServiceModel`](super::pricing::ServiceModel).
     pub speed: f64,
     /// Estimated seconds of queued + in-flight work, priced off this
     /// server's *own* latency profile.

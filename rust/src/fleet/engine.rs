@@ -5,8 +5,12 @@
 //! batch-capable edge servers behind a pluggable
 //! [`Dispatcher`](super::dispatch::Dispatcher). Each server runs a dynamic
 //! [`BatchQueue`](super::queue::BatchQueue) and serves a launched batch of
-//! size `b` in `Σ_n F_n(b) / speed` seconds — the paper's batch occupancy
-//! (eq. 20) evaluated on **that server's own**
+//! size `b` in `T(b, f) = Σ_n F_n(b) / (speed · f)` seconds — the paper's
+//! batch occupancy (eq. 20) priced through the unified
+//! [`ServiceModel`](super::pricing::ServiceModel) at the frequency `f` its
+//! [`FreqGovernor`](super::pricing::FreqGovernor) picks on the configured
+//! DVFS ladder (the default single-step ladder is bitwise the pre-DVFS
+//! engine) — evaluated on **that server's own**
 //! [`ServerProfile`](super::profile::ServerProfile): heterogeneous pools
 //! mix latency curves, memory caps and batching policies per server, and
 //! every load signal the dispatcher sees is priced off the profile of the
@@ -44,6 +48,7 @@ use crate::util::rng::Rng;
 use super::dispatch::{Dispatcher, ServerView};
 use super::events::{EventId, EventQueue};
 use super::faults::{FaultEvent, FaultKind, FaultPlan, Health};
+use super::pricing::{FreqGovernor, FreqLadder, PowerModel, ServiceModel};
 use super::profile::{self, ServerProfile};
 use super::queue::{BatchPolicy, BatchQueue};
 use super::report::{FleetReport, ShardStats};
@@ -72,6 +77,13 @@ pub struct FleetCfg {
     /// Fault schedule and failover retry budget ([`super::faults`]); an
     /// empty plan keeps the run bitwise identical to a fault-free one.
     pub faults: FaultPlan,
+    /// DVFS frequency ladder every server may step on
+    /// ([`super::pricing`]); the default single step `[1.0]` is the
+    /// bitwise pre-DVFS engine.
+    pub ladder: FreqLadder,
+    /// Server power model for energy accounting; `None` (default) accrues
+    /// nothing and leaves reports byte-identical to the pre-DVFS engine.
+    pub power: Option<PowerModel>,
 }
 
 impl Default for FleetCfg {
@@ -84,6 +96,8 @@ impl Default for FleetCfg {
             horizon_s: 10.0,
             seed: 1,
             faults: FaultPlan::default(),
+            ladder: FreqLadder::single(),
+            power: None,
         }
     }
 }
@@ -123,9 +137,19 @@ struct Server {
     done: Option<EventId>,
     /// Fault state ([`super::faults`]); `Up` on a fault-free run.
     health: Health,
-    /// Effective speed: `cap.speed` scaled by the brownout multiplier.
-    /// Initialized to `cap.speed` and mutated only by fault transitions,
-    /// so fault-free pricing is bitwise unchanged.
+    /// The unified pricing authority: service time and energy at any
+    /// ladder frequency ([`super::pricing`]).
+    model: ServiceModel,
+    /// Static governor frequency (the ladder step this server's governor
+    /// pins; 1.0 for `FixedMax`/`DeadlineAware`/`RaceToIdle`).
+    gov_fr: f64,
+    /// Unplanned brownout frequency factor (1.0 when healthy); a
+    /// brownout at multiplier `m` is a DVFS step to `m · gov_fr`.
+    brown_fr: f64,
+    /// Cached `model.eff_speed(gov_fr · brown_fr)` — what views divide
+    /// backlog by. Recomputed only at init and fault transitions, so
+    /// fault-free pricing is bitwise unchanged from the legacy
+    /// `cap.speed` path.
     eff_speed: f64,
     stats: ShardStats,
 }
@@ -217,16 +241,28 @@ impl FleetEngine {
         };
         let servers = profile::resolve(cfg, &profiles, fleet.batch)
             .into_iter()
-            .map(|cap| Server {
-                queue: BatchQueue::new(cap.batch),
-                busy_until: 0.0,
-                in_flight: 0,
-                timer: None,
-                done: None,
-                health: Health::Up,
-                eff_speed: cap.speed,
-                cap,
-                stats: ShardStats::default(),
+            .map(|cap| {
+                let model =
+                    ServiceModel::from_resolved(&cap, fleet.ladder.clone(), fleet.power);
+                // Per-server governor (the effective batch policy may
+                // override the fleet-shared one). At the default
+                // `FixedMax` governor `gov_fr = 1.0` and `eff_speed` is
+                // bitwise the legacy `cap.speed`.
+                let gov_fr = cap.batch.governor.nominal_fr(&model.ladder);
+                Server {
+                    queue: BatchQueue::new(cap.batch),
+                    busy_until: 0.0,
+                    in_flight: 0,
+                    timer: None,
+                    done: None,
+                    health: Health::Up,
+                    eff_speed: model.eff_speed(gov_fr),
+                    model,
+                    gov_fr,
+                    brown_fr: 1.0,
+                    cap,
+                    stats: ShardStats::default(),
+                }
             })
             .collect();
         FleetEngine {
@@ -374,6 +410,22 @@ impl FleetEngine {
         // The event clock ends at the last drain completion; utilization
         // is measured over that full span so it cannot exceed 100%.
         let span_s = self.events.now();
+        // Server-side idle energy: whatever wall time was not spent
+        // serving burns at the governor's idle draw. Fixed-frequency
+        // governors hold the clock up between batches (idle at
+        // `P(gov_fr)`); `RaceToIdle` gates the clock and pays only the
+        // static floor — that asymmetry is the energy case for racing.
+        // `power: None` (the default) accrues nothing.
+        if let Some(p) = self.fleet.power {
+            let wall = span_s.max(self.fleet.horizon_s);
+            for s in &mut self.servers {
+                let idle_w = match s.cap.batch.governor {
+                    FreqGovernor::RaceToIdle => p.idle_w,
+                    _ => p.power_w(s.gov_fr),
+                };
+                s.stats.server_idle_j += (wall - s.stats.busy_s).max(0.0) * idle_w;
+            }
+        }
         if let Some(tl) = &mut self.timeline {
             tl.finish(span_s);
         }
@@ -539,8 +591,12 @@ impl FleetEngine {
                 if self.servers[sid].health == Health::Up {
                     return;
                 }
-                self.servers[sid].health = Health::Up;
-                self.servers[sid].eff_speed = self.servers[sid].cap.speed;
+                let s = &mut self.servers[sid];
+                s.health = Health::Up;
+                // Back to the governor's nominal step; bitwise `cap.speed`
+                // at the default ladder/governor.
+                s.brown_fr = 1.0;
+                s.eff_speed = s.model.eff_speed(s.gov_fr * s.brown_fr);
                 if let Some(tr) = &mut self.tracer {
                     tr.recover(now, sid);
                 }
@@ -550,10 +606,14 @@ impl FleetEngine {
                 if !self.servers[sid].health.can_serve() {
                     return; // only Recover revives a crashed server
                 }
-                self.servers[sid].health = Health::Brownout(mult);
-                // Reprices future launches; a batch already in flight
-                // keeps its launch-time service span.
-                self.servers[sid].eff_speed = self.servers[sid].cap.speed * mult;
+                let s = &mut self.servers[sid];
+                s.health = Health::Brownout(mult);
+                // An unplanned DVFS step to `mult · gov_fr`: reprices
+                // future launches through the same [`ServiceModel`] path
+                // as a governor step (pinned by tests/test_pricing.rs); a
+                // batch already in flight keeps its launch-time span.
+                s.brown_fr = mult;
+                s.eff_speed = s.model.eff_speed(s.gov_fr * s.brown_fr);
                 if let Some(tr) = &mut self.tracer {
                     tr.fail(now, sid, "brownout");
                 }
@@ -565,8 +625,12 @@ impl FleetEngine {
                 if !self.servers[sid].health.can_serve() {
                     return;
                 }
-                self.servers[sid].health = Health::Partitioned;
-                self.servers[sid].eff_speed = self.servers[sid].cap.speed;
+                let s = &mut self.servers[sid];
+                s.health = Health::Partitioned;
+                // A partitioned server serves at full (governor) speed —
+                // it just stops receiving new work.
+                s.brown_fr = 1.0;
+                s.eff_speed = s.model.eff_speed(s.gov_fr * s.brown_fr);
                 if let Some(tr) = &mut self.tracer {
                     tr.fail(now, sid, "partition");
                 }
@@ -628,9 +692,23 @@ impl FleetEngine {
                 self.events.cancel(id);
             }
             let s = &mut self.servers[sid];
-            // Priced at the effective (possibly browned-out) speed; equal
-            // to `cap.speed` bitwise on a fault-free run.
-            let service_s = s.cap.occupancy.total(batch.len()) / s.eff_speed;
+            // Priced through the unified [`ServiceModel`]: the launch
+            // frequency is the governor's static step times the brownout
+            // factor, except `DeadlineAware` re-picks the lowest feasible
+            // ladder step for this batch's tightest deadline. At the
+            // default ladder/governor `fr = 1.0` and `service_at(b, 1.0)`
+            // is bitwise the legacy `occupancy.total(b) / eff_speed`.
+            let fr = match s.cap.batch.governor {
+                FreqGovernor::DeadlineAware => {
+                    let due = batch.iter().map(Request::due_s).fold(f64::INFINITY, f64::min);
+                    s.model.deadline_fr(batch.len(), now, due, s.brown_fr)
+                }
+                _ => s.gov_fr * s.brown_fr,
+            };
+            let service_s = s.model.service_at(batch.len(), fr);
+            if let Some(p) = s.model.power {
+                s.stats.server_busy_j += p.power_w(fr) * service_s;
+            }
             s.busy_until = now + service_s;
             s.in_flight = batch.len();
             s.stats.batches += 1;

@@ -23,9 +23,12 @@
 //!   re-dispatch path below. Uploads that land on a crashed server are
 //!   re-dispatched too. Crashed servers advertise infinite backlog and
 //!   `routable = false`, so every dispatch policy skips them.
-//! * **Brownout(m)** — thermal throttling: the server keeps serving but
-//!   its effective speed is repriced to `m · speed`, which scales the
-//!   whole `F_n(b)` latency profile (`occupancy.total(b) / eff_speed`).
+//! * **Brownout(m)** — thermal throttling, priced as an *unplanned
+//!   frequency step*: the server's brownout frequency factor becomes `m`
+//!   and every price — views, launch service times, energy — flows
+//!   through [`pricing::ServiceModel`](super::pricing::ServiceModel) at
+//!   the degraded frequency, so a brownout at `m` is indistinguishable
+//!   from a DVFS step to `m · f_max` (pinned by `tests/test_pricing.rs`).
 //!   Batches already in flight keep their launch-time pricing. Browned
 //!   servers stay routable — dispatchers see the degraded speed through
 //!   `ServerView` and price expected completion accordingly.
@@ -66,6 +69,59 @@
 
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Result};
+
+/// Distribution of the stochastic generator's repair (down) times.
+///
+/// The default stays exponential — the memoryless draw PR 8 shipped —
+/// so every existing seeded chaos schedule is bit-identical. The
+/// alternatives model maintenance realities the exponential misses:
+/// deterministic repair (a fixed reboot script) and lognormal repair
+/// (heavy-tailed human-in-the-loop recovery; σ fixed at 0.5 with μ
+/// chosen so the mean stays exactly `mttr_s`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RepairDist {
+    /// Exponential with mean `mttr_s` (the legacy draw, bitwise).
+    #[default]
+    Exp,
+    /// Every repair takes exactly `mttr_s`.
+    Det,
+    /// Lognormal with mean `mttr_s`: σ = 0.5, μ = ln(mttr) − σ²/2.
+    LogNormal,
+}
+
+impl RepairDist {
+    /// Parse the CLI spec: `exp` | `det` | `lognormal`.
+    pub fn parse(spec: &str) -> Result<RepairDist> {
+        match spec {
+            "exp" => Ok(RepairDist::Exp),
+            "det" => Ok(RepairDist::Det),
+            "lognormal" | "lognorm" => Ok(RepairDist::LogNormal),
+            other => bail!("unknown repair distribution '{other}' (exp | det | lognormal)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RepairDist::Exp => "exp",
+            RepairDist::Det => "det",
+            RepairDist::LogNormal => "lognormal",
+        }
+    }
+
+    /// One repair-time draw with mean `mttr`. `Exp` consumes exactly the
+    /// draw the legacy generator consumed, preserving the RNG stream.
+    fn draw(self, mttr: f64, r: &mut Rng) -> f64 {
+        match self {
+            RepairDist::Exp => r.exponential(1.0 / mttr),
+            RepairDist::Det => mttr,
+            RepairDist::LogNormal => {
+                let sigma = 0.5;
+                let mu = mttr.ln() - sigma * sigma / 2.0;
+                r.normal_ms(mu, sigma).exp()
+            }
+        }
+    }
+}
 
 /// What happens to a server at one fault epoch.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -135,8 +191,10 @@ pub struct FaultPlan {
     /// server, exponential up-times). Requires `mttr_s`.
     pub mtbf_s: Option<f64>,
     /// Mean time to recovery for the stochastic generator (per server,
-    /// exponential down-times). Requires `mtbf_s`.
+    /// down-times from `mttr_dist` with this mean). Requires `mtbf_s`.
     pub mttr_s: Option<f64>,
+    /// Distribution family of the stochastic down-times (`--mttr-dist`).
+    pub mttr_dist: RepairDist,
     /// Failover budget: how many re-dispatch hops one request may take
     /// before it is terminally shed-by-failure.
     pub max_retries: u32,
@@ -144,7 +202,13 @@ pub struct FaultPlan {
 
 impl Default for FaultPlan {
     fn default() -> FaultPlan {
-        FaultPlan { events: Vec::new(), mtbf_s: None, mttr_s: None, max_retries: 2 }
+        FaultPlan {
+            events: Vec::new(),
+            mtbf_s: None,
+            mttr_s: None,
+            mttr_dist: RepairDist::Exp,
+            max_retries: 2,
+        }
     }
 }
 
@@ -244,7 +308,8 @@ impl FaultPlan {
     /// Expand the plan into a concrete, time-sorted event list for one
     /// run: scripted events verbatim plus, when `mtbf_s`/`mttr_s` are
     /// set, per-server alternating crash/recover cycles with exponential
-    /// up-times (mean `mtbf_s`) and down-times (mean `mttr_s`). Each
+    /// up-times (mean `mtbf_s`) and `mttr_dist` down-times (mean
+    /// `mttr_s`). Each
     /// server forks its own RNG stream, so the timeline of server `k`
     /// is independent of the fleet size-ordering and deterministic
     /// under the engine seed. Crashes past `horizon_s` are dropped; a
@@ -261,7 +326,7 @@ impl FaultPlan {
                         break;
                     }
                     out.push(FaultEvent { at_s: t, server, kind: FaultKind::Crash });
-                    t += r.exponential(1.0 / mttr);
+                    t += self.mttr_dist.draw(mttr, &mut r);
                     out.push(FaultEvent { at_s: t, server, kind: FaultKind::Recover });
                 }
             }
@@ -365,6 +430,68 @@ mod tests {
                 expect_crash = !expect_crash;
             }
         }
+    }
+
+    #[test]
+    fn repair_dist_parse_and_draw_semantics() {
+        assert_eq!(RepairDist::parse("exp").unwrap(), RepairDist::Exp);
+        assert_eq!(RepairDist::parse("det").unwrap(), RepairDist::Det);
+        assert_eq!(RepairDist::parse("lognormal").unwrap(), RepairDist::LogNormal);
+        assert!(RepairDist::parse("weibull").is_err());
+        assert_eq!(RepairDist::default(), RepairDist::Exp);
+
+        // Det consumes no randomness and repairs in exactly mttr.
+        let mut r = Rng::seed_from(3);
+        let before = r.clone();
+        assert_eq!(RepairDist::Det.draw(0.25, &mut r), 0.25);
+        assert_eq!(r.next_u64(), before.clone().next_u64(), "det must not draw");
+
+        // Lognormal(μ = ln m − σ²/2, σ = 0.5) keeps mean m.
+        let mut r = Rng::seed_from(5);
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|_| RepairDist::LogNormal.draw(0.5, &mut r)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "lognormal mean {mean}");
+
+        // Exp is the legacy draw, bitwise.
+        let mut a = Rng::seed_from(9);
+        let mut b = Rng::seed_from(9);
+        assert_eq!(
+            RepairDist::Exp.draw(0.3, &mut a).to_bits(),
+            b.exponential(1.0 / 0.3).to_bits()
+        );
+    }
+
+    #[test]
+    fn mttr_dist_exp_keeps_legacy_schedules_bitwise() {
+        let mk = |dist| FaultPlan {
+            mtbf_s: Some(0.5),
+            mttr_s: Some(0.2),
+            mttr_dist: dist,
+            ..FaultPlan::default()
+        };
+        let exp = mk(RepairDist::Exp).materialize(4, 5.0, &mut Rng::seed_from(42));
+        let default = mk(RepairDist::default()).materialize(4, 5.0, &mut Rng::seed_from(42));
+        assert_eq!(exp, default, "default dist is the legacy exponential");
+
+        // Det: every down window is exactly mttr wide.
+        let det = mk(RepairDist::Det).materialize(4, 5.0, &mut Rng::seed_from(42));
+        for sid in 0..4 {
+            let evs: Vec<&FaultEvent> = det.iter().filter(|e| e.server == sid).collect();
+            for pair in evs.chunks(2) {
+                if let [crash, recover] = pair {
+                    assert_eq!(crash.kind, FaultKind::Crash);
+                    assert_eq!(recover.kind, FaultKind::Recover);
+                    assert!((recover.at_s - crash.at_s - 0.2).abs() < 1e-12);
+                }
+            }
+        }
+
+        // Lognormal: deterministic under a seed, different from exp.
+        let ln_a = mk(RepairDist::LogNormal).materialize(4, 5.0, &mut Rng::seed_from(42));
+        let ln_b = mk(RepairDist::LogNormal).materialize(4, 5.0, &mut Rng::seed_from(42));
+        assert_eq!(ln_a, ln_b);
+        assert_ne!(ln_a, exp);
     }
 
     #[test]

@@ -28,10 +28,16 @@
 //!   (own `F_n(b)` latency table, memory-capped batches, per-server
 //!   batching overrides), with one shared occupancy table per distinct
 //!   profile;
+//! * [`pricing`] — the unified service-time/server-energy model
+//!   ([`ServiceModel`]: `T(b, f)` and `P(f)` on a discrete DVFS
+//!   [`FreqLadder`] with a [`FreqGovernor`] knob); every layer that used
+//!   to divide by a speed scalar prices through it, and the default
+//!   single-frequency ladder is bitwise the pre-DVFS engine;
 //! * [`faults`] — injectable crash/brownout/partition schedules
 //!   ([`FaultPlan`]) with deadline-aware failover and per-request retry
 //!   budgets; an empty plan keeps the engine bitwise identical to the
-//!   fault-free path;
+//!   fault-free path; brownouts are priced as unplanned frequency steps
+//!   through [`ServiceModel`];
 //! * [`engine`] — the event-driven fleet simulator tying the above to the
 //!   paper's batch occupancy model `Σ_n F_n(b)` and radio substrate;
 //! * [`pool`] — a slot-driven pool of full
@@ -58,6 +64,7 @@ pub mod engine;
 pub mod events;
 pub mod faults;
 pub mod pool;
+pub mod pricing;
 pub mod profile;
 pub mod queue;
 pub mod report;
@@ -68,8 +75,9 @@ pub use analytic::{
 };
 pub use dispatch::{DispatchPolicy, Dispatcher, ServerView};
 pub use engine::{FleetCfg, FleetEngine};
-pub use faults::{FaultEvent, FaultKind, FaultPlan, Health};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, Health, RepairDist};
 pub use pool::{CoordinatorPool, PoolCfg};
+pub use pricing::{FreqGovernor, FreqLadder, PowerModel, ServiceModel};
 pub use profile::ServerProfile;
 pub use queue::{BatchPolicy, BatchQueue};
 pub use report::{FleetReport, ServerBreakdown, ShardStats};

@@ -1,0 +1,364 @@
+//! Unified latency/energy pricing for batched servers — service time and
+//! server-side energy of batch `b` on server `S` at frequency `f`.
+//!
+//! Before this module the question "how fast does server S run batch b"
+//! was re-derived ad hoc in five layers (`fleet::profile`'s speed scalar,
+//! `fleet::dispatch`'s expected-completion views, `fleet::analytic`'s
+//! embedded-chain service times, `algo::ctx::ProfileTables`, and
+//! `fleet::faults`' brownout multiplier). [`ServiceModel`] owns it once,
+//! backed by the same dense [`OccupancyTable`] (`Σ_n F_n(b)`, eq. 20)
+//! every layer already shares.
+//!
+//! # Service-time model
+//!
+//! A server of nominal speed `s` running at relative frequency
+//! `f ∈ (0, 1]` serves batch `b` in
+//!
+//! ```text
+//!     T(b, f) = Σ_n F_n(b) / (s · f)
+//! ```
+//!
+//! i.e. the DVFS ladder rescales the whole `F_n(b)` table by `1/f` —
+//! inference on a frequency-scaled accelerator is dominated by compute
+//! whose cycle count is frequency-invariant, so latency scales inversely
+//! with clock (the linear-latency DVFS model of the joint
+//! offloading+batching+DVFS sequel, arXiv:2504.14611). At `f = 1` the
+//! expression reduces **bitwise** to the legacy `Σ F_n(b) / speed`
+//! (IEEE-754: `x * 1.0 == x` exactly for every finite `x`), which is
+//! what makes the single-frequency ladder a bit-identical anchor.
+//!
+//! # Power model
+//!
+//! CMOS dynamic power scales with `V²·f`, and on the DVFS ladder voltage
+//! tracks frequency, giving the classic cubic law plus a frequency-
+//! independent idle floor (leakage + uncore):
+//!
+//! ```text
+//!     P(f) = P_idle + P_dyn · f³
+//! ```
+//!
+//! Serving batch `b` at frequency `f` therefore costs
+//! `E(b, f) = P(f) · T(b, f) ∝ P_idle/f + P_dyn·f²` per unit work: the
+//! energy-optimal frequency is interior, which is exactly why a ladder
+//! (not just f_max) is worth sweeping. Power accounting is `Option`al —
+//! with [`ServiceModel::power`] unset no energy is accrued and reports
+//! are byte-identical to the pre-DVFS engine.
+//!
+//! # Ladder + governor semantics
+//!
+//! A [`FreqLadder`] is a small ascending set of relative frequencies with
+//! `f_max = 1.0` as its top step (the nominal speed *is* the top of the
+//! ladder). A [`FreqGovernor`] decides which step a server runs:
+//!
+//! * [`FixedMax`](FreqGovernor::FixedMax) — always `f_max`; the legacy
+//!   engine, and the bitwise default.
+//! * [`Fixed(i)`](FreqGovernor::Fixed) — pin ladder step `i` for the
+//!   whole run (dispatch views price the lower speed honestly).
+//! * [`DeadlineAware`](FreqGovernor::DeadlineAware) — per batch launch,
+//!   pick the *lowest* step that still meets the tightest absolute
+//!   deadline in the batch; fall back to `f_max` when none does.
+//! * [`RaceToIdle`](FreqGovernor::RaceToIdle) — run batches at `f_max`
+//!   (latency bitwise equal to `FixedMax`) but gate the clock between
+//!   batches, so idle time costs only `P_idle`. Fixed governors hold the
+//!   clock (and its `P_dyn·f³`) up while idle — that modeling choice is
+//!   what race-to-idle exists to beat.
+//!
+//! Brownout faults are priced as an **unplanned frequency step**: a
+//! brownout at multiplier `m` multiplies the governor frequency, so a
+//! browned-out server at `m` is indistinguishable — in views, launch
+//! pricing, and traces — from a DVFS step to `m·f_max`
+//! (`tests/test_pricing.rs` pins the equivalence).
+
+use std::sync::Arc;
+
+use super::profile::{OccupancyTable, ResolvedServer};
+
+/// Discrete DVFS ladder: ascending relative frequencies in `(0, 1]`,
+/// top step exactly `1.0` (= the server's nominal speed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreqLadder {
+    steps: Vec<f64>,
+}
+
+impl Default for FreqLadder {
+    fn default() -> Self {
+        FreqLadder::single()
+    }
+}
+
+impl FreqLadder {
+    /// The one-step ladder `[1.0]` — the bitwise pre-DVFS engine.
+    pub fn single() -> FreqLadder {
+        FreqLadder { steps: vec![1.0] }
+    }
+
+    /// Ladder from explicit steps; validates shape.
+    pub fn new(steps: Vec<f64>) -> Result<FreqLadder, String> {
+        if steps.is_empty() {
+            return Err("frequency ladder must have at least one step".into());
+        }
+        for w in steps.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("ladder steps must ascend strictly: {steps:?}"));
+            }
+        }
+        if steps.iter().any(|&f| !(f > 0.0 && f <= 1.0)) {
+            return Err(format!("ladder steps must lie in (0, 1]: {steps:?}"));
+        }
+        if *steps.last().unwrap() != 1.0 {
+            return Err(format!("ladder must top out at 1.0 (nominal speed): {steps:?}"));
+        }
+        Ok(FreqLadder { steps })
+    }
+
+    /// Parse a comma-separated spec, e.g. `"0.4,0.6,0.8,1.0"`.
+    pub fn parse(spec: &str) -> Result<FreqLadder, String> {
+        let steps: Result<Vec<f64>, _> = spec
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(|e| format!("ladder step {s:?}: {e}")))
+            .collect();
+        FreqLadder::new(steps?)
+    }
+
+    pub fn steps(&self) -> &[f64] {
+        &self.steps
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // validated non-empty at construction
+    }
+
+    /// Step `i`, clamped to the top of the ladder.
+    pub fn step(&self, i: usize) -> f64 {
+        self.steps[i.min(self.steps.len() - 1)]
+    }
+}
+
+/// Cubic-with-idle-floor server power: `P(f) = idle_w + dyn_w · f³`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    /// Frequency-independent floor (leakage, uncore, fans) in watts.
+    pub idle_w: f64,
+    /// Dynamic power at `f = f_max` in watts.
+    pub dyn_w: f64,
+}
+
+impl PowerModel {
+    /// Active power at relative frequency `fr`.
+    #[inline]
+    pub fn power_w(&self, fr: f64) -> f64 {
+        self.idle_w + self.dyn_w * fr * fr * fr
+    }
+}
+
+/// Per-server frequency governor (rides [`BatchPolicy`]).
+///
+/// [`BatchPolicy`]: super::queue::BatchPolicy
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FreqGovernor {
+    /// Always `f_max` — the legacy engine, bitwise.
+    #[default]
+    FixedMax,
+    /// Pin ladder step `i` (clamped to the ladder) for the whole run.
+    Fixed(usize),
+    /// Per launch, the lowest step meeting the batch's tightest deadline.
+    DeadlineAware,
+    /// Batches at `f_max`, clock gated to the idle floor between batches.
+    RaceToIdle,
+}
+
+impl FreqGovernor {
+    /// Parse a CLI spec: `fixed-max`, `fixed:<step>`, `deadline`, `race`.
+    pub fn parse(spec: &str) -> Result<FreqGovernor, String> {
+        match spec {
+            "fixed-max" | "fmax" => Ok(FreqGovernor::FixedMax),
+            "deadline" => Ok(FreqGovernor::DeadlineAware),
+            "race" | "race-to-idle" => Ok(FreqGovernor::RaceToIdle),
+            _ => match spec.strip_prefix("fixed:") {
+                Some(i) => i
+                    .parse::<usize>()
+                    .map(FreqGovernor::Fixed)
+                    .map_err(|e| format!("governor step {i:?}: {e}")),
+                None => Err(format!(
+                    "unknown governor {spec:?} (fixed-max | fixed:<step> | deadline | race)"
+                )),
+            },
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            FreqGovernor::FixedMax => "fixed-max".into(),
+            FreqGovernor::Fixed(i) => format!("fixed:{i}"),
+            FreqGovernor::DeadlineAware => "deadline".into(),
+            FreqGovernor::RaceToIdle => "race".into(),
+        }
+    }
+
+    /// The governor's *static* ladder step: what a server runs when no
+    /// per-launch decision applies (dispatch views, the analytic oracle).
+    /// `DeadlineAware` and `RaceToIdle` are nominally at `f_max`.
+    pub fn nominal_fr(&self, ladder: &FreqLadder) -> f64 {
+        match self {
+            FreqGovernor::Fixed(i) => ladder.step(*i),
+            _ => 1.0,
+        }
+    }
+}
+
+/// Service time and server-side energy of batch `b` at frequency `f` on
+/// one server — the single pricing authority every layer consults.
+#[derive(Debug, Clone)]
+pub struct ServiceModel {
+    /// Shared per-tier `Σ_n F_n(b)` table.
+    pub occupancy: Arc<OccupancyTable>,
+    /// Nominal (f_max) speed scalar on top of the curve.
+    pub speed: f64,
+    /// Discrete frequency steps this server may run.
+    pub ladder: FreqLadder,
+    /// Power accounting; `None` disables all energy bookkeeping.
+    pub power: Option<PowerModel>,
+}
+
+impl ServiceModel {
+    /// Model for a resolved server under the fleet's ladder/power config.
+    pub fn from_resolved(
+        rs: &ResolvedServer,
+        ladder: FreqLadder,
+        power: Option<PowerModel>,
+    ) -> ServiceModel {
+        ServiceModel { occupancy: Arc::clone(&rs.occupancy), speed: rs.speed, ladder, power }
+    }
+
+    /// `T(b, f) = Σ_n F_n(b) / (speed · f)`. At `fr = 1.0` this is
+    /// bitwise the legacy `occupancy.total(b) / speed`.
+    #[inline]
+    pub fn service_at(&self, b: usize, fr: f64) -> f64 {
+        self.occupancy.total(b) / (self.speed * fr)
+    }
+
+    /// Effective speed at relative frequency `fr` — what dispatch views
+    /// divide backlog estimates by.
+    #[inline]
+    pub fn eff_speed(&self, fr: f64) -> f64 {
+        self.speed * fr
+    }
+
+    /// Busy energy of serving batch `b` at `fr`: `P(fr) · T(b, fr)`.
+    /// Zero when power accounting is off.
+    #[inline]
+    pub fn busy_energy_j(&self, b: usize, fr: f64) -> f64 {
+        match self.power {
+            Some(p) => p.power_w(fr) * self.service_at(b, fr),
+            None => 0.0,
+        }
+    }
+
+    /// The lowest ladder step (scaled by `brown_fr`, the unplanned
+    /// brownout frequency step) whose service time for batch `b` meets
+    /// the absolute deadline `due_s` from `now_s`; `f_max` when none
+    /// does. This is the [`FreqGovernor::DeadlineAware`] launch rule.
+    pub fn deadline_fr(&self, b: usize, now_s: f64, due_s: f64, brown_fr: f64) -> f64 {
+        for &step in &self.ladder.steps {
+            let fr = step * brown_fr;
+            if now_s + self.service_at(b, fr) <= due_s + 1e-12 {
+                return fr;
+            }
+        }
+        self.ladder.steps[self.ladder.steps.len() - 1] * brown_fr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::fleet::profile::resolve;
+    use crate::fleet::queue::BatchPolicy;
+    use crate::fleet::ServerProfile;
+
+    fn model(ladder: FreqLadder, power: Option<PowerModel>) -> ServiceModel {
+        let cfg = SystemConfig::mobilenet_default();
+        let rs = resolve(&cfg, &[ServerProfile::default()], BatchPolicy::default());
+        ServiceModel::from_resolved(&rs[0], ladder, power)
+    }
+
+    #[test]
+    fn unit_frequency_is_bitwise_legacy_division() {
+        let m = model(FreqLadder::single(), None);
+        for b in 1..=16 {
+            let legacy = m.occupancy.total(b) / m.speed;
+            assert_eq!(m.service_at(b, 1.0).to_bits(), legacy.to_bits(), "b={b}");
+        }
+        assert_eq!(m.eff_speed(1.0).to_bits(), m.speed.to_bits());
+    }
+
+    #[test]
+    fn ladder_validation_rejects_malformed_specs() {
+        assert!(FreqLadder::parse("0.4,0.6,0.8,1.0").is_ok());
+        assert!(FreqLadder::parse("1.0").is_ok());
+        assert!(FreqLadder::parse("").is_err());
+        assert!(FreqLadder::parse("0.8,0.4,1.0").is_err(), "must ascend");
+        assert!(FreqLadder::parse("0.4,0.8").is_err(), "must top at 1.0");
+        assert!(FreqLadder::parse("0.0,1.0").is_err(), "steps in (0,1]");
+        assert!(FreqLadder::parse("0.4,1.5").is_err());
+    }
+
+    #[test]
+    fn service_time_and_power_are_ladder_monotone() {
+        let ladder = FreqLadder::parse("0.4,0.6,0.8,1.0").unwrap();
+        let p = PowerModel { idle_w: 50.0, dyn_w: 250.0 };
+        let m = model(ladder.clone(), Some(p));
+        for b in 1..=16 {
+            for w in ladder.steps().windows(2) {
+                assert!(
+                    m.service_at(b, w[1]) <= m.service_at(b, w[0]),
+                    "higher frequency must not serve slower (b={b})"
+                );
+                assert!(p.power_w(w[1]) >= p.power_w(w[0]), "power must not drop with f");
+            }
+        }
+    }
+
+    #[test]
+    fn governor_parse_round_trips() {
+        for spec in ["fixed-max", "fixed:2", "deadline", "race"] {
+            let g = FreqGovernor::parse(spec).unwrap();
+            assert_eq!(FreqGovernor::parse(&g.name()).unwrap(), g);
+        }
+        assert!(FreqGovernor::parse("turbo").is_err());
+        assert_eq!(FreqGovernor::default(), FreqGovernor::FixedMax);
+    }
+
+    #[test]
+    fn deadline_fr_picks_lowest_feasible_step() {
+        let ladder = FreqLadder::parse("0.25,0.5,1.0").unwrap();
+        let m = model(ladder, None);
+        let t_max = m.service_at(8, 1.0);
+        // Loose deadline: the slowest step (4× t_max) fits.
+        assert_eq!(m.deadline_fr(8, 0.0, 5.0 * t_max, 1.0), 0.25);
+        // Only f_max fits.
+        assert_eq!(m.deadline_fr(8, 0.0, 1.5 * t_max, 1.0), 1.0);
+        // Nothing fits: fall back to f_max anyway.
+        assert_eq!(m.deadline_fr(8, 0.0, 0.5 * t_max, 1.0), 1.0);
+        // Brownout scales every candidate step: at 9·t_max the bottom
+        // step fits only because 0.25 · 0.5 = 0.125 needs 8·t_max.
+        assert_eq!(m.deadline_fr(8, 0.0, 9.0 * t_max, 0.5), 0.125);
+        // At 5·t_max the scaled bottom step (8·t_max) no longer fits.
+        assert_eq!(m.deadline_fr(8, 0.0, 5.0 * t_max, 0.5), 0.25);
+    }
+
+    #[test]
+    fn busy_energy_follows_cubic_power_times_service() {
+        let p = PowerModel { idle_w: 40.0, dyn_w: 200.0 };
+        let m = model(FreqLadder::parse("0.5,1.0").unwrap(), Some(p));
+        let want = (40.0 + 200.0 * 0.125) * m.service_at(4, 0.5);
+        assert_eq!(m.busy_energy_j(4, 0.5).to_bits(), want.to_bits());
+        let off = model(FreqLadder::single(), None);
+        assert_eq!(off.busy_energy_j(4, 1.0), 0.0);
+    }
+}

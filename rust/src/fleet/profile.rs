@@ -20,6 +20,12 @@
 //! [`algo::ctx::ProfileTables`](crate::algo::ProfileTables): one table per
 //! *distinct* profile, shared across every shard of that tier, never
 //! rebuilt per server.
+//!
+//! `speed` stays a field here for configuration ergonomics, but every
+//! *use* of it — view pricing, launch pricing, brownout degradation —
+//! flows through [`pricing::ServiceModel`](super::pricing::ServiceModel),
+//! which wraps the shared table with the DVFS frequency ladder and the
+//! server power model. No other layer divides by `speed` directly.
 
 use std::sync::Arc;
 
@@ -111,7 +117,11 @@ pub struct OccupancyTable {
 }
 
 impl OccupancyTable {
-    fn new(profile: &LatencyProfile, b_cap: usize) -> OccupancyTable {
+    /// Dense fold of `Σ_n F_n(b)` for `b ∈ [0, b_cap]`. Crate-visible so
+    /// [`algo::ctx::ProfileTables`](crate::algo::ProfileTables) and
+    /// [`pricing::ServiceModel`](super::pricing::ServiceModel) share the
+    /// exact same table instead of re-deriving it.
+    pub(crate) fn new(profile: &LatencyProfile, b_cap: usize) -> OccupancyTable {
         OccupancyTable { total: (0..=b_cap).map(|b| profile.total(b)).collect() }
     }
 

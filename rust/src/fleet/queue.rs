@@ -12,6 +12,7 @@
 
 use std::collections::VecDeque;
 
+use super::pricing::FreqGovernor;
 use super::Request;
 
 /// Dynamic batching / admission parameters for one server queue.
@@ -26,11 +27,21 @@ pub struct BatchPolicy {
     pub max_queue: usize,
     /// Drop requests whose absolute deadline passed before launch.
     pub shed_expired: bool,
+    /// DVFS frequency governor the server runs its ladder under (see
+    /// [`pricing`](super::pricing)); `FixedMax` is the bitwise legacy
+    /// engine.
+    pub governor: FreqGovernor,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 16, max_delay_s: 0.010, max_queue: 1024, shed_expired: true }
+        BatchPolicy {
+            max_batch: 16,
+            max_delay_s: 0.010,
+            max_queue: 1024,
+            shed_expired: true,
+            governor: FreqGovernor::FixedMax,
+        }
     }
 }
 
@@ -138,7 +149,13 @@ mod tests {
     }
 
     fn policy() -> BatchPolicy {
-        BatchPolicy { max_batch: 4, max_delay_s: 0.01, max_queue: 6, shed_expired: true }
+        BatchPolicy {
+            max_batch: 4,
+            max_delay_s: 0.01,
+            max_queue: 6,
+            shed_expired: true,
+            ..BatchPolicy::default()
+        }
     }
 
     #[test]

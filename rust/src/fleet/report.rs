@@ -48,6 +48,14 @@ pub struct ShardStats {
     pub busy_s: f64,
     /// User-side energy of completed requests (J).
     pub energy_j: f64,
+    /// Server-side energy spent serving batches (J) — accrued at launch
+    /// as `P(f) · T(b, f)` off the [`pricing`](super::pricing) power
+    /// model; 0 when the run carries no power model.
+    pub server_busy_j: f64,
+    /// Server-side energy burnt idling between batches (J) — the
+    /// governor's idle draw over the non-busy wall time; 0 without a
+    /// power model.
+    pub server_idle_j: f64,
     /// End-to-end latency law of completed requests (log-bucketed;
     /// O(buckets) memory independent of request count).
     pub latency: LogHistogram,
@@ -139,6 +147,10 @@ pub struct FleetReport {
     pub latency_mean_s: f64,
     /// Mean user-side energy per completed request (J).
     pub energy_mean_j: f64,
+    /// Total server-side energy across the fleet (busy + idle, J); 0.0
+    /// when the run carried no [`PowerModel`](super::pricing::PowerModel),
+    /// keeping pre-DVFS reports byte-identical.
+    pub server_energy_j: f64,
     /// Mean launched batch size.
     pub mean_batch: f64,
     /// Per-server busy fraction over the horizon.
@@ -206,6 +218,7 @@ impl FleetReport {
         let (mut shed_failure, mut retries, mut lost_batches) = (0u64, 0u64, 0u64);
         let (mut batches, mut batch_sum) = (0u64, 0u64);
         let mut energy = 0.0;
+        let mut server_energy = 0.0;
         let mut per_server: Vec<ServerBreakdown> = Vec::new();
         let mut merged = LogHistogram::latency();
         // (weight, law CDF, weighted mean contribution) of analytic shards.
@@ -221,6 +234,7 @@ impl FleetReport {
             batches += s.batches;
             batch_sum += s.batch_size_sum;
             energy += s.energy_j;
+            server_energy += s.server_busy_j + s.server_idle_j;
             let util = s.utilization(span_s.max(horizon_s));
             let (own_p50, own_p95) = match &law {
                 Some(a) if s.latency.is_empty() && s.completed > 0 => {
@@ -293,6 +307,7 @@ impl FleetReport {
             latency_p99_s: p99,
             latency_mean_s,
             energy_mean_j: if completed == 0 { 0.0 } else { energy / completed as f64 },
+            server_energy_j: server_energy,
             mean_batch: if batches == 0 { 0.0 } else { batch_sum as f64 / batches as f64 },
             utilization,
             per_server,
@@ -384,7 +399,25 @@ impl FleetReport {
                 self.shed_failure, self.lost_batches, self.retries
             ));
         }
+        if self.server_energy_j > 0.0 {
+            // Power-modelled runs only; pre-DVFS lines stay verbatim.
+            line.push_str(&format!(
+                " srvE={:.1} J srvE/req={:.4} J",
+                self.server_energy_j,
+                self.server_energy_per_req_j()
+            ));
+        }
         line
+    }
+
+    /// Server-side energy per completed request (J); 0 when nothing
+    /// completed or no power model was attached.
+    pub fn server_energy_per_req_j(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.server_energy_j / self.completed as f64
+        }
     }
 
     /// Row cells for the sweep tables (aligned with [`Self::table_header`]).
@@ -519,6 +552,24 @@ mod tests {
         // A fault-free report keeps the legacy line verbatim.
         let clean = ShardStats::default();
         assert!(!FleetReport::from_shards(&[clean], 1.0, 1.0, 0.0).render().contains("shedF"));
+    }
+
+    #[test]
+    fn server_energy_sums_busy_and_idle_and_renders_conditionally() {
+        let mut a = ShardStats::default();
+        a.record_completion(0.010, true, 1.0);
+        a.server_busy_j = 30.0;
+        a.server_idle_j = 20.0;
+        let b = ShardStats { server_idle_j: 50.0, ..ShardStats::default() };
+        let rep = FleetReport::from_shards(&[a, b], 1.0, 1.0, 0.0);
+        assert!((rep.server_energy_j - 100.0).abs() < 1e-12);
+        assert!((rep.server_energy_per_req_j() - 100.0).abs() < 1e-12);
+        assert!(rep.render().contains("srvE=100.0 J"));
+        // Without a power model nothing accrues and the line is legacy.
+        let clean = ShardStats::default();
+        let rep = FleetReport::from_shards(&[clean], 1.0, 1.0, 0.0);
+        assert_eq!(rep.server_energy_j, 0.0);
+        assert!(!rep.render().contains("srvE"));
     }
 
     #[test]

@@ -22,7 +22,7 @@ use batchedge::coordinator::Coordinator;
 use batchedge::experiments;
 use batchedge::fleet::{
     BatchPolicy, DispatchPolicy, FaultPlan, FleetCfg, FleetEngine, FleetReport, FluidCfg,
-    ServerProfile,
+    FreqGovernor, FreqLadder, PowerModel, RepairDist, ServerProfile,
 };
 use batchedge::obs::{FileSink, LogHistogram, Tracer};
 use batchedge::rl::env::SchedulerAlg;
@@ -266,7 +266,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         .opt("faults", None, "scripted faults: crash@S:T0[-T1],brown@S:T0-T1:M,part@S:T0[-T1]")
         .opt("mtbf-s", None, "stochastic crashes: mean time between failures per server (s)")
         .opt("mttr-s", None, "stochastic crashes: mean time to recovery (s)")
+        .opt("mttr-dist", Some("exp"), "repair-time distribution: exp|det|lognormal")
         .opt("retries", Some("2"), "failover retry budget per request")
+        .opt("ladder", None, "DVFS ladder: ascending steps ending at 1.0, e.g. 0.5,0.75,1.0")
+        .opt("governor", Some("fixed-max"), "frequency governor: fixed-max|fixed:<i>|deadline|race")
+        .opt("idle-w", None, "server power model: idle floor (W); needs --dyn-w")
+        .opt("dyn-w", None, "server power model: dynamic draw at f_max (W); needs --idle-w")
         .switch("skewed", "run the last quarter of servers at 0.25x speed")
         .switch("hetero", "tiered GPU pool (1x fast profile + memory-capped slow)")
         .switch("fluid", "fluid mode: stable shards closed-form, hot shards event-by-event");
@@ -304,6 +309,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     };
     faults.mtbf_s = if args.str("mtbf-s").is_some() { Some(args.f64("mtbf-s")?) } else { None };
     faults.mttr_s = if args.str("mttr-s").is_some() { Some(args.f64("mttr-s")?) } else { None };
+    faults.mttr_dist = RepairDist::parse(args.str("mttr-dist").unwrap())?;
     faults.max_retries = args.usize("retries")? as u32;
     faults.validate(servers)?;
     anyhow::ensure!(
@@ -324,9 +330,28 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     } else {
         Vec::new()
     };
+    let ladder = match args.str("ladder") {
+        Some(spec) => FreqLadder::parse(spec).map_err(|e| anyhow!("--ladder: {e}"))?,
+        None => FreqLadder::single(),
+    };
+    let governor = FreqGovernor::parse(args.str("governor").unwrap())
+        .map_err(|e| anyhow!("--governor: {e}"))?;
+    let power = match (args.str("idle-w").is_some(), args.str("dyn-w").is_some()) {
+        (false, false) => None,
+        (true, true) => {
+            let p = PowerModel { idle_w: args.f64("idle-w")?, dyn_w: args.f64("dyn-w")? };
+            anyhow::ensure!(
+                p.idle_w >= 0.0 && p.dyn_w >= 0.0,
+                "--idle-w/--dyn-w must be non-negative"
+            );
+            Some(p)
+        }
+        _ => bail!("--idle-w and --dyn-w define the power model together; pass both or neither"),
+    };
     let batch = BatchPolicy {
         max_batch: args.usize("max-batch")?,
         max_delay_s: args.f64("max-delay-ms")? * 1e-3,
+        governor,
         ..BatchPolicy::default()
     };
     let mut t = FleetReport::table(&format!(
@@ -342,6 +367,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             speeds,
             profiles,
             batch,
+            ladder,
+            power,
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
             faults,
@@ -377,6 +404,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             speeds: speeds.clone(),
             profiles: profiles.clone(),
             batch,
+            ladder: ladder.clone(),
+            power,
             horizon_s: args.f64("horizon")?,
             seed: args.u64("seed")?,
             faults: faults.clone(),
@@ -440,6 +469,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         "render bench / trace / timeline artifacts into one markdown report",
     )
     .opt("dir", Some("."), "directory holding BENCH_*.json and BENCH_history.jsonl")
+    .opt("diff", None, "compare two BENCH_history.jsonl revisions: REV_A,REV_B (prefix match)")
     .opt("trace", None, "request-lifecycle JSONL from `fleet --trace`")
     .opt("timeline", None, "per-shard timeline JSON from `fleet --timeline`")
     .opt("out", Some("REPORT.md"), "output markdown path");
@@ -502,6 +532,13 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         for (suite, (n, ts, rev)) in &per {
             let _ = writeln!(md, "| {suite} | {n} | {ts} | {rev} |");
         }
+    }
+
+    // ---- history diff ----------------------------------------------------
+    if let Some(spec) = args.str("diff") {
+        let (rev_a, rev_b) =
+            spec.split_once(',').ok_or_else(|| anyhow!("--diff wants REV_A,REV_B"))?;
+        md.push_str(&diff_section(&hist_path, rev_a.trim(), rev_b.trim())?);
     }
 
     // ---- request-lifecycle trace ----------------------------------------
@@ -602,6 +639,93 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `report --diff REV_A,REV_B`: per-suite benchmark deltas between the
+/// latest `BENCH_history.jsonl` entries of two revisions (prefix match on
+/// the recorded `rev`; later history lines for the same suite win). The
+/// Δ column is `min B / min A − 1`; anything past ±10% is flagged.
+fn diff_section(hist_path: &std::path::Path, rev_a: &str, rev_b: &str) -> Result<String> {
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::fmt::Write as _;
+    anyhow::ensure!(!rev_a.is_empty() && !rev_b.is_empty(), "--diff wants REV_A,REV_B");
+    let text = std::fs::read_to_string(hist_path)
+        .map_err(|e| anyhow!("reading {}: {e}", hist_path.display()))?;
+    // suite -> (benchmark -> min_ns), latest matching history line per rev.
+    let mut a: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    let mut b: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    let mut hits = (0usize, 0usize);
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+        let v = Json::parse(line)
+            .map_err(|e| anyhow!("{}:{}: {e}", hist_path.display(), i + 1))?;
+        let rev = v.get("rev").and_then(Json::as_str).unwrap_or("");
+        let into = if rev.starts_with(rev_a) {
+            hits.0 += 1;
+            &mut a
+        } else if rev.starts_with(rev_b) {
+            hits.1 += 1;
+            &mut b
+        } else {
+            continue;
+        };
+        let suite = v.get("suite").and_then(Json::as_str).unwrap_or("?").to_string();
+        let mut mins = BTreeMap::new();
+        for r in v.get("results").and_then(Json::as_arr).unwrap_or_default() {
+            if let (Some(name), Some(min)) = (
+                r.get("name").and_then(Json::as_str),
+                r.get("min_ns").and_then(Json::as_f64),
+            ) {
+                mins.insert(name.to_string(), min);
+            }
+        }
+        into.insert(suite, mins);
+    }
+    anyhow::ensure!(hits.0 > 0, "--diff: no history entries match rev {rev_a:?}");
+    anyhow::ensure!(hits.1 > 0, "--diff: no history entries match rev {rev_b:?}");
+    let mut md = format!("\n## Bench diff: {rev_a} → {rev_b}\n");
+    let suites: BTreeSet<&String> = a.keys().chain(b.keys()).collect();
+    for suite in suites {
+        let ea = a.get(suite);
+        let eb = b.get(suite);
+        let _ = writeln!(md, "\n### {suite}\n");
+        md.push_str("| benchmark | min A | min B | Δ | |\n|---|---:|---:|---:|---|\n");
+        let mut names: BTreeSet<&String> = BTreeSet::new();
+        if let Some(m) = ea {
+            names.extend(m.keys());
+        }
+        if let Some(m) = eb {
+            names.extend(m.keys());
+        }
+        for name in names {
+            match (ea.and_then(|m| m.get(name)), eb.and_then(|m| m.get(name))) {
+                (Some(&x), Some(&y)) => {
+                    let ratio = y / x;
+                    let flag = if ratio > 1.10 {
+                        "**regression**"
+                    } else if ratio < 0.90 {
+                        "improved"
+                    } else {
+                        ""
+                    };
+                    let _ = writeln!(
+                        md,
+                        "| {name} | {} | {} | {:+.1}% | {flag} |",
+                        fmt_ns(x),
+                        fmt_ns(y),
+                        (ratio - 1.0) * 100.0
+                    );
+                }
+                (Some(&x), None) => {
+                    let _ = writeln!(md, "| {name} | {} | — | | dropped |", fmt_ns(x));
+                }
+                (None, Some(&y)) => {
+                    let _ = writeln!(md, "| {name} | — | {} | | new |", fmt_ns(y));
+                }
+                (None, None) => {}
+            }
+        }
+    }
+    Ok(md)
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let cli = Cli::new("batchedge train", "train a DDPG agent")
         .opt("net", Some("mobilenet_v2"), "workload net")
@@ -642,7 +766,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cli = Cli::new("batchedge experiment", "regenerate a paper table/figure")
-        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|fleet|fleet-hetero|all")
+        .positional("id", "fig3|fig5|fig6|fig7|table3|fig8|table5|fleet|fleet-hetero|dvfs|all")
         .switch("quick", "smoke-scale parameters");
     let args = cli.parse(argv)?;
     let id = args.positional.first().map(String::as_str).unwrap_or("all");

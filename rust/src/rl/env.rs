@@ -134,7 +134,10 @@ pub struct OnlineEnv {
     e_fmax: f64,
     /// Shared solve context: profile/device tables built once per episode
     /// — or handed in by a fleet pool so same-config shards share one —
-    /// and reused by every scheduler call (`algo::ctx`).
+    /// and reused by every scheduler call (`algo::ctx`). Its occupancy
+    /// column is the same dense [`OccupancyTable`]
+    /// (`fleet::profile::OccupancyTable`) the serving layers price
+    /// through, so solver and fleet agree bit-for-bit on `Σ_n F_n(b)`.
     tables: Arc<ProfileTables>,
 }
 

@@ -113,7 +113,7 @@ fn engine_converges_to_the_closed_form_across_randomized_configs() {
             batch,
             horizon_s: horizon,
             seed: 0xC0FE + i as u64,
-            faults: FaultPlan::default(),
+            ..FleetCfg::default()
         };
         let arrivals = PopulationArrivals::stationary(c.net, users, rate);
         let rep = FleetEngine::new(&cfg, fleet, c.policy.build(), arrivals).run();
@@ -182,7 +182,7 @@ fn fluid_pool(horizon_s: f64, speeds: Vec<f64>) -> (Arc<SystemConfig>, FleetCfg,
         batch: batch_policy(16),
         horizon_s,
         seed: 9,
-        faults: FaultPlan::default(),
+        ..FleetCfg::default()
     };
     let arrivals = PopulationArrivals::stationary("mobilenet_v2", 160_000, 0.05);
     (cfg, fleet, arrivals)

@@ -331,6 +331,7 @@ fn launch_window_of_expired_requests_sheds_and_terminates() {
         max_delay_s: 0.05,
         max_queue: 2048,
         shed_expired: true,
+        ..BatchPolicy::default()
     };
     let fleet = FleetCfg { servers: 1, batch, horizon_s: 1.0, seed: 17, ..FleetCfg::default() };
     let rep =

@@ -1,0 +1,236 @@
+//! Regression suite for `fleet::pricing`: the single-frequency bitwise
+//! anchor, power-accounting neutrality, the brownout ≡ DVFS-step
+//! equivalence, governor behaviour under load, and the repair-time
+//! distribution knob at engine level.
+//!
+//! The anchor is the contract that lets the DVFS machinery live inside
+//! the hot engine: under the default fixed-max governor — whatever the
+//! ladder holds — reports and full-rate traces must be **bitwise**
+//! identical to the pre-DVFS engine, across seeds and policies.
+
+use batchedge::experiments::fleet::serving_cfg;
+use batchedge::fleet::{
+    BatchPolicy, DispatchPolicy, FaultPlan, FleetCfg, FleetEngine, FleetReport, FreqGovernor,
+    FreqLadder, PowerModel, RepairDist,
+};
+use batchedge::obs::{MemSink, Tracer};
+use batchedge::scenario::PopulationArrivals;
+
+/// The shared workload: ~1000 req/s over 2 s of model time on 4 servers.
+fn engine(policy: DispatchPolicy, fleet: FleetCfg) -> FleetEngine {
+    let cfg = serving_cfg("mobilenet_v2").unwrap();
+    let arrivals = PopulationArrivals::stationary("mobilenet_v2", 2000, 0.5);
+    FleetEngine::new(&cfg, fleet, policy.build(), arrivals)
+}
+
+fn base_cfg(seed: u64) -> FleetCfg {
+    FleetCfg { servers: 4, horizon_s: 2.0, seed, ..FleetCfg::default() }
+}
+
+fn assert_bitwise_equal(a: &FleetReport, b: &FleetReport, ctx: &str) {
+    assert_eq!(a.requests, b.requests, "{ctx}: requests");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.shed_failure, b.shed_failure, "{ctx}: shed_failure");
+    assert_eq!(a.retries, b.retries, "{ctx}: retries");
+    assert_eq!(a.lost_batches, b.lost_batches, "{ctx}: lost_batches");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+    assert_eq!(a.deadline_violations, b.deadline_violations, "{ctx}: violations");
+    assert_eq!(a.mean_batch.to_bits(), b.mean_batch.to_bits(), "{ctx}: mean_batch");
+    assert_eq!(a.latency_mean_s.to_bits(), b.latency_mean_s.to_bits(), "{ctx}: mean");
+    assert_eq!(a.latency_p50_s.to_bits(), b.latency_p50_s.to_bits(), "{ctx}: p50");
+    assert_eq!(a.latency_p95_s.to_bits(), b.latency_p95_s.to_bits(), "{ctx}: p95");
+    assert_eq!(a.latency_p99_s.to_bits(), b.latency_p99_s.to_bits(), "{ctx}: p99");
+    assert_eq!(
+        a.utilization_mean().to_bits(),
+        b.utilization_mean().to_bits(),
+        "{ctx}: utilization"
+    );
+}
+
+#[test]
+fn fixed_max_governor_is_a_bitwise_anchor_across_seeds_and_policies() {
+    // A multi-step ladder under the default fixed-max governor never
+    // leaves f_max, so the default-config run and the laddered run must
+    // agree bit for bit: same reports AND the same full-rate trace,
+    // line for line.
+    for policy in [DispatchPolicy::ShortestQueue, DispatchPolicy::PowerOfTwo] {
+        for seed in 1..=8u64 {
+            let ctx = format!("{} seed {seed}", policy.name());
+            let (sink_a, lines_a) = MemSink::new();
+            let mut ea = engine(policy, base_cfg(seed));
+            ea.set_tracer(Tracer::new(1.0, Box::new(sink_a)));
+            let ra = ea.run();
+
+            let laddered = FleetCfg {
+                ladder: FreqLadder::parse("0.25,0.5,1.0").unwrap(),
+                ..base_cfg(seed)
+            };
+            let (sink_b, lines_b) = MemSink::new();
+            let mut eb = engine(policy, laddered);
+            eb.set_tracer(Tracer::new(1.0, Box::new(sink_b)));
+            let rb = eb.run();
+
+            assert_bitwise_equal(&ra, &rb, &ctx);
+            assert_eq!(ra.server_energy_j, 0.0, "{ctx}: no power model, no energy");
+            assert_eq!(rb.server_energy_j, 0.0, "{ctx}");
+            let (la, lb) = (lines_a.lock().unwrap(), lines_b.lock().unwrap());
+            assert_eq!(*la, *lb, "{ctx}: traces diverge");
+        }
+    }
+}
+
+#[test]
+fn power_accounting_never_perturbs_latency_bits() {
+    // Turning the power model on adds energy columns and nothing else:
+    // every latency, counter and utilization bit stays put.
+    for seed in [3u64, 7] {
+        let ctx = format!("power on, seed {seed}");
+        let ra = engine(DispatchPolicy::ShortestQueue, base_cfg(seed)).run();
+        let powered = FleetCfg {
+            power: Some(PowerModel { idle_w: 50.0, dyn_w: 250.0 }),
+            ..base_cfg(seed)
+        };
+        let rb = engine(DispatchPolicy::ShortestQueue, powered).run();
+        assert_bitwise_equal(&ra, &rb, &ctx);
+        assert_eq!(ra.server_energy_j, 0.0, "{ctx}");
+        assert!(rb.server_energy_j > 0.0, "{ctx}: power model accrues energy");
+        assert!(rb.server_energy_per_req_j() > 0.0, "{ctx}");
+    }
+}
+
+#[test]
+fn brownout_is_bitwise_a_dvfs_step_to_m_times_fmax() {
+    // A brownout at multiplier m must be indistinguishable, in launch
+    // pricing and dispatch views, from a DVFS step pinned at m·f_max.
+    // Run A browns out every server at 0.5 for the whole run; run B pins
+    // ladder step 0.5. The brownout run pops extra fault bookkeeping
+    // events and its span covers the scripted recover, so the event
+    // count and utilization are not comparable — the serving maths must
+    // agree bitwise.
+    let seed = 11;
+    let brown = FaultPlan::parse(
+        "brown@0:0.0-9.0:0.5,brown@1:0.0-9.0:0.5,brown@2:0.0-9.0:0.5,brown@3:0.0-9.0:0.5",
+    )
+    .unwrap();
+    let ra = engine(
+        DispatchPolicy::ShortestQueue,
+        FleetCfg { faults: brown, ..base_cfg(seed) },
+    )
+    .run();
+
+    let rb = engine(
+        DispatchPolicy::ShortestQueue,
+        FleetCfg {
+            ladder: FreqLadder::parse("0.5,1.0").unwrap(),
+            batch: BatchPolicy { governor: FreqGovernor::Fixed(0), ..BatchPolicy::default() },
+            ..base_cfg(seed)
+        },
+    )
+    .run();
+
+    assert_eq!(ra.requests, rb.requests, "same workload stream");
+    assert_eq!(ra.completed, rb.completed);
+    assert_eq!(ra.shed, rb.shed);
+    assert_eq!(ra.shed_failure, rb.shed_failure);
+    assert_eq!(ra.retries, rb.retries);
+    assert_eq!(ra.deadline_violations, rb.deadline_violations);
+    assert_eq!(ra.mean_batch.to_bits(), rb.mean_batch.to_bits(), "mean batch");
+    assert_eq!(ra.latency_mean_s.to_bits(), rb.latency_mean_s.to_bits(), "mean");
+    assert_eq!(ra.latency_p50_s.to_bits(), rb.latency_p50_s.to_bits(), "p50");
+    assert_eq!(ra.latency_p95_s.to_bits(), rb.latency_p95_s.to_bits(), "p95");
+    assert_eq!(ra.latency_p99_s.to_bits(), rb.latency_p99_s.to_bits(), "p99");
+    assert!(ra.completed > 0, "the derated fleet still serves");
+}
+
+#[test]
+fn race_to_idle_beats_fixed_fmax_on_energy_at_equal_latency_bits() {
+    // Race-to-idle batches at f_max — bitwise the fixed-max latency —
+    // but gates the clock to the idle floor between batches, so its
+    // server energy is strictly lower whenever any idle time exists.
+    let power = Some(PowerModel { idle_w: 40.0, dyn_w: 200.0 });
+    let ladder = FreqLadder::parse("0.5,1.0").unwrap();
+    let fmax = engine(
+        DispatchPolicy::ShortestQueue,
+        FleetCfg { ladder: ladder.clone(), power, ..base_cfg(5) },
+    )
+    .run();
+    let race = engine(
+        DispatchPolicy::ShortestQueue,
+        FleetCfg {
+            ladder,
+            power,
+            batch: BatchPolicy { governor: FreqGovernor::RaceToIdle, ..BatchPolicy::default() },
+            ..base_cfg(5)
+        },
+    )
+    .run();
+    assert_bitwise_equal(&fmax, &race, "race vs fixed-max");
+    assert!(race.server_energy_j > 0.0);
+    assert!(
+        race.server_energy_j < fmax.server_energy_j,
+        "idle clock gating must save energy: race {} J vs fixed-max {} J",
+        race.server_energy_j,
+        fmax.server_energy_j
+    );
+}
+
+#[test]
+fn deadline_governor_conserves_and_stays_deterministic() {
+    // The deadline-aware governor re-picks a step per launch; whatever
+    // it picks, the request ledger stays exact and the run reproduces
+    // bitwise under the same seed.
+    let mk = || FleetCfg {
+        ladder: FreqLadder::parse("0.4,0.6,0.8,1.0").unwrap(),
+        power: Some(PowerModel { idle_w: 50.0, dyn_w: 250.0 }),
+        batch: BatchPolicy { governor: FreqGovernor::DeadlineAware, ..BatchPolicy::default() },
+        ..base_cfg(9)
+    };
+    let ra = engine(DispatchPolicy::ShortestQueue, mk()).run();
+    let rb = engine(DispatchPolicy::ShortestQueue, mk()).run();
+    assert_bitwise_equal(&ra, &rb, "deadline governor, same seed");
+    assert_eq!(
+        ra.requests,
+        ra.completed + ra.shed + ra.shed_failure,
+        "conservation under deadline governor"
+    );
+    assert!(ra.completed > 0);
+    assert!(ra.server_energy_j > 0.0);
+    assert_eq!(ra.server_energy_j.to_bits(), rb.server_energy_j.to_bits(), "energy bits");
+}
+
+#[test]
+fn repair_distributions_are_deterministic_and_conserve() {
+    // Each `--mttr-dist` family yields a reproducible engine run under a
+    // fixed seed and keeps the request ledger exact; `exp` is the parse
+    // default (the legacy draw — its schedule-level bitwise identity is
+    // pinned in `fleet::faults`' own tests).
+    for dist in [RepairDist::Exp, RepairDist::Det, RepairDist::LogNormal] {
+        let mk = || FaultPlan {
+            mtbf_s: Some(0.8),
+            mttr_s: Some(0.2),
+            mttr_dist: dist,
+            max_retries: 2,
+            ..FaultPlan::default()
+        };
+        let ctx = format!("{dist:?}");
+        let ra = engine(
+            DispatchPolicy::PowerOfTwo,
+            FleetCfg { faults: mk(), ..base_cfg(5) },
+        )
+        .run();
+        let rb = engine(
+            DispatchPolicy::PowerOfTwo,
+            FleetCfg { faults: mk(), ..base_cfg(5) },
+        )
+        .run();
+        assert_bitwise_equal(&ra, &rb, &ctx);
+        assert_eq!(
+            ra.requests,
+            ra.completed + ra.shed + ra.shed_failure,
+            "{ctx}: conservation"
+        );
+        assert!(ra.completed > 0, "{ctx}");
+    }
+    assert_eq!(RepairDist::parse("exp").unwrap(), RepairDist::default());
+}

@@ -19,7 +19,7 @@ document):
 
 Usage:
     render_report.py [--dir .] [--trace trace.jsonl]
-        [--timeline timeline.json] [--out REPORT.md]
+        [--timeline timeline.json] [--diff REV_A REV_B] [--out REPORT.md]
 """
 
 import argparse
@@ -97,6 +97,58 @@ def history_section(dirpath, out):
         s = per_suite[suite]
         out.append(f"| {suite} | {s['n']} | {s['ts']} | {s['rev']} |")
     out.append("")
+
+
+def diff_section(dirpath, rev_a, rev_b, out):
+    """Mirror of `batchedge report --diff REV_A,REV_B`: per-suite deltas
+    between the latest BENCH_history.jsonl entries of two revisions
+    (prefix match on `rev`; later lines for the same suite win)."""
+    path = os.path.join(dirpath, "BENCH_history.jsonl")
+    if not os.path.exists(path):
+        sys.exit(f"--diff: no {path}")
+    sides = {rev_a: {}, rev_b: {}}
+    hits = {rev_a: 0, rev_b: 0}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            rev = rec.get("rev", "")
+            for want in (rev_a, rev_b):
+                if rev.startswith(want):
+                    hits[want] += 1
+                    sides[want][rec["suite"]] = {
+                        r["name"]: r["min_ns"] for r in rec.get("results", [])
+                    }
+                    break
+    for want in (rev_a, rev_b):
+        if not hits[want]:
+            sys.exit(f"--diff: no history entries match rev {want!r}")
+    a, b = sides[rev_a], sides[rev_b]
+    out.append(f"## Bench diff: {rev_a} → {rev_b}\n")
+    for suite in sorted(set(a) | set(b)):
+        out.append(f"### {suite}\n")
+        out.append("| benchmark | min A | min B | Δ | |")
+        out.append("|---|---:|---:|---:|---|")
+        ma, mb = a.get(suite, {}), b.get(suite, {})
+        for name in sorted(set(ma) | set(mb)):
+            if name in ma and name in mb:
+                ratio = mb[name] / ma[name]
+                flag = (
+                    "**regression**"
+                    if ratio > 1.10
+                    else "improved" if ratio < 0.90 else ""
+                )
+                out.append(
+                    f"| {name} | {fmt_ns(ma[name])} | {fmt_ns(mb[name])} "
+                    f"| {(ratio - 1) * 100:+.1f}% | {flag} |"
+                )
+            elif name in ma:
+                out.append(f"| {name} | {fmt_ns(ma[name])} | — | | dropped |")
+            else:
+                out.append(f"| {name} | — | {fmt_ns(mb[name])} | | new |")
+        out.append("")
 
 
 def trace_section(path, out):
@@ -189,12 +241,20 @@ def main():
     ap.add_argument("--dir", default=".", help="where BENCH_*.json live")
     ap.add_argument("--trace", help="trace JSONL to validate and summarize")
     ap.add_argument("--timeline", help="timeline JSON to summarize")
+    ap.add_argument(
+        "--diff",
+        nargs=2,
+        metavar=("REV_A", "REV_B"),
+        help="compare the latest BENCH_history.jsonl entries of two revs",
+    )
     ap.add_argument("--out", default="REPORT.md", help="markdown output path")
     args = ap.parse_args()
 
     out = ["# batchedge run report\n"]
     bench_section(args.dir, out)
     history_section(args.dir, out)
+    if args.diff:
+        diff_section(args.dir, args.diff[0], args.diff[1], out)
     if args.trace:
         trace_section(args.trace, out)
     if args.timeline:
